@@ -1,0 +1,319 @@
+"""Trip-count-aware cost analysis of post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE — but this
+framework scans over layers (and over KV blocks), so the body runs L times.
+This module parses the HLO text, builds the computation call graph (fusion
+calls, while bodies with their ``known_trip_count`` backend config,
+conditionals), and walks it from ENTRY accumulating:
+
+  * flops               dot ops: 2 * prod(result dims) * prod(contracted)
+  * hbm bytes           top-level op operand+result bytes via the def-use
+                        map (fusion internals add flops only — a fusion
+                        reads its operands and writes its result once)
+  * collective bytes    result-shape bytes by collective kind
+
+Everything is PER DEVICE (the input is the partitioned module text).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "token": 0}
+
+_SHAPE_RE = re.compile(
+    r"\b(f64|s64|u64|c64|f32|s32|u32|bf16|f16|s16|u16|s8|u8|pred|token)"
+    r"\[([0-9,]*)\]")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_RESULT = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_OPCODE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "iota",
+               # control ops: data movement is accounted by the ops inside
+               # their bodies / consuming their elements
+               "while", "conditional", "call", "optimization-barrier"}
+
+
+def _dims_of(seg: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(seg)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _bytes_of(sig: str) -> int:
+    """Total bytes of ALL shape literals in a signature segment (tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Comp:
+    def __init__(self, name: str, header: str):
+        self.name = name
+        self.header = header
+        self.lines: List[str] = []
+        self.is_fusion_body = False
+
+
+def _split(text: str) -> Tuple[Dict[str, Comp], Optional[str]]:
+    comps: Dict[str, Comp] = {}
+    cur: Optional[Comp] = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        m = _COMP_HDR.match(line)
+        if m and line.endswith("{"):
+            cur = Comp(m.group(2), m.group(3))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is not None and line:
+            cur.lines.append(line)
+    return comps, entry
+
+
+def analyze(text: str, top_k: int = 0) -> Dict[str, float]:
+    """top_k > 0: also return 'top_bytes'/'top_flops' contributor lists."""
+    comps, entry = _split(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation")
+
+    # ---- pass 1: def-use map (name -> result-signature bytes / dims) -------
+    defs_bytes: Dict[str, int] = {}
+    defs_dims: Dict[str, List[int]] = {}
+    for comp in comps.values():
+        # parameters declared in the header: "p: f32[..], q: (f32[..],..)"
+        for pm in re.finditer(r"([\w\.\-]+)\s*:\s*", comp.header):
+            pass  # shapes resolved from 'parameter' result lines below
+        for line in comp.lines:
+            m = _RESULT.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            head = rhs.split("(", 1)[0] if "(" in rhs else rhs
+            defs_bytes[name] = _bytes_of(head)
+            dd = _dims_of(head)
+            if dd:
+                defs_dims[name] = dd[1]
+
+    # ---- pass 1b: fusion-body per-parameter read sizes ----------------------
+    # a fused dynamic-slice (scan-over-layers weight access) reads only the
+    # slice, not the whole stacked [L, ...] operand — resolve per parameter.
+    fusion_param_reads: Dict[str, Dict[int, int]] = {}
+    for comp in comps.values():
+        preads: Dict[int, int] = {}
+        pnames: Dict[str, int] = {}
+        for line in comp.lines:
+            m = _RESULT.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            pm = re.search(r"parameter\((\d+)\)", rhs)
+            if pm:
+                pnames[name] = int(pm.group(1))
+                preads[int(pm.group(1))] = _bytes_of(rhs.split("(", 1)[0])
+        for pname, pidx in pnames.items():
+            consumers = []
+            for line in comp.lines:
+                m = _RESULT.match(line)
+                if not m or m.group(1) == pname:
+                    continue
+                if re.search(r"%" + re.escape(pname) + r"\b", m.group(2)):
+                    opm = _OPCODE.search(m.group(2))
+                    consumers.append(
+                        (opm.group(1) if opm else "",
+                         _bytes_of(m.group(2).split("(", 1)[0])))
+            if consumers and all(op == "dynamic-slice" for op, _ in consumers):
+                preads[pidx] = sum(bb for _, bb in consumers)
+        fusion_param_reads[comp.name] = preads
+
+    # ---- pass 2: per-computation costs + call edges -------------------------
+    flops: Dict[str, float] = {}
+    bts: Dict[str, float] = {}
+    coll: Dict[str, Dict[str, float]] = {}
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+
+    bmin: Dict[str, float] = {}
+
+    contrib: Dict[str, List] = {}
+
+    for comp in comps.values():
+        f = b = b_min = 0.0
+        c = {k: 0.0 for k in _COLL_KINDS}
+        ed: List[Tuple[str, float]] = []
+        items: List = []
+        for line in comp.lines:
+            m = _RESULT.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            paren = rhs.find("(")
+            head = rhs[:paren] if paren >= 0 else rhs
+            opm = _OPCODE.search(rhs)
+            op = opm.group(1) if opm else ""
+            args_seg = rhs[paren:rhs.find(")") + 1] if paren >= 0 else ""
+            operand_names = _OPERANDS.findall(args_seg)
+
+            if op == "dot":
+                out = _dims_of(head)
+                mc = _LHS_CONTRACT.search(rhs)
+                k = 1
+                if mc and operand_names:
+                    lhs_dims = defs_dims.get(operand_names[0], [])
+                    for idx in mc.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            k *= lhs_dims[int(idx)]
+                n_out = 1
+                if out:
+                    for d in out[1]:
+                        n_out *= d
+                f += 2.0 * n_out * k
+
+            for kind in _COLL_KINDS:
+                if op == kind or op == kind + "-start":
+                    cb = _bytes_of(head)
+                    # XLA CPU float-normalization promotes bf16 collectives
+                    # to f32 ("to_apply=%add...promoted"); on the TPU target
+                    # the payload is bf16 — count the true width.
+                    if "promoted" in rhs and "f32[" in head:
+                        cb //= 2
+                    c[kind] += cb
+
+            if op not in _SKIP_BYTES:
+                if op in ("dynamic-slice", "gather"):
+                    b += 2 * _bytes_of(head)        # read slice + write
+                    b_min += 2 * _bytes_of(head)
+                elif op in ("dynamic-update-slice", "scatter"):
+                    upd = (defs_bytes.get(operand_names[1], 0)
+                           if len(operand_names) > 1 else 0)
+                    b += 3 * upd                    # read slice+upd, write
+                    b_min += 3 * upd
+                elif op == "fusion":
+                    b += _bytes_of(head)
+                    callee = _CALLEE.findall(rhs)
+                    preads = fusion_param_reads.get(
+                        callee[0] if callee else "", {})
+                    for j, nm in enumerate(operand_names):
+                        full = defs_bytes.get(nm, 0)
+                        b += min(full, preads.get(j, full)) \
+                            if j in preads else full
+                else:
+                    b += _bytes_of(head)  # result write
+                    b += sum(defs_bytes.get(nm, 0) for nm in operand_names)
+                # lower bound (perfect-fusion model): only matmul, conv and
+                # collective payload traffic touches HBM
+                if op in ("dot", "convolution"):
+                    db = _bytes_of(head) + sum(defs_bytes.get(nm, 0)
+                                               for nm in operand_names)
+                    b_min += db
+                    items.append((db, op, name, head.strip()[:48]))
+                elif any(op == k or op == k + "-start"
+                         for k in _COLL_KINDS):
+                    b_min += 2 * _bytes_of(head)
+                    items.append((2 * _bytes_of(head), op, name,
+                                  head.strip()[:48]))
+                elif op in ("dynamic-slice", "gather"):
+                    items.append((2 * _bytes_of(head), op, name,
+                                  head.strip()[:48]))
+
+            # call edges
+            trip = 1.0
+            mt = _TRIP.search(rhs)
+            if mt:
+                trip = float(mt.group(1))
+            if op == "while":
+                for nm in _CALLEE.findall(rhs):
+                    ed.append((nm, trip))
+            else:
+                for nm in _CALLEE.findall(rhs):
+                    ed.append((nm, 1.0))
+                    if op == "fusion" and nm in comps:
+                        comps[nm].is_fusion_body = True
+            mb = _BRANCHES.search(rhs)
+            if mb:
+                for nm in mb.group(1).split(","):
+                    ed.append((nm.strip().lstrip("%"), 1.0))
+        flops[comp.name] = f
+        bts[comp.name] = b
+        bmin[comp.name] = b_min
+        coll[comp.name] = c
+        edges[comp.name] = ed
+        contrib[comp.name] = items
+
+    # fusion internals: flops count, bytes don't (operands/result already
+    # accounted at the fusion call site) — except b_min keeps fused dots
+    for comp in comps.values():
+        if comp.is_fusion_body:
+            bts[comp.name] = 0.0
+
+    memo: Dict[str, tuple] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 64:
+            return 0.0, 0.0, 0.0, {k: 0.0 for k in _COLL_KINDS}
+        f, b, bm = flops[name], bts[name], bmin[name]
+        c = dict(coll[name])
+        for callee, w in edges[name]:
+            cf, cb, cbm, cc = total(callee, depth + 1)
+            f += w * cf
+            b += w * cb
+            bm += w * cbm
+            for k in _COLL_KINDS:
+                c[k] += w * cc[k]
+        memo[name] = (f, b, bm, c)
+        return memo[name]
+
+    f, b, bm, c = total(entry)
+    out = {"flops": f, "hbm_bytes": b, "hbm_bytes_min": bm,
+           "collective_bytes": sum(c.values())}
+    for k in _COLL_KINDS:
+        out[f"coll_{k}"] = c[k]
+
+    if top_k:
+        # weight each computation's contributors by its total multiplicity
+        mult: Dict[str, float] = {entry: 1.0}
+
+        def walk(name, w, depth=0):
+            if depth > 64 or name not in comps:
+                return
+            for callee, ew in edges.get(name, []):
+                mult[callee] = mult.get(callee, 0.0) + w * ew
+                walk(callee, w * ew, depth + 1)
+
+        walk(entry, 1.0)
+        flat = []
+        for cname, items in contrib.items():
+            w = mult.get(cname, 0.0)
+            if cname == entry:
+                w = 1.0
+            for db, op, nm, sig in items:
+                flat.append((db * w, op, cname, nm, sig))
+        flat.sort(reverse=True)
+        out["top_bytes"] = flat[:top_k]
+    return out

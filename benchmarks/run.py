@@ -1,0 +1,239 @@
+"""Benchmark harness — one function per paper claim (DESIGN.md §7.5).
+
+Prints ``name,us_per_call,derived`` CSV rows.  The paper is a toolbox paper
+without numeric tables; the benchmarks instantiate its CLAIMS:
+
+  (i)    parallel VMP scales with batched instances (multi-core -> vmap)
+  (iii)  streaming VB is constant-memory and tracks the batch posterior
+  (iv)   drift detection flags synthetic concept drift
+  (v)    model zoo recovers ground truth (Table 2)
+  (vi)   parallel importance sampling throughput + ESS
+  (vii)  kernels (interpret mode — correctness-grade timing only)
+  (viii) end-to-end LM training throughput (reduced configs)
+
+(d-VMP shard invariance — claim (ii) — is exercised in
+tests/test_distributed.py and at 256/512-chip scale by the dry-run.)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from functools import partial
+
+import numpy as np
+
+
+def _t(fn, *args, reps=3, warmup=1, **kw):
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_vmp_parallel():
+    """(i) E-step throughput vs batch size — the parallelStream analog."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import vmp
+    from repro.core.dag import PlateSpec
+
+    spec = PlateSpec(n_features=10, latent_card=4)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    post = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+    step = jax.jit(lambda x, xd, m: vmp.local_step(cp, post, x, xd, m))
+    for n in (1_000, 10_000, 100_000):
+        x = jax.random.normal(jax.random.PRNGKey(1), (n, 10))
+        xd = jnp.zeros((n, 0), jnp.int32)
+        us = _t(step, x, xd, jnp.ones(n))
+        print(f"vmp_estep_n{n},{us:.0f},{n / us * 1e6:.0f} inst/s")
+
+
+def bench_streaming():
+    """(iii) streaming VB: batches/sec at fixed memory."""
+    import jax
+
+    from repro.core import streaming, vmp
+    from repro.core.dag import PlateSpec
+    from repro.data.synthetic import gmm_stream
+
+    stream, _, _ = gmm_stream(50_000, 3, 8, seed=0)
+    spec = PlateSpec(n_features=8, latent_card=3)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    ss = streaming.stream_init(
+        prior, vmp.symmetry_broken(prior, jax.random.PRNGKey(0)))
+    t0 = time.perf_counter()
+    nb = 0
+    for b in stream.batches(2_000):
+        ss, info = streaming.stream_update(cp, prior, ss, b.xc, b.xd,
+                                           sweeps=5)
+        nb += 1
+    dt = time.perf_counter() - t0
+    print(f"streaming_vb_batch2000,{dt / nb * 1e6:.0f},"
+          f"{50_000 / dt:.0f} inst/s elbo={float(info['elbo']):.1f}")
+
+
+def bench_drift():
+    """(iv) drift detection latency (batches until flagged)."""
+    import jax
+
+    from repro.core import streaming, vmp
+    from repro.core.dag import PlateSpec
+    from repro.data.synthetic import drift_stream
+
+    stream, _ = drift_stream(2_500, 4, seed=1)
+    spec = PlateSpec(n_features=4, latent_card=1)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    ss = streaming.stream_init(
+        prior, vmp.symmetry_broken(prior, jax.random.PRNGKey(0)))
+    fired = -1
+    for i, b in enumerate(stream.batches(250)):
+        ss, info = streaming.stream_update(cp, prior, ss, b.xc, b.xd,
+                                           drift_threshold=3.0)
+        if bool(info["drifted"]) and fired < 0:
+            fired = i
+    print(f"drift_detection,0,fired_at_batch={fired} (shift at 10)")
+
+
+def bench_model_zoo():
+    """(v) Table-2 recovery metrics."""
+    import itertools
+
+    from repro.data import synthetic as syn
+    from repro.pgm_models import (GaussianMixture, HiddenMarkovModel, LDA,
+                                  NaiveBayesClassifier)
+
+    s, means, _ = syn.gmm_stream(2000, 3, 4, seed=1)
+    m = GaussianMixture(s.attributes, n_states=3)
+    t0 = time.perf_counter()
+    m.update_model(s)
+    gmm_t = time.perf_counter() - t0
+    err = float(np.abs(np.sort(np.asarray(m.posterior.reg.m[:, :, 0]).T, 0)
+                       - np.sort(means, 0)).max())
+    print(f"zoo_gmm_fit,{gmm_t * 1e6:.0f},mean_err={err:.3f}")
+
+    s, y = syn.nb_stream(1500, 3, 2, 2, seed=2)
+    clf = NaiveBayesClassifier(s.attributes)
+    clf.update_model(s)
+    acc = float((np.asarray(clf.predict(s)) == y).mean())
+    print(f"zoo_nbc,0,acc={acc:.3f}")
+
+    ds, trans, hm_means, zs = syn.hmm_sequences(20, 60, 3, 2, seed=6)
+    hm = HiddenMarkovModel(ds.attributes, n_states=3, seed=1)
+    hm.update_model(ds)
+    vit = hm.viterbi_states(ds.collect().xc)
+    acc = max((np.asarray(vit) == np.array(p)[zs].reshape(vit.shape)).mean()
+              for p in itertools.permutations(range(3)))
+    print(f"zoo_hmm,0,decode_acc={acc:.3f}")
+
+    counts, beta = syn.lda_corpus(120, 50, 4, seed=8)
+    lda = LDA(4, 50, seed=0)
+    lda.update_model(counts, sweeps=25)
+    score = max(sum(float(lda.topics()[p[t]] @ beta[t]) for t in range(4))
+                for p in itertools.permutations(range(4)))
+    print(f"zoo_lda,0,topic_score={score:.2f} (perfect~0.80, random~0.08)")
+
+
+def bench_importance_sampling():
+    """(vi) parallel IS throughput and effective sample size."""
+    import jax.numpy as jnp
+
+    from repro.core.dag import (BayesianNetwork, CLGCPD, DAG, MultinomialCPD,
+                                Variables)
+    from repro.core.importance_sampling import ImportanceSampling
+
+    vs = Variables()
+    Z = vs.new_multinomial("Z", 2)
+    X1 = vs.new_gaussian("X1")
+    X2 = vs.new_gaussian("X2")
+    dag = DAG(vs)
+    dag.add_parent(X1, Z)
+    dag.add_parent(X2, Z)
+    bn = BayesianNetwork(dag, {
+        "Z": MultinomialCPD(jnp.array([0.3, 0.7])),
+        "X1": CLGCPD(jnp.array([0.0, 4.0]), jnp.zeros((2, 0)),
+                     jnp.array([1.0, 1.0])),
+        "X2": CLGCPD(jnp.array([-2.0, 2.0]), jnp.zeros((2, 0)),
+                     jnp.array([1.0, 1.0]))})
+    inf = ImportanceSampling(n_samples=100_000, seed=0)
+    inf.set_model(bn)
+    inf.set_evidence({"X1": 3.0, "X2": 1.0})
+    t0 = time.perf_counter()
+    inf.run_inference()
+    dt = time.perf_counter() - t0
+    print(f"importance_sampling_100k,{dt * 1e6:.0f},"
+          f"ESS={float(inf.effective_sample_size()):.0f}")
+
+
+def bench_kernels():
+    """(vii) kernel calls (interpret mode: correctness-grade timing)."""
+    import jax
+
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(key, (1, 256, 2, 64))
+    us = _t(ops.flash_attention, q, k, k, reps=2)
+    print(f"kernel_flash_attn_256,{us:.0f},interpret-mode")
+    x = jax.random.normal(key, (1, 128, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 128, 4)))
+    A = jax.numpy.ones((4,))
+    B = jax.random.normal(key, (1, 128, 1, 32))
+    us = _t(ops.ssd_scan, x, dt, A, B, B, chunk=32, reps=2)
+    print(f"kernel_ssd_scan_128,{us:.0f},interpret-mode")
+    d = jax.random.normal(key, (512, 2, 4))
+    yv = jax.random.normal(key, (512, 2))
+    r = jax.nn.softmax(jax.random.normal(key, (512, 3)), -1)
+    us = _t(ops.clg_suffstats, d, yv, r, reps=2)
+    print(f"kernel_clg_stats_512,{us:.0f},interpret-mode")
+
+
+def bench_lm_training():
+    """(viii) reduced-config LM training throughput."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.data.tokens import TokenStream, markov_sequence_fast
+    from repro.nn import transformer as T
+    from repro.train import optimizer as opt
+    from repro.train import step as ts
+
+    cfg = get_config("granite-3-2b").reduced()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    state = ts.init_train_state(params)
+    toks = markov_sequence_fast(20_000, cfg.vocab, seed=1)
+    stream = TokenStream(toks, batch=8, seq=128)
+    lr_fn = opt.cosine_schedule(1e-3, 10, 100)
+    jstep = jax.jit(partial(ts.train_step, cfg=cfg, lr_fn=lr_fn))
+    batches = list(stream.batches(12))
+    state, _ = jstep(state, batches[0])  # compile
+    t0 = time.perf_counter()
+    for b in batches[1:]:
+        state, m = jstep(state, b)
+    jax.block_until_ready(m["loss"])
+    dt = time.perf_counter() - t0
+    tps = 11 * 8 * 128 / dt
+    print(f"lm_train_step,{dt / 11 * 1e6:.0f},{tps:.0f} tok/s "
+          f"loss={float(m['loss']):.3f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in (bench_vmp_parallel, bench_streaming, bench_drift,
+               bench_model_zoo, bench_importance_sampling, bench_kernels,
+               bench_lm_training):
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart — the paper's Code Fragments 7/9/13 in this framework.
+
+Learn a Gaussian mixture from a data stream, update it with new batches
+(Bayesian updating, Eq. 3), and query a posterior given evidence.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.synthetic import gmm_stream
+from repro.pgm_models import GaussianMixture
+
+# --- Code Fragment 7: learn a predefined static model from data -------------
+stream, true_means, _ = gmm_stream(n=3000, k=2, f=10, seed=0)
+model = GaussianMixture(stream.attributes, n_states=2)
+model.update_model(stream)          # scalable VMP learning
+print(model)                        # Code Fragment 8 style print-out
+
+# --- Code Fragment 9: update the model as new data arrives ------------------
+for i in range(3):
+    new_stream, _, _ = gmm_stream(n=500, k=2, f=10, seed=10 + i)
+    elbo = model.update_model(new_stream)
+    print(f"[update {i}] elbo={elbo:.1f} (n_seen={model.n_seen})")
+
+# --- Code Fragment 13: inference — P(Hidden | evidence) ---------------------
+evidence = np.zeros((1, 10), np.float32)
+evidence[0, :] = np.asarray(true_means[0])      # a point near component 0
+evidence[0, 8:] = [8.0, -1.0]                   # CF 13's GaussianVar8/9 values
+posterior = model.posterior_z(jnp.asarray(evidence))
+print("P(HiddenVar | GaussianVar8=8.0, GaussianVar9=-1.0) =",
+      np.asarray(posterior[0]))

@@ -1,0 +1,8 @@
+"""The paper's technique applied to NN training (DESIGN.md §4).
+
+``vb_optimizer``   streaming variational Bayes over network weights:
+                   Gaussian mean-field posterior, natural-gradient (VON)
+                   updates, Eq.-3 prior chaining, d-VMP-style data-axis
+                   reduction of expected sufficient statistics.
+``drift``          streaming concept-drift monitor on the training loss.
+"""

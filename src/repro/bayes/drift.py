@@ -1,0 +1,26 @@
+"""Streaming drift monitor for NN training — reuses the Page-Hinkley
+machinery of ``repro.core.streaming`` on the per-token loss signal."""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.streaming import DriftState, drift_init, drift_update
+
+
+class LossDriftMonitor(NamedTuple):
+    state: DriftState
+    threshold: float
+
+    @staticmethod
+    def create(threshold: float = 5.0) -> "LossDriftMonitor":
+        return LossDriftMonitor(state=drift_init(), threshold=threshold)
+
+    def observe(self, loss: jnp.ndarray) -> Tuple["LossDriftMonitor", jnp.ndarray]:
+        """Feed a batch mean loss; returns (new monitor, drifted?)."""
+        # score = negative loss (higher is better, matching ELBO convention)
+        st, ph = drift_update(self.state, -loss)
+        return LossDriftMonitor(state=st, threshold=self.threshold), \
+            ph > self.threshold

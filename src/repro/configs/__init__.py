@@ -1,0 +1,45 @@
+"""Architecture registry — ``get_config(name)`` / ``--arch <id>``.
+
+Ten assigned architectures (public-pool, citations in each file) plus the
+paper's own PGM workload configs (``amidst_pgm``).
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+_REGISTRY = {}
+
+
+def _register(mod_name: str, attr: str = "CONFIG"):
+    import importlib
+
+    def load():
+        m = importlib.import_module(f"repro.configs.{mod_name}")
+        return getattr(m, attr)
+
+    return load
+
+
+_LOADERS = {
+    "granite-3-2b": _register("granite_3_2b"),
+    "chameleon-34b": _register("chameleon_34b"),
+    "glm4-9b": _register("glm4_9b"),
+    "gemma-2b": _register("gemma_2b"),
+    "h2o-danube-1.8b": _register("h2o_danube_1_8b"),
+    "zamba2-1.2b": _register("zamba2_1_2b"),
+    "mamba2-1.3b": _register("mamba2_1_3b"),
+    "phi3.5-moe-42b-a6.6b": _register("phi35_moe"),
+    "mixtral-8x7b": _register("mixtral_8x7b"),
+    "whisper-medium": _register("whisper_medium"),
+}
+
+ARCH_IDS = list(_LOADERS)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _LOADERS:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_IDS}")
+    if name not in _REGISTRY:
+        _REGISTRY[name] = _LOADERS[name]()
+    return _REGISTRY[name]

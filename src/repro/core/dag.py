@@ -1,0 +1,277 @@
+"""The modeling language: variables, DAGs and (conditional linear Gaussian)
+Bayesian networks — paper §2.1 and Code Fragment 11.
+
+Two levels:
+
+* ``BayesianNetwork`` — a concrete CLG network (discrete multinomial nodes +
+  continuous CLG nodes, Eq. 2).  Fully materialized parameters; supports joint
+  log-density evaluation and ancestral sampling.  This is what inference
+  (importance sampling, MAP, factored frontier) operates on, and what
+  ``Model.get_model()`` returns after learning.
+
+* ``PlateSpec`` — the Fig.-3 plate family the VMP learning engine compiles:
+  global parameters theta, an optional per-instance discrete latent Z_i, an
+  optional per-instance continuous latent vector H_i, and observed leaves that
+  are CLG in (Z_i, H_i, observed parents).  Models in ``repro.pgm_models``
+  build a PlateSpec in ``build_dag`` (the paper's ``buildDAG()``).
+
+Structure (graphs, names) is static Python; parameters are jnp pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+DISCRETE = "multinomial"
+CONTINUOUS = "gaussian"
+
+
+@dataclasses.dataclass(frozen=True)
+class Variable:
+    name: str
+    kind: str  # DISCRETE | CONTINUOUS
+    card: int = 0  # cardinality for discrete vars
+
+    @property
+    def is_discrete(self) -> bool:
+        return self.kind == DISCRETE
+
+
+class Variables:
+    """Variable registry — mirrors ``eu.amidst.core.variables.Variables``."""
+
+    def __init__(self) -> None:
+        self._vars: List[Variable] = []
+        self._by_name: Dict[str, Variable] = {}
+
+    def new_multinomial(self, name: str, card: int) -> Variable:
+        return self._add(Variable(name, DISCRETE, card))
+
+    def new_gaussian(self, name: str) -> Variable:
+        return self._add(Variable(name, CONTINUOUS))
+
+    def _add(self, v: Variable) -> Variable:
+        if v.name in self._by_name:
+            raise ValueError(f"duplicate variable {v.name!r}")
+        self._vars.append(v)
+        self._by_name[v.name] = v
+        return v
+
+    def by_name(self, name: str) -> Variable:
+        return self._by_name[name]
+
+    def __iter__(self):
+        return iter(self._vars)
+
+    def __len__(self) -> int:
+        return len(self._vars)
+
+
+class DAG:
+    """Parent-set container over a ``Variables`` registry (Code Fragment 11)."""
+
+    def __init__(self, variables: Variables) -> None:
+        self.variables = variables
+        self.parents: Dict[str, List[Variable]] = {v.name: [] for v in variables}
+
+    def add_parent(self, child: Variable, parent: Variable) -> None:
+        if parent.name == child.name:
+            raise ValueError("self-loop")
+        self.parents[child.name].append(parent)
+        self._check_acyclic()
+
+    def get_parents(self, v: Variable) -> List[Variable]:
+        return self.parents[v.name]
+
+    def topological_order(self) -> List[Variable]:
+        order, seen, mark = [], set(), set()
+
+        def visit(v: Variable):
+            if v.name in seen:
+                return
+            if v.name in mark:
+                raise ValueError("cycle in DAG")
+            mark.add(v.name)
+            for p in self.parents[v.name]:
+                visit(p)
+            mark.discard(v.name)
+            seen.add(v.name)
+            order.append(v)
+
+        for v in self.variables:
+            visit(v)
+        return order
+
+    def _check_acyclic(self) -> None:
+        self.topological_order()
+
+
+# ---------------------------------------------------------------------------
+# Concrete CLG Bayesian network
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MultinomialCPD:
+    """p(X | discrete parents): table of shape parent_cards + [card]."""
+
+    table: jnp.ndarray  # normalized along the last axis
+
+
+@dataclasses.dataclass
+class CLGCPD:
+    """Eq. 2: N(z ; alpha(x_D) + beta(x_D)^T x_C, sigma2(x_D)).
+
+    ``alpha``: [*parent_cards], ``beta``: [*parent_cards, C], ``sigma2``:
+    [*parent_cards]; C = number of continuous parents (may be 0).
+    """
+
+    alpha: jnp.ndarray
+    beta: jnp.ndarray
+    sigma2: jnp.ndarray
+
+
+class BayesianNetwork:
+    """A CLG Bayesian network with materialized CPDs.
+
+    ``assignments`` passed to :meth:`log_prob` map variable name -> value
+    array; all value arrays share leading batch shape.
+    """
+
+    def __init__(self, dag: DAG, cpds: Dict[str, object]) -> None:
+        self.dag = dag
+        self.cpds = cpds
+        self.order = dag.topological_order()
+        for v in self.order:
+            if v.name not in cpds:
+                raise ValueError(f"missing CPD for {v.name}")
+            parents = dag.get_parents(v)
+            if v.is_discrete and any(not p.is_discrete for p in parents):
+                raise ValueError(
+                    f"CLG restriction: discrete node {v.name} with continuous parent"
+                )
+
+    # -- density ------------------------------------------------------------
+
+    def log_prob(self, assignment: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        total = 0.0
+        for v in self.order:
+            total = total + self._node_logp(v, assignment)
+        return total
+
+    def _node_logp(self, v: Variable, asg: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        parents = self.dag.get_parents(v)
+        dpa = [p for p in parents if p.is_discrete]
+        cpa = [p for p in parents if not p.is_discrete]
+        didx = tuple(asg[p.name].astype(jnp.int32) for p in dpa)
+        cpd = self.cpds[v.name]
+        if v.is_discrete:
+            table = cpd.table[didx]  # [batch..., card] if dpa else [card]
+            x = asg[v.name].astype(jnp.int32)
+            if not dpa:
+                return jnp.log(table[x])
+            return jnp.log(jnp.take_along_axis(table, x[..., None], -1)[..., 0])
+        alpha = cpd.alpha[didx]
+        sigma2 = cpd.sigma2[didx]
+        mean = alpha
+        if cpa:
+            beta = cpd.beta[didx]  # [..., C]
+            xc = jnp.stack([asg[p.name] for p in cpa], -1)
+            mean = mean + (beta * xc).sum(-1)
+        z = asg[v.name]
+        return -0.5 * (jnp.log(2 * jnp.pi * sigma2) + (z - mean) ** 2 / sigma2)
+
+    # -- ancestral sampling ---------------------------------------------------
+
+    def sample(self, key: jax.Array, n: int) -> Dict[str, jnp.ndarray]:
+        asg: Dict[str, jnp.ndarray] = {}
+        for v in self.order:
+            key, sub = jax.random.split(key)
+            parents = self.dag.get_parents(v)
+            dpa = [p for p in parents if p.is_discrete]
+            cpa = [p for p in parents if not p.is_discrete]
+            didx = tuple(asg[p.name].astype(jnp.int32) for p in dpa)
+            cpd = self.cpds[v.name]
+            if v.is_discrete:
+                table = cpd.table[didx] if dpa else jnp.broadcast_to(
+                    cpd.table, (n,) + cpd.table.shape
+                )
+                asg[v.name] = jax.random.categorical(sub, jnp.log(table), axis=-1)
+            else:
+                alpha = cpd.alpha[didx] if dpa else jnp.broadcast_to(cpd.alpha, (n,))
+                sigma2 = cpd.sigma2[didx] if dpa else jnp.broadcast_to(cpd.sigma2, (n,))
+                mean = alpha
+                if cpa:
+                    beta = cpd.beta[didx] if dpa else jnp.broadcast_to(
+                        cpd.beta, (n,) + cpd.beta.shape
+                    )
+                    xc = jnp.stack([asg[p.name] for p in cpa], -1)
+                    mean = mean + (beta * xc).sum(-1)
+                asg[v.name] = mean + jnp.sqrt(sigma2) * jax.random.normal(sub, (n,))
+        return asg
+
+    def __str__(self) -> str:  # paper Code Fragment 8 style print-out
+        lines = ["Bayesian Network:"]
+        for v in self.order:
+            parents = self.dag.get_parents(v)
+            pstr = ", ".join(p.name for p in parents)
+            head = f"P({v.name}" + (f" | {pstr})" if parents else ")")
+            cpd = self.cpds[v.name]
+            if v.is_discrete:
+                lines.append(f"{head} follows a Multinomial")
+                lines.append(f"  {np.asarray(cpd.table)}")
+            else:
+                lines.append(f"{head} follows a Normal|Multinomial (CLG)")
+                lines.append(
+                    f"  alpha={np.asarray(cpd.alpha)} beta={np.asarray(cpd.beta)}"
+                    f" sigma2={np.asarray(cpd.sigma2)}"
+                )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Plate family compiled by the VMP engine (paper Fig. 3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlateSpec:
+    """Fig.-3 plate model, the class of structures the learning engine accepts.
+
+    n_features        number of observed leaves X_i (continuous unless listed
+                      in ``discrete_features`` with its cardinality)
+    latent_card       cardinality of the per-instance discrete latent Z_i
+                      (0 = no discrete latent; 1 behaves as "no mixture")
+    latent_dim        dimension of the per-instance continuous latent H_i
+                      (0 = none). H_i has a standard-normal prior and
+                      linear-Gaussian children (FA/PPCA family).
+    feature_parents   for each observed leaf, indices of *observed* continuous
+                      features acting as CLG parents (Bayesian-regression
+                      links); empty for plain mixture leaves.
+    discrete_features map feature index -> cardinality for multinomial leaves
+                      (Naive-Bayes style).
+    """
+
+    n_features: int
+    latent_card: int = 0
+    latent_dim: int = 0
+    feature_parents: Tuple[Tuple[int, ...], ...] = ()
+    discrete_features: Tuple[Tuple[int, int], ...] = ()
+
+    def __post_init__(self):
+        if self.feature_parents and len(self.feature_parents) != self.n_features:
+            raise ValueError("feature_parents must list every feature")
+
+    @property
+    def discrete_map(self) -> Dict[int, int]:
+        return dict(self.discrete_features)
+
+    def parent_idx(self, i: int) -> Tuple[int, ...]:
+        if not self.feature_parents:
+            return ()
+        return self.feature_parents[i]

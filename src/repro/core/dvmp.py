@@ -1,0 +1,124 @@
+"""d-VMP — distributed Variational Message Passing [Masegosa et al., 2016].
+
+The paper's distributed scheme (Flink/Spark in the original) has one key
+structural property: in the Fig.-3 plate family every *global* parameter node
+receives, per VMP sweep, a message that is the SUM over data instances of
+per-instance expected sufficient statistics, while *local* latent posteriors
+(q(Z_i), q(H_i)) depend only on the instance's own data and the current
+global posterior.  Hence:
+
+    worker w:  stats_w = local_step(theta, data shard w)        (embarrassing)
+    runtime :  stats   = all_reduce_sum(stats_w)                (one collective)
+    driver  :  theta'  = conjugate_update(prior, stats)         (replicated)
+
+On a TPU pod this is a `shard_map` over the data mesh axes with a single
+`jax.lax.psum` of the suff-stat pytree per sweep — the Flink reduce becomes
+an ICI all-reduce.  Local latents never leave their shard, which is what let
+the paper scale to models with >1e9 (local-latent) nodes.
+
+The sweep loop itself lives *inside* the shard_map body (a
+``lax.while_loop``), so a full fit is ONE XLA program: sweeps are separated
+by psums, not by host round-trips — strictly better than the paper's
+per-iteration Flink superstep barrier.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import vmp as V
+from repro.core.vmp import CompiledPlate, PlateParams, PlateStats, VMPState
+
+
+def _psum_stats(stats: PlateStats, axes) -> PlateStats:
+    return jax.tree_util.tree_map(lambda s: jax.lax.psum(s, axes), stats)
+
+
+def dvmp_fit(
+    cp: CompiledPlate,
+    prior: PlateParams,
+    init: PlateParams,
+    xc: jnp.ndarray,
+    xd: jnp.ndarray,
+    mesh: Mesh,
+    data_axes: Tuple[str, ...] = ("data",),
+    max_sweeps: int = 100,
+    tol: float = 1e-4,
+    mask: Optional[jnp.ndarray] = None,
+) -> VMPState:
+    """Distributed VMP fit.
+
+    xc: [N, F], xd: [N, Fd] — N must divide by the product of data-axis sizes;
+    use ``mask`` (same leading dim) to pad ragged global batches.
+    Global params are replicated; data is sharded over ``data_axes``.
+    Result is numerically identical to single-device ``vmp_fit`` on the
+    concatenated data (up to float reduction order) — tested.
+    """
+    if mask is None:
+        mask = jnp.ones(xc.shape[0], xc.dtype)
+
+    dspec = P(data_axes)
+    rep = P()
+
+    in_specs = (rep, rep, dspec, dspec, dspec)
+    out_specs = rep
+
+    @partial(
+        shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+    def fit_shard(prior_, init_, xc_, xd_, mask_):
+        def sweep(state: VMPState) -> VMPState:
+            stats, _ = V.local_step(cp, state.post, xc_, xd_, mask_)
+            stats = _psum_stats(stats, data_axes)      # the d-VMP collective
+            post = V.global_update(prior_, stats)
+            e = V.elbo(cp, prior_, post, stats)
+            return VMPState(post=post, elbo=e,
+                            delta=jnp.abs(e - state.elbo), sweep=state.sweep + 1)
+
+        def cond(state: VMPState):
+            return jnp.logical_and(
+                state.sweep < max_sweeps,
+                state.delta > tol * (jnp.abs(state.elbo) + 1.0),
+            )
+
+        s0 = VMPState(post=init_, elbo=jnp.asarray(-jnp.inf),
+                      delta=jnp.asarray(jnp.inf), sweep=jnp.asarray(0))
+        return jax.lax.while_loop(cond, sweep, sweep(s0))
+
+    return jax.jit(fit_shard)(prior, init, xc, xd, mask)
+
+
+def dvmp_one_sweep(
+    cp: CompiledPlate,
+    prior: PlateParams,
+    post: PlateParams,
+    xc: jnp.ndarray,
+    xd: jnp.ndarray,
+    mask: jnp.ndarray,
+    mesh: Mesh,
+    data_axes: Tuple[str, ...] = ("data",),
+) -> Tuple[PlateParams, jnp.ndarray]:
+    """Single distributed sweep — the building block reused by streaming VB
+    (one sweep per arriving batch) and by the SVI driver."""
+    dspec = P(data_axes)
+    rep = P()
+
+    @partial(
+        shard_map, mesh=mesh,
+        in_specs=(rep, rep, dspec, dspec, dspec), out_specs=(rep, rep),
+        check_vma=False,
+    )
+    def body(prior_, post_, xc_, xd_, mask_):
+        stats, _ = V.local_step(cp, post_, xc_, xd_, mask_)
+        stats = _psum_stats(stats, data_axes)
+        new = V.global_update(prior_, stats)
+        return new, V.elbo(cp, prior_, new, stats)
+
+    return jax.jit(body)(prior, post, xc, xd, mask)

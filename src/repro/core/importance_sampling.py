@@ -1,0 +1,120 @@
+"""Parallel importance sampling in CLG networks — paper §2.2 / ref [19].
+
+Likelihood weighting over a ``BayesianNetwork``: evidence nodes are clamped,
+non-evidence nodes are sampled from their conditional given already-sampled
+parents, and each particle carries weight prod_e p(e | parents).  The paper's
+multi-core parallelism (Java 8 streams over sample blocks) becomes a single
+``jax.vmap``-style batched sampler: all particles advance node-by-node in
+lock-step, which is exactly the TPU-friendly layout.  A shard_map wrapper
+distributes particle blocks across the mesh with one final psum.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.dag import BayesianNetwork, Variable
+
+
+def _sample_or_clamp(
+    bn: BayesianNetwork,
+    key: jax.Array,
+    n: int,
+    evidence: Dict[str, jnp.ndarray],
+) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """Batched likelihood weighting. Returns (particles, log_weights)."""
+    asg: Dict[str, jnp.ndarray] = {}
+    logw = jnp.zeros(n)
+    for v in bn.order:
+        key, sub = jax.random.split(key)
+        parents = bn.dag.get_parents(v)
+        dpa = [p for p in parents if p.is_discrete]
+        cpa = [p for p in parents if not p.is_discrete]
+        didx = tuple(asg[p.name].astype(jnp.int32) for p in dpa)
+        cpd = bn.cpds[v.name]
+        if v.name in evidence:
+            val = jnp.broadcast_to(jnp.asarray(evidence[v.name]), (n,))
+            asg[v.name] = val
+            # weight by p(e | parents)
+            logw = logw + bn._node_logp(v, asg)
+            continue
+        if v.is_discrete:
+            table = cpd.table[didx] if dpa else jnp.broadcast_to(
+                cpd.table, (n,) + cpd.table.shape)
+            asg[v.name] = jax.random.categorical(sub, jnp.log(table), axis=-1)
+        else:
+            alpha = cpd.alpha[didx] if dpa else jnp.broadcast_to(cpd.alpha, (n,))
+            sigma2 = cpd.sigma2[didx] if dpa else jnp.broadcast_to(cpd.sigma2, (n,))
+            mean = alpha
+            if cpa:
+                beta = cpd.beta[didx] if dpa else jnp.broadcast_to(
+                    cpd.beta, (n,) + cpd.beta.shape)
+                xc = jnp.stack([asg[p.name] for p in cpa], -1)
+                mean = mean + (beta * xc).sum(-1)
+            asg[v.name] = mean + jnp.sqrt(sigma2) * jax.random.normal(sub, (n,))
+    return asg, logw
+
+
+class ImportanceSampling:
+    """Paper §3.4 API: set model / evidence, run, query posteriors."""
+
+    def __init__(self, n_samples: int = 10_000, seed: int = 0) -> None:
+        self.n_samples = n_samples
+        self.key = jax.random.PRNGKey(seed)
+        self.bn: Optional[BayesianNetwork] = None
+        self.evidence: Dict[str, jnp.ndarray] = {}
+        self._particles = None
+        self._logw = None
+
+    def set_model(self, bn: BayesianNetwork) -> None:
+        self.bn = bn
+
+    def set_evidence(self, evidence: Dict[str, float]) -> None:
+        self.evidence = {k: jnp.asarray(v) for k, v in evidence.items()}
+
+    def run_inference(self, mesh: Optional[Mesh] = None,
+                      data_axes: Tuple[str, ...] = ("data",)) -> None:
+        self.key, sub = jax.random.split(self.key)
+        if mesh is None:
+            self._particles, self._logw = _sample_or_clamp(
+                self.bn, sub, self.n_samples, self.evidence)
+        else:
+            ndev = 1
+            for a in data_axes:
+                ndev *= mesh.shape[a]
+            keys = jax.random.split(sub, ndev)
+
+            @partial(shard_map, mesh=mesh, in_specs=P(data_axes),
+                     out_specs=(P(data_axes), P(data_axes)), check_vma=False)
+            def sample_block(k):
+                return _sample_or_clamp(
+                    self.bn, k[0], self.n_samples // ndev, self.evidence)
+
+            self._particles, self._logw = jax.jit(sample_block)(keys)
+
+    # -- queries -------------------------------------------------------------
+
+    def _weights(self) -> jnp.ndarray:
+        return jax.nn.softmax(self._logw)
+
+    def posterior_discrete(self, var: Variable) -> jnp.ndarray:
+        """Normalized posterior table for a discrete variable."""
+        w = self._weights()
+        x = self._particles[var.name].astype(jnp.int32)
+        return jnp.zeros(var.card).at[x].add(w)
+
+    def posterior_mean_var(self, var: Variable) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        w = self._weights()
+        x = self._particles[var.name]
+        mean = (w * x).sum()
+        return mean, (w * (x - mean) ** 2).sum()
+
+    def effective_sample_size(self) -> jnp.ndarray:
+        w = self._weights()
+        return 1.0 / (w * w).sum()

@@ -1,0 +1,108 @@
+"""Stochastic Variational Inference (Hoffman et al., 2013) — paper §2.2.
+
+SVI replaces the full-data global update with a natural-gradient step on the
+global variational parameters, computed from a minibatch scaled to the full
+data size:
+
+    eta_{t+1} = (1 - rho_t) eta_t + rho_t ( eta_prior + (N/B) * stats_batch )
+
+where eta are the NATURAL coordinates of the conjugate families.  For our
+parameterizations the natural coordinates are
+
+    Dirichlet      : alpha
+    MVNormalGamma  : ( K, K m, a, b + 1/2 m^T K m )
+
+(the coordinates in which the conjugate update is addition of suff stats).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expfam as ef
+from repro.core import vmp as V
+from repro.core.vmp import CompiledPlate, PlateParams, PlateStats
+
+
+class NatParams(NamedTuple):
+    mix: jnp.ndarray       # alpha
+    reg_K: jnp.ndarray
+    reg_Km: jnp.ndarray
+    reg_a: jnp.ndarray
+    reg_bq: jnp.ndarray    # b + 1/2 m^T K m
+    disc: jnp.ndarray      # alpha
+
+
+def to_natural(p: PlateParams) -> NatParams:
+    km = jnp.einsum("...de,...e->...d", p.reg.K, p.reg.m)
+    quad = jnp.einsum("...d,...d->...", p.reg.m, km)
+    return NatParams(
+        mix=p.mix.alpha, reg_K=p.reg.K, reg_Km=km, reg_a=p.reg.a,
+        reg_bq=p.reg.b + 0.5 * quad, disc=p.disc.alpha,
+    )
+
+
+def from_natural(n: NatParams) -> PlateParams:
+    m = jnp.linalg.solve(n.reg_K, n.reg_Km[..., None])[..., 0]
+    quad = jnp.einsum("...d,...d->...", m, n.reg_Km)
+    b = jnp.maximum(n.reg_bq - 0.5 * quad, 1e-10)
+    return PlateParams(
+        mix=ef.Dirichlet(n.mix),
+        reg=ef.MVNormalGamma(m=m, K=n.reg_K, a=n.reg_a, b=b),
+        disc=ef.Dirichlet(n.disc),
+    )
+
+
+def stats_as_natural(stats: PlateStats) -> NatParams:
+    """Suff stats expressed as a natural-coordinate increment."""
+    return NatParams(
+        mix=stats.counts,
+        reg_K=stats.reg.sxx,
+        reg_Km=stats.reg.sxy,
+        reg_a=0.5 * stats.reg.n,
+        reg_bq=0.5 * stats.reg.syy,
+        disc=stats.disc,
+    )
+
+
+class SVIState(NamedTuple):
+    nat: NatParams
+    step: jnp.ndarray
+
+
+def svi_init(post: PlateParams) -> SVIState:
+    return SVIState(nat=to_natural(post), step=jnp.asarray(0))
+
+
+def svi_step(
+    cp: CompiledPlate,
+    prior: PlateParams,
+    state: SVIState,
+    xc: jnp.ndarray,
+    xd: jnp.ndarray,
+    n_total: float,
+    *,
+    tau: float = 1.0,
+    kappa: float = 0.7,
+) -> SVIState:
+    """One natural-gradient step on minibatch (xc, xd); Robbins-Monro rate
+    rho_t = (t + tau)^-kappa, kappa in (0.5, 1]."""
+    B = xc.shape[0]
+    post = from_natural(state.nat)
+    stats, _ = V.local_step(cp, post, xc, xd, jnp.ones(B))
+    scale = n_total / B
+    target = jax.tree_util.tree_map(
+        lambda p, s: p + scale * s, to_natural(prior), stats_as_natural(stats)
+    )
+    rho = (state.step + tau) ** (-kappa)
+    nat = jax.tree_util.tree_map(
+        lambda cur, tgt: (1.0 - rho) * cur + rho * tgt, state.nat, target
+    )
+    return SVIState(nat=nat, step=state.step + 1)
+
+
+def svi_posterior(state: SVIState) -> PlateParams:
+    return from_natural(state.nat)

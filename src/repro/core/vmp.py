@@ -1,0 +1,428 @@
+"""Variational Message Passing (Winn & Bishop 2005) — the learning engine.
+
+The engine performs CAVI over the Fig.-3 plate family (``dag.PlateSpec``):
+
+    theta  ~ conjugate priors                       (global, shared)
+    Z_i    ~ Cat(pi)                                (per-instance discrete latent)
+    H_i    ~ N(0, I_L)                              (per-instance cont. latent)
+    X_if   ~ N( w_{f,Z_i}^T d_if , lam_{f,Z_i}^-1 ) (continuous leaves; CLG Eq. 2)
+    X_id   ~ Cat( theta_{d,Z_i} )                   (discrete leaves)
+
+where the design vector d_if = [1, observed parents of f, H_i (masked)].
+
+One VMP *sweep* = local step (update q(Z), q(H), emit expected sufficient
+statistics — the "messages to global parameter nodes") + global step
+(conjugate natural-parameter update).  This file is single-device; dvmp.py
+wraps the local step in shard_map and psums the messages, exactly the d-VMP
+scheme [Masegosa et al., 2016].
+
+All functions are jit-compatible; the sweep loop uses ``jax.lax.while_loop``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expfam as ef
+from repro.core.dag import PlateSpec
+
+
+# ---------------------------------------------------------------------------
+# Parameter / statistics pytrees
+# ---------------------------------------------------------------------------
+
+
+class PlateParams(NamedTuple):
+    """Global variational posterior (and prior) over theta."""
+
+    mix: ef.Dirichlet          # [K]        mixture weights (K=1 when no latent)
+    reg: ef.MVNormalGamma      # [F, K, D]  one CLG regression per leaf/component
+    disc: ef.Dirichlet         # [Fd, K, C] multinomial leaves (C = max card)
+
+
+class PlateStats(NamedTuple):
+    """Expected sufficient statistics — the d-VMP message pytree."""
+
+    counts: jnp.ndarray        # [K]
+    reg: ef.RegSuffStats       # [F, K, ...]
+    disc: jnp.ndarray          # [Fd, K, C]
+    n: jnp.ndarray             # scalar — #instances contributing
+    local_elbo: jnp.ndarray    # scalar — sum of local ELBO terms
+
+
+class PlateLayout(NamedTuple):
+    """Static integer geometry derived from a PlateSpec (hashable, jit-static)."""
+
+    F: int           # continuous leaves
+    Fd: int          # discrete leaves
+    K: int           # mixture components
+    L: int           # continuous latent dim
+    P: int           # max #observed parents
+    D: int           # design dim = 1 + P + L
+    C: int           # max discrete-leaf cardinality
+
+
+def layout_of(spec: PlateSpec) -> PlateLayout:
+    dm = spec.discrete_map
+    F = spec.n_features - len(dm)
+    Fd = len(dm)
+    K = max(spec.latent_card, 1)
+    L = spec.latent_dim
+    P = max((len(spec.parent_idx(i)) for i in range(spec.n_features)), default=0)
+    C = max(dm.values(), default=2)
+    return PlateLayout(F=F, Fd=Fd, K=K, L=L, P=P, D=1 + P + L, C=C)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash, jit-static
+class CompiledPlate:
+    """Static arrays derived from the spec (closed over by jitted fns).
+
+    Continuous leaves are re-indexed 0..F-1 and discrete leaves 0..Fd-1; the
+    data pipeline provides ``xc: [N, F]`` and ``xd: [N, Fd]`` accordingly.
+    """
+
+    spec: PlateSpec
+    layout: PlateLayout
+    parent_idx: jnp.ndarray    # [F, P] int — indices into xc columns
+    parent_mask: jnp.ndarray   # [F, P]
+    latent_mask: jnp.ndarray   # [F, L]
+    card_mask: jnp.ndarray     # [Fd, C] — valid categories per discrete leaf
+
+
+def compile_plate(
+    spec: PlateSpec, latent_mask: Optional[jnp.ndarray] = None
+) -> CompiledPlate:
+    lay = layout_of(spec)
+    dm = spec.discrete_map
+    cont_ids = [i for i in range(spec.n_features) if i not in dm]
+    cont_pos = {orig: new for new, orig in enumerate(cont_ids)}
+    pidx = jnp.zeros((max(lay.F, 1), max(lay.P, 1)), jnp.int32)
+    pmask = jnp.zeros((max(lay.F, 1), max(lay.P, 1)), jnp.float32)
+    for new_f, orig_f in enumerate(cont_ids):
+        for j, p in enumerate(spec.parent_idx(orig_f)):
+            if p in dm:
+                raise ValueError("observed parents must be continuous features")
+            pidx = pidx.at[new_f, j].set(cont_pos[p])
+            pmask = pmask.at[new_f, j].set(1.0)
+    if latent_mask is None:
+        lmask = jnp.ones((max(lay.F, 1), max(lay.L, 1)), jnp.float32)
+    else:
+        lmask = jnp.asarray(latent_mask, jnp.float32)
+        lmask = lmask.reshape(max(lay.F, 1), max(lay.L, 1))
+    cmask = jnp.zeros((max(lay.Fd, 1), lay.C), jnp.float32)
+    for new_d, (orig, card) in enumerate(sorted(dm.items())):
+        cmask = cmask.at[new_d, :card].set(1.0)
+    return CompiledPlate(
+        spec=spec, layout=lay, parent_idx=pidx, parent_mask=pmask,
+        latent_mask=lmask, card_mask=cmask,
+    )
+
+
+def design_mask(cp: CompiledPlate) -> jnp.ndarray:
+    """[F, D] — which design columns are live for each continuous leaf."""
+    lay = cp.layout
+    ones = jnp.ones((max(lay.F, 1), 1), jnp.float32)
+    parts = [ones]
+    if lay.P > 0:
+        parts.append(cp.parent_mask[:, : lay.P])
+    if lay.L > 0:
+        parts.append(cp.latent_mask[:, : lay.L])
+    return jnp.concatenate(parts, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Prior construction
+# ---------------------------------------------------------------------------
+
+
+def default_prior(cp: CompiledPlate, *, alpha0: float = 1.0, reg_scale: float = 1.0,
+                  a0: float = 1.0, b0: float = 1.0) -> PlateParams:
+    lay = cp.layout
+    F, K, D, Fd, C = max(lay.F, 1), lay.K, lay.D, max(lay.Fd, 1), lay.C
+    mix = ef.Dirichlet(jnp.full((K,), alpha0))
+    eye = jnp.broadcast_to(jnp.eye(D) / reg_scale, (F, K, D, D))
+    reg = ef.MVNormalGamma(
+        m=jnp.zeros((F, K, D)),
+        K=eye,
+        a=jnp.full((F, K), a0),
+        b=jnp.full((F, K), b0),
+    )
+    disc = ef.Dirichlet(
+        jnp.full((Fd, K, C), alpha0) * cp.card_mask[:, None, :] + 1e-12
+    )
+    return PlateParams(mix=mix, reg=reg, disc=disc)
+
+
+def symmetry_broken(prior: PlateParams, key: jax.Array, scale: float = 0.5
+                    ) -> PlateParams:
+    """Initial posterior: prior with jittered regression means (breaks the
+    label symmetry that makes CAVI stall at the uniform fixed point)."""
+    k1, k2 = jax.random.split(key)
+    m = prior.reg.m + scale * jax.random.normal(k1, prior.reg.m.shape)
+    disc = ef.Dirichlet(
+        prior.disc.alpha * jnp.exp(0.1 * jax.random.normal(k2, prior.disc.alpha.shape))
+    )
+    return PlateParams(mix=prior.mix, reg=prior.reg._replace(m=m), disc=disc)
+
+
+# ---------------------------------------------------------------------------
+# Local step — compute q(Z), q(H) and emit expected sufficient statistics
+# ---------------------------------------------------------------------------
+
+
+def _observed_design(cp: CompiledPlate, xc: jnp.ndarray) -> jnp.ndarray:
+    """[N, F, 1+P] observed part of the design vectors."""
+    lay = cp.layout
+    N = xc.shape[0]
+    ones = jnp.ones((N, max(lay.F, 1), 1), xc.dtype)
+    if lay.P == 0:
+        return ones
+    gathered = xc[:, cp.parent_idx]            # [N, F, P]
+    return jnp.concatenate([ones, gathered * cp.parent_mask], axis=-1)
+
+
+def _split_moments(cp: CompiledPlate, mom: ef.RegMoments):
+    """Split regression moments into observed / latent blocks, applying masks."""
+    lay = cp.layout
+    Do = 1 + lay.P
+    dmask = design_mask(cp)                                    # [F, D]
+    mm = dmask[:, None, :, None] * dmask[:, None, None, :]     # [F,1,D,D]
+    e_lamww = mom.e_lamww * mm
+    e_lamw = mom.e_lamw * dmask[:, None, :]
+    oo = e_lamww[..., :Do, :Do]
+    oh = e_lamww[..., :Do, Do:]
+    hh = e_lamww[..., Do:, Do:]
+    wo = e_lamw[..., :Do]
+    wh = e_lamw[..., Do:]
+    return wo, wh, oo, oh, hh
+
+
+def local_step(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
+               xd: jnp.ndarray, mask: jnp.ndarray,
+               r_fixed: Optional[jnp.ndarray] = None,
+               ) -> Tuple[PlateStats, jnp.ndarray]:
+    """One local VMP step on a batch.
+
+    xc: [N, F] continuous leaves; xd: [N, Fd] int discrete leaves;
+    mask: [N] 1.0 for real instances (0.0 pads — streaming tail batches);
+    r_fixed: [N, K] — clamp q(Z) (supervised models: observed class labels).
+    Returns the suff-stat message pytree and the responsibilities r: [N, K].
+    """
+    lay = cp.layout
+    N = xc.shape[0]
+    K, L, Do = lay.K, lay.L, 1 + lay.P
+
+    e_logpi = ef.dirichlet_expected_logprob(params.mix)        # [K]
+    mom = ef.mvnormalgamma_moments(params.reg)                 # [F, K, ...]
+    wo, wh, oo, oh, hh = _split_moments(cp, mom)
+    if lay.F == 0:
+        # pure-discrete model: keep regression block inert (stats = 0)
+        xc = jnp.zeros((N, 1), xd.dtype if xd.size else jnp.float32)
+    obs = _observed_design(cp, xc)                             # [N, F, Do]
+    y = xc.astype(obs.dtype)                                   # [N, F]
+
+    # --- quadratic pieces that do not involve H -----------------------------
+    # quad_oo[n,f,k] = o^T E[lam w_o w_o^T] o
+    quad_oo = jnp.einsum("nfa,fkab,nfb->nfk", obs, oo, obs)
+    lin_o = jnp.einsum("nfa,fka->nfk", obs, wo)                # o^T E[lam w_o]
+
+    if L > 0:
+        # --- q(H_i | Z_i = k): Gaussian, shared across leaves ---------------
+        A = jnp.eye(L) + hh.sum(0)                             # [K, L, L]
+        S = jnp.linalg.inv(A)                                  # [K, L, L]
+        # b[n,k,l] = sum_f ( y E[lam w_h] - E[lam w_h w_o^T] o )
+        b = jnp.einsum("nf,fkl->nkl", y, wh) - jnp.einsum(
+            "fkal,nfa->nkl", oh, obs
+        )
+        h_mean = jnp.einsum("klm,nkm->nkl", S, b)              # [N, K, L]
+        e_hh = S[None] + h_mean[..., :, None] * h_mean[..., None, :]  # [N,K,L,L]
+        quad_h = jnp.einsum("fklm,nklm->nfk", hh, e_hh)
+        cross = 2.0 * jnp.einsum("nfa,fkal,nkl->nfk", obs, oh, h_mean)
+        lin_h = jnp.einsum("nf,fkl,nkl->nfk", y, wh, h_mean) * 2.0
+        kl_h = ef.gaussian_kl_standard(h_mean, jnp.broadcast_to(
+            S[None], (N, K, L, L)))                            # [N, K]
+    else:
+        quad_h = jnp.zeros((N, max(lay.F, 1), K))
+        cross = jnp.zeros_like(quad_h)
+        lin_h = jnp.zeros_like(quad_h)
+        kl_h = jnp.zeros((N, K))
+        h_mean = jnp.zeros((N, K, 1))
+        e_hh = jnp.zeros((N, K, 1, 1))
+
+    # E_q[log N(y_f | w^T d, lam^-1)] per leaf/component
+    ll = 0.5 * (
+        mom.e_loglam[None]
+        - ef.LOG2PI
+        - mom.e_lam[None] * (y * y)[..., None]
+        + 2.0 * lin_o * y[..., None]
+        + lin_h
+        - quad_oo
+        - cross
+        - quad_h
+    )                                                          # [N, F, K]
+    ll_cont = ll.sum(1) if lay.F > 0 else jnp.zeros((N, K))
+
+    # discrete leaves
+    if lay.Fd > 0:
+        e_logtheta = ef.dirichlet_expected_logprob(params.disc)  # [Fd, K, C]
+        ll_disc = jnp.take_along_axis(
+            jnp.transpose(e_logtheta, (0, 2, 1))[None],          # [1, Fd, C, K]
+            xd.astype(jnp.int32)[..., None, None],               # [N, Fd, 1, 1]
+            axis=2,
+        )[..., 0, :].sum(1)                                      # [N, K]
+    else:
+        ll_disc = jnp.zeros((N, K))
+
+    logits = e_logpi[None] + ll_cont + ll_disc - kl_h            # [N, K]
+    if r_fixed is None:
+        logr = jax.nn.log_softmax(logits, axis=-1)
+        r = jnp.exp(logr) * mask[:, None]
+    else:
+        logr = jnp.log(jnp.maximum(r_fixed, 1e-30))
+        r = r_fixed * mask[:, None]
+
+    # --- messages to global parameter nodes ---------------------------------
+    counts = r.sum(0)                                            # [K]
+
+    # expected design outer products per leaf (masked dims handled by moments;
+    # stats are masked below so padded dims keep their prior)
+    d_o = obs                                                    # [N, F, Do]
+    if L > 0:
+        Ey_d_h = h_mean                                          # shared across f
+        sxx_oo = jnp.einsum("nfa,nfb,nk->fkab", d_o, d_o, r)
+        sxx_oh = jnp.einsum("nfa,nkl,nk->fkal", d_o, Ey_d_h, r)
+        sxx_hh = jnp.einsum("nklm,nk->klm", e_hh, r)
+        sxx_hh = jnp.broadcast_to(sxx_hh[None], (max(lay.F, 1),) + sxx_hh.shape)
+        top = jnp.concatenate([sxx_oo, sxx_oh], axis=-1)
+        bot = jnp.concatenate(
+            [jnp.swapaxes(sxx_oh, -1, -2), sxx_hh], axis=-1
+        )
+        sxx = jnp.concatenate([top, bot], axis=-2)               # [F,K,D,D]
+        sxy = jnp.concatenate(
+            [
+                jnp.einsum("nfa,nf,nk->fka", d_o, y, r),
+                jnp.einsum("nkl,nf,nk->fkl", Ey_d_h, y, r),
+            ],
+            axis=-1,
+        )
+    else:
+        sxx = jnp.einsum("nfa,nfb,nk->fkab", d_o, d_o, r)
+        sxy = jnp.einsum("nfa,nf,nk->fka", d_o, y, r)
+    syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
+    nw = jnp.broadcast_to(counts[None], syy.shape)
+
+    dmask = design_mask(cp)
+    live = 1.0 if lay.F > 0 else 0.0  # inert regression block for pure-discrete
+    sxx = sxx * dmask[:, None, :, None] * dmask[:, None, None, :] * live
+    sxy = sxy * dmask[:, None, :] * live
+    reg_stats = ef.RegSuffStats(sxx=sxx, sxy=sxy, syy=syy * live, n=nw * live)
+
+    if lay.Fd > 0:
+        onehot = jax.nn.one_hot(xd.astype(jnp.int32), lay.C)     # [N, Fd, C]
+        disc_counts = jnp.einsum("nfc,nk->fkc", onehot, r) * cp.card_mask[:, None, :]
+    else:
+        disc_counts = jnp.zeros((1, K, lay.C))
+
+    # local ELBO: sum_n [ sum_k r (logits) + H(r) ] with masked instances 0
+    ent = ef.categorical_entropy(logr) * mask
+    local_elbo = (r * logits).sum() + ent.sum()
+
+    stats = PlateStats(
+        counts=counts, reg=reg_stats, disc=disc_counts,
+        n=mask.sum(), local_elbo=local_elbo,
+    )
+    return stats, r
+
+
+# ---------------------------------------------------------------------------
+# Global step — conjugate update, Bayesian updating Eq. (3)
+# ---------------------------------------------------------------------------
+
+
+def global_update(prior: PlateParams, stats: PlateStats) -> PlateParams:
+    """posterior natural params = prior natural params + summed messages."""
+    mix = ef.dirichlet_update(prior.mix, stats.counts)
+    reg = ef.mvnormalgamma_update(prior.reg, stats.reg)
+    disc = ef.Dirichlet(prior.disc.alpha + stats.disc)
+    return PlateParams(mix=mix, reg=reg, disc=disc)
+
+
+def global_kl(q: PlateParams, p: PlateParams, lay: PlateLayout) -> jnp.ndarray:
+    kl = ef.dirichlet_kl(q.mix, p.mix)
+    kl = kl + ef.mvnormalgamma_kl(q.reg, p.reg).sum()
+    if lay.Fd > 0:
+        # guard: padded categories have alpha ~ 0 in both q and p -> kl 0
+        kl = kl + ef.dirichlet_kl(
+            ef.Dirichlet(q.disc.alpha + 1e-12), ef.Dirichlet(p.disc.alpha + 1e-12)
+        ).sum()
+    return kl
+
+
+def elbo(cp: CompiledPlate, prior: PlateParams, post: PlateParams,
+         stats: PlateStats) -> jnp.ndarray:
+    """ELBO of the current (q(theta), q(Z), q(H)) triple.
+
+    Uses the standard CAVI identity: local terms were computed against the
+    *current* q(theta); the global penalty is KL(q(theta) || p(theta)) minus
+    the correction for re-scoring expected-suff-stat terms, which cancels at
+    the CAVI fixed point; we report local_elbo - KL (a valid lower bound
+    surrogate whose monotonicity we test).
+    """
+    return stats.local_elbo - global_kl(post, prior, cp.layout)
+
+
+# ---------------------------------------------------------------------------
+# Batch VMP fit — lax.while_loop sweeps to convergence
+# ---------------------------------------------------------------------------
+
+
+class VMPState(NamedTuple):
+    post: PlateParams
+    elbo: jnp.ndarray
+    delta: jnp.ndarray
+    sweep: jnp.ndarray
+
+
+@partial(jax.jit, static_argnums=(0, 5, 6))
+def vmp_fit(cp: CompiledPlate, prior: PlateParams, init: PlateParams,
+            xc: jnp.ndarray, xd: jnp.ndarray,
+            max_sweeps: int = 100, tol: float = 1e-4) -> VMPState:
+    """Run VMP sweeps on one (device-local) data set until ELBO converges."""
+    mask = jnp.ones(xc.shape[0])
+
+    def sweep(state: VMPState) -> VMPState:
+        stats, _ = local_step(cp, state.post, xc, xd, mask)
+        post = global_update(prior, stats)
+        e = elbo(cp, prior, post, stats)
+        return VMPState(post=post, elbo=e,
+                        delta=jnp.abs(e - state.elbo), sweep=state.sweep + 1)
+
+    def cond(state: VMPState):
+        return jnp.logical_and(
+            state.sweep < max_sweeps,
+            state.delta > tol * (jnp.abs(state.elbo) + 1.0),
+        )
+
+    state0 = VMPState(post=init, elbo=jnp.asarray(-jnp.inf),
+                      delta=jnp.asarray(jnp.inf), sweep=jnp.asarray(0))
+    # one unconditional sweep, then loop
+    state1 = sweep(state0)
+    return jax.lax.while_loop(cond, sweep, state1)
+
+
+# ---------------------------------------------------------------------------
+# Posterior inference in the learnt model (paper §3.4, VMP as inference)
+# ---------------------------------------------------------------------------
+
+
+def posterior_z(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
+                xd: jnp.ndarray) -> jnp.ndarray:
+    """q(Z | x) for a batch — the paper's getPosterior(HiddenVar)."""
+    mask = jnp.ones(xc.shape[0])
+    _, r = local_step(cp, params, xc, xd, mask)
+    return r

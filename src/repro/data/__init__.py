@@ -1,0 +1,7 @@
+"""Data substrate — the paper's ``datastream`` module, JAX-side.
+
+``stream``      bounded-memory DataStream over continuous+discrete columns
+``synthetic``   generators for every experiment (GMM, drift, HMM, regression)
+``io``          ARFF-style text and npz round-trip
+``tokens``      LM token pipeline for the assigned architectures
+"""

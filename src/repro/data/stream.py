@@ -1,0 +1,174 @@
+"""DataStream — paper §3.1 (``eu.amidst.core.datastream``).
+
+A ``DataStream`` presents data as a sequence of fixed-shape batches
+``Batch(xc, xd, mask)`` without ever materializing more than one batch —
+the paper's "process the data sequentially without having to load all
+observations into main memory".  Static data sets, generator-backed streams
+and concatenations all share the interface, so learning code is agnostic
+(paper: "the code for learning a model is independent of the processing
+environment").
+
+For the distributed case (`dvmp`), :meth:`sharded_batches` pads the batch to
+a multiple of the data-mesh size; the launcher places shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+REAL = "REAL"
+FINITE = "FINITE_SET"
+
+
+@dataclasses.dataclass(frozen=True)
+class Attribute:
+    name: str
+    kind: str          # REAL | FINITE_SET
+    card: int = 0      # for FINITE_SET
+
+    def __str__(self) -> str:
+        return f"{self.name} {self.kind}"
+
+
+class Batch(NamedTuple):
+    xc: jnp.ndarray    # [B, F]  continuous columns
+    xd: jnp.ndarray    # [B, Fd] discrete columns (int32)
+    mask: jnp.ndarray  # [B]     1.0 = real instance, 0.0 = padding
+
+
+class DataStream:
+    """A (possibly unbounded) stream of instances with fixed attributes."""
+
+    def __init__(
+        self,
+        attributes: Sequence[Attribute],
+        source: Callable[[], Iterator[Tuple[np.ndarray, np.ndarray]]],
+        n_instances: Optional[int] = None,
+    ) -> None:
+        self.attributes = list(attributes)
+        self._source = source
+        self.n_instances = n_instances
+        self.cont_idx = [i for i, a in enumerate(self.attributes) if a.kind == REAL]
+        self.disc_idx = [i for i, a in enumerate(self.attributes) if a.kind == FINITE]
+
+    # -- constructors ---------------------------------------------------------
+
+    @staticmethod
+    def from_arrays(attributes: Sequence[Attribute], xc: np.ndarray,
+                    xd: Optional[np.ndarray] = None) -> "DataStream":
+        xc = np.asarray(xc, np.float32)
+        if xd is None:
+            xd = np.zeros((xc.shape[0], 0), np.int32)
+        xd = np.asarray(xd, np.int32)
+
+        def src():
+            yield xc, xd
+
+        return DataStream(attributes, src, n_instances=xc.shape[0])
+
+    @staticmethod
+    def concat(streams: Sequence["DataStream"]) -> "DataStream":
+        def src():
+            for s in streams:
+                yield from s._source()
+
+        n = None
+        if all(s.n_instances is not None for s in streams):
+            n = sum(s.n_instances for s in streams)
+        return DataStream(streams[0].attributes, src, n_instances=n)
+
+    # -- iteration --------------------------------------------------------------
+
+    def batches(self, batch_size: int) -> Iterator[Batch]:
+        """Fixed-shape batches; the ragged tail is zero-padded and masked."""
+        buf_c: List[np.ndarray] = []
+        buf_d: List[np.ndarray] = []
+        have = 0
+        F, Fd = len(self.cont_idx), len(self.disc_idx)
+        for xc, xd in self._source():
+            buf_c.append(xc); buf_d.append(xd); have += xc.shape[0]
+            while have >= batch_size:
+                cc = np.concatenate(buf_c) if len(buf_c) > 1 else buf_c[0]
+                dd = np.concatenate(buf_d) if len(buf_d) > 1 else buf_d[0]
+                out_c, rest_c = cc[:batch_size], cc[batch_size:]
+                out_d, rest_d = dd[:batch_size], dd[batch_size:]
+                buf_c, buf_d, have = [rest_c], [rest_d], rest_c.shape[0]
+                yield Batch(jnp.asarray(out_c), jnp.asarray(out_d),
+                            jnp.ones(batch_size, jnp.float32))
+        if have > 0:
+            cc = np.concatenate(buf_c) if len(buf_c) > 1 else buf_c[0]
+            dd = np.concatenate(buf_d) if len(buf_d) > 1 else buf_d[0]
+            pad = batch_size - have
+            out_c = np.concatenate([cc, np.zeros((pad, F), np.float32)])
+            out_d = np.concatenate([dd, np.zeros((pad, Fd), np.int32)])
+            mask = np.concatenate([np.ones(have, np.float32),
+                                   np.zeros(pad, np.float32)])
+            yield Batch(jnp.asarray(out_c), jnp.asarray(out_d), jnp.asarray(mask))
+
+    def sharded_batches(self, batch_size: int, n_shards: int) -> Iterator[Batch]:
+        """Batches whose leading dim divides the data-mesh size."""
+        if batch_size % n_shards:
+            batch_size = ((batch_size // n_shards) + 1) * n_shards
+        yield from self.batches(batch_size)
+
+    # -- whole-stream collection (small data only; used by batch VMP fit) ------
+
+    def collect(self, limit: Optional[int] = None) -> Batch:
+        cs, ds, n = [], [], 0
+        for xc, xd in self._source():
+            cs.append(xc); ds.append(xd); n += xc.shape[0]
+            if limit and n >= limit:
+                break
+        xc = np.concatenate(cs); xd = np.concatenate(ds)
+        if limit:
+            xc, xd = xc[:limit], xd[:limit]
+        return Batch(jnp.asarray(xc), jnp.asarray(xd),
+                     jnp.ones(xc.shape[0], jnp.float32))
+
+    def __str__(self) -> str:
+        return "\n".join(str(a) for a in self.attributes)
+
+
+# -- dynamic (sequence) data — paper §3.1 dynamic streams ----------------------
+
+
+class SequenceBatch(NamedTuple):
+    """[B, T, ...] sequence data with SEQUENCE_ID/TIME_ID semantics."""
+
+    xc: jnp.ndarray    # [B, T, F]
+    xd: jnp.ndarray    # [B, T, Fd]
+    mask: jnp.ndarray  # [B, T]
+
+
+class DynamicDataStream:
+    """Sequences of equal length T (ragged sequences are right-padded)."""
+
+    def __init__(self, attributes: Sequence[Attribute], xc: np.ndarray,
+                 xd: Optional[np.ndarray] = None,
+                 mask: Optional[np.ndarray] = None) -> None:
+        self.attributes = list(attributes)
+        self.xc = np.asarray(xc, np.float32)           # [S, T, F]
+        self.xd = (np.asarray(xd, np.int32) if xd is not None
+                   else np.zeros(self.xc.shape[:2] + (0,), np.int32))
+        self.mask = (np.asarray(mask, np.float32) if mask is not None
+                     else np.ones(self.xc.shape[:2], np.float32))
+
+    def batches(self, batch_size: int) -> Iterator[SequenceBatch]:
+        S = self.xc.shape[0]
+        for i in range(0, S, batch_size):
+            sl = slice(i, i + batch_size)
+            xc, xd, m = self.xc[sl], self.xd[sl], self.mask[sl]
+            pad = batch_size - xc.shape[0]
+            if pad:
+                xc = np.concatenate([xc, np.zeros((pad,) + xc.shape[1:], xc.dtype)])
+                xd = np.concatenate([xd, np.zeros((pad,) + xd.shape[1:], xd.dtype)])
+                m = np.concatenate([m, np.zeros((pad,) + m.shape[1:], m.dtype)])
+            yield SequenceBatch(jnp.asarray(xc), jnp.asarray(xd), jnp.asarray(m))
+
+    def collect(self) -> SequenceBatch:
+        return SequenceBatch(jnp.asarray(self.xc), jnp.asarray(self.xd),
+                             jnp.asarray(self.mask))

@@ -1,0 +1,135 @@
+"""Synthetic data generators for every experiment in EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.data.stream import Attribute, DataStream, DynamicDataStream, REAL, FINITE
+
+
+def gmm_stream(n: int, k: int, f: int, seed: int = 0, sep: float = 4.0,
+               noise: float = 0.7) -> Tuple[DataStream, np.ndarray, np.ndarray]:
+    """K-component diagonal GMM; returns (stream, true_means, labels)."""
+    rng = np.random.default_rng(seed)
+    means = rng.uniform(-sep, sep, size=(k, f)).astype(np.float32)
+    z = rng.integers(0, k, size=n)
+    x = means[z] + noise * rng.standard_normal((n, f)).astype(np.float32)
+    attrs = [Attribute(f"GaussianVar{i}", REAL) for i in range(f)]
+    return DataStream.from_arrays(attrs, x), means, z
+
+
+def drift_stream(n_per_phase: int, f: int, seed: int = 0
+                 ) -> Tuple[DataStream, int]:
+    """Two-phase stream with an abrupt mean shift (concept drift) halfway."""
+    rng = np.random.default_rng(seed)
+    mu1 = rng.uniform(-2, 2, f).astype(np.float32)
+    mu2 = mu1 + 6.0
+    x1 = mu1 + rng.standard_normal((n_per_phase, f)).astype(np.float32)
+    x2 = mu2 + rng.standard_normal((n_per_phase, f)).astype(np.float32)
+    attrs = [Attribute(f"GaussianVar{i}", REAL) for i in range(f)]
+    x = np.concatenate([x1, x2])
+    return DataStream.from_arrays(attrs, x), n_per_phase
+
+
+def nb_stream(n: int, classes: int, f_cont: int, f_disc: int, card: int = 3,
+              seed: int = 0) -> Tuple[DataStream, np.ndarray]:
+    """Naive-Bayes data: class -> continuous + discrete children."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, classes, n)
+    means = rng.uniform(-3, 3, (classes, f_cont)).astype(np.float32)
+    xc = means[y] + 0.8 * rng.standard_normal((n, f_cont)).astype(np.float32)
+    tables = rng.dirichlet(np.ones(card) * 0.5, size=(classes, f_disc))
+    xd = np.stack(
+        [[rng.choice(card, p=tables[y[i], j]) for j in range(f_disc)]
+         for i in range(n)]
+    ).astype(np.int32)
+    attrs = ([Attribute(f"G{i}", REAL) for i in range(f_cont)]
+             + [Attribute(f"D{i}", FINITE, card) for i in range(f_disc)]
+             + [Attribute("Class", FINITE, classes)])
+    xd_full = np.concatenate([xd, y[:, None].astype(np.int32)], axis=1)
+    return DataStream.from_arrays(attrs, xc, xd_full), y
+
+
+def regression_stream(n: int, d: int, seed: int = 0, noise: float = 0.5
+                      ) -> Tuple[DataStream, np.ndarray]:
+    """Bayesian-linear-regression data: y = w^T x + b + eps."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal(d).astype(np.float32)
+    b = 0.7
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = x @ w + b + noise * rng.standard_normal(n).astype(np.float32)
+    attrs = ([Attribute(f"X{i}", REAL) for i in range(d)]
+             + [Attribute("Y", REAL)])
+    return (DataStream.from_arrays(attrs, np.concatenate([x, y[:, None]], 1)),
+            np.concatenate([w, [b]]).astype(np.float32))
+
+
+def fa_stream(n: int, f: int, l: int, seed: int = 0, noise: float = 0.3
+              ) -> Tuple[DataStream, np.ndarray]:
+    """Factor-analysis data: x = W h + mu + eps, h ~ N(0, I_l)."""
+    rng = np.random.default_rng(seed)
+    W = rng.standard_normal((f, l)).astype(np.float32)
+    mu = rng.uniform(-1, 1, f).astype(np.float32)
+    h = rng.standard_normal((n, l)).astype(np.float32)
+    x = h @ W.T + mu + noise * rng.standard_normal((n, f)).astype(np.float32)
+    attrs = [Attribute(f"X{i}", REAL) for i in range(f)]
+    return DataStream.from_arrays(attrs, x), W
+
+
+def hmm_sequences(s: int, t: int, states: int, f: int, seed: int = 0
+                  ) -> Tuple[DynamicDataStream, np.ndarray, np.ndarray, np.ndarray]:
+    """Gaussian-emission HMM sequences; returns stream + true params."""
+    rng = np.random.default_rng(seed)
+    trans = rng.dirichlet(np.ones(states) * 0.3, size=states)
+    # make transitions sticky so states are identifiable
+    trans = 0.2 * trans + 0.8 * np.eye(states)
+    init = np.ones(states) / states
+    means = (np.arange(states)[:, None] * 4.0
+             + rng.uniform(-1, 1, (states, f))).astype(np.float32)
+    xs = np.zeros((s, t, f), np.float32)
+    zs = np.zeros((s, t), np.int64)
+    for i in range(s):
+        z = rng.choice(states, p=init)
+        for j in range(t):
+            zs[i, j] = z
+            xs[i, j] = means[z] + 0.5 * rng.standard_normal(f)
+            z = rng.choice(states, p=trans[z])
+    attrs = [Attribute(f"G{i}", REAL) for i in range(f)]
+    return DynamicDataStream(attrs, xs), trans.astype(np.float32), means, zs
+
+
+def lds_sequences(s: int, t: int, dim_h: int, f: int, seed: int = 0
+                  ) -> Tuple[DynamicDataStream, np.ndarray, np.ndarray]:
+    """Linear dynamical system: h_t = A h_{t-1} + w, x_t = C h_t + v."""
+    rng = np.random.default_rng(seed)
+    # stable A
+    A = rng.standard_normal((dim_h, dim_h)) * 0.3
+    A = 0.9 * A / np.abs(np.linalg.eigvals(A)).max()  # spectral radius 0.9
+    C = rng.standard_normal((f, dim_h)).astype(np.float32)
+    xs = np.zeros((s, t, f), np.float32)
+    for i in range(s):
+        h = rng.standard_normal(dim_h)
+        for j in range(t):
+            h = A @ h + 0.3 * rng.standard_normal(dim_h)
+            xs[i, j] = C @ h + 0.2 * rng.standard_normal(f)
+    attrs = [Attribute(f"G{i}", REAL) for i in range(f)]
+    return DynamicDataStream(attrs, xs), A.astype(np.float32), C
+
+
+def lda_corpus(n_docs: int, vocab: int, topics: int, doc_len: int = 80,
+               seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Bag-of-words corpus from an LDA generative model.
+
+    Returns (counts [n_docs, vocab], true_topics [topics, vocab])."""
+    rng = np.random.default_rng(seed)
+    beta = rng.dirichlet(np.ones(vocab) * 0.1, size=topics)
+    counts = np.zeros((n_docs, vocab), np.float32)
+    for d in range(n_docs):
+        theta = rng.dirichlet(np.ones(topics) * 0.3)
+        zs = rng.choice(topics, size=doc_len, p=theta)
+        for z in zs:
+            w = rng.choice(vocab, p=beta[z])
+            counts[d, w] += 1
+    return counts, beta.astype(np.float32)

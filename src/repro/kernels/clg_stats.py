@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the VMP E-step hot loop: CLG expected suff stats.
+
+This is the paper's own compute kernel (DESIGN.md §6): for every continuous
+leaf f and mixture component k, d-VMP reduces over (potentially millions
+of) instances
+
+    sxx[f,k] = sum_n r[n,k] d[n,f,:] d[n,f,:]^T      [D, D]
+    sxy[f,k] = sum_n r[n,k] d[n,f,:] y[n,f]          [D]
+    syy[f,k] = sum_n r[n,k] y[n,f]^2                 []
+
+TPU mapping: grid (F, K, n_instance_blocks) with the instance dim minor
+(sequential), accumulating the [D, D] tile in VMEM scratch; the inner
+products are [D, bn] x [bn, D] MXU matmuls.  The per-shard result is the
+psum payload of dvmp (one message pytree per sweep).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(d_ref, y_ref, r_ref, sxx_ref, sxy_ref, syy_ref,
+            sxx_scr, sxy_scr, syy_scr, *, nb: int):
+    bi = pl.program_id(2)
+
+    @pl.when(bi == 0)
+    def _init():
+        sxx_scr[...] = jnp.zeros_like(sxx_scr)
+        sxy_scr[...] = jnp.zeros_like(sxy_scr)
+        syy_scr[...] = jnp.zeros_like(syy_scr)
+
+    d = d_ref[0].astype(jnp.float32)          # [bn, D]
+    y = y_ref[0].astype(jnp.float32)          # [bn]
+    r = r_ref[0].astype(jnp.float32)          # [bn]  (component k's column)
+
+    dw = d * r[:, None]                       # [bn, D]
+    sxx_scr[...] += jax.lax.dot_general(
+        dw, d, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [D, D]
+    sxy_scr[...] += (dw * y[:, None]).sum(0)  # [D]
+    syy_scr[0] += (r * y * y).sum()
+
+    @pl.when(bi == nb - 1)
+    def _final():
+        sxx_ref[0, 0] = sxx_scr[...]
+        sxy_ref[0, 0] = sxy_scr[...]
+        syy_ref[0, 0] = syy_scr[0]
+
+
+def clg_suffstats(d: jnp.ndarray, y: jnp.ndarray, r: jnp.ndarray, *,
+                  block: int = 512, interpret: bool = True
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """d: [N, F, D] design vectors; y: [N, F]; r: [N, K] responsibilities.
+
+    Returns (sxx [F, K, D, D], sxy [F, K, D], syy [F, K]) — the RegSuffStats
+    triple of repro.core.expfam (oracle: kernels.ref.clg_suffstats_ref).
+    """
+    N, F, D = d.shape
+    K = r.shape[1]
+    block = min(block, N)
+    nb = pl.cdiv(N, block)
+    pad = nb * block - N
+    if pad:
+        d = jnp.pad(d, ((0, pad), (0, 0), (0, 0)))
+        y = jnp.pad(y, ((0, pad), (0, 0)))
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+
+    # feature-major layouts
+    df = jnp.moveaxis(d, 1, 0)                # [F, N, D]
+    yf = jnp.moveaxis(y, 1, 0)                # [F, N]
+    rk = jnp.moveaxis(r, 1, 0)                # [K, N]
+
+    sxx, sxy, syy = pl.pallas_call(
+        functools.partial(_kernel, nb=nb),
+        grid=(F, K, nb),
+        in_specs=[
+            pl.BlockSpec((1, block, D), lambda f, k, bi: (f, bi, 0)),
+            pl.BlockSpec((1, block), lambda f, k, bi: (f, bi)),
+            pl.BlockSpec((1, block), lambda f, k, bi: (k, bi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, D, D), lambda f, k, bi: (f, k, 0, 0)),
+            pl.BlockSpec((1, 1, D), lambda f, k, bi: (f, k, 0)),
+            pl.BlockSpec((1, 1), lambda f, k, bi: (f, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((F, K, D, D), jnp.float32),
+            jax.ShapeDtypeStruct((F, K, D), jnp.float32),
+            jax.ShapeDtypeStruct((F, K), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),
+            pltpu.VMEM((D,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(df, yf, rk)
+    return sxx, sxy, syy

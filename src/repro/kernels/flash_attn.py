@@ -1,0 +1,135 @@
+"""Pallas TPU flash-attention kernel (GQA, causal, sliding-window).
+
+TPU adaptation (DESIGN.md §6): q/k/v blocks live in VMEM; the grid is
+(batch*q_heads, q_blocks, kv_blocks) with the kv dimension iterated
+sequentially (TPU grid semantics), so the streaming-softmax accumulators
+(m, l, acc) persist in VMEM scratch across kv steps — the same recurrence
+as ``nn.attention.attention_blockwise`` but with explicit tiling:
+
+  * block shapes (BQ, D) / (BK, D) with BQ=BK=128 and D the head dim —
+    the QK^T and PV matmuls are [128, D] x [D, 128] / [128, 128] x
+    [128, D]: MXU-aligned for every assigned head_dim (64..256).
+  * causal + sliding-window masking via iota comparison inside the block;
+    fully-masked kv blocks are skipped with @pl.when (the TPU equivalent
+    of the CUDA early-exit).
+
+GQA is handled in the index maps: q head h reads kv head h % Hkv
+(the framework's G-major fold), so K/V are never materialized per-q-head.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            bq: int, bk: int, nk: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # skip kv blocks entirely above the causal diagonal / below the window
+    run = jnp.asarray(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, D]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, D]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [bq,bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < seq_k
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window is not None:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]                               # [bq]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, bq: int = 128,
+                    bk: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, Hq, D].
+
+    G-major GQA: q head h uses kv head h % Hkv (matches nn.attention).
+    ``interpret=True`` runs the kernel body in python on CPU (this
+    container); on TPU pass interpret=False.
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    scale = scale or 1.0 / math.sqrt(D)
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    nq = pl.cdiv(Sq, bq)
+    nk = pl.cdiv(Sk, bk)
+    # layout: heads major so blocks are [1, bq, D] contiguous per (b, h)
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * Hq, Sq, D)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, Sk, D)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, Sk, D)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b = bh // Hq
+        h = bh % Hq
+        return (b * Hkv + h % Hkv, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, nk=nk, seq_k=Sk),
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), q_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return jnp.moveaxis(out.reshape(B, Hq, Sq, D), 1, 2)

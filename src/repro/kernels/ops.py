@@ -1,0 +1,35 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (python
+semantics of the same kernel body); on TPU set
+``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1).
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from repro.kernels.clg_stats import clg_suffstats as _clg
+from repro.kernels.flash_attn import flash_attention as _flash
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128):
+    return _flash(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                  interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, chunk=128):
+    return _ssd(x, dt, A, B, C, chunk, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def clg_suffstats(d, y, r, *, block=512):
+    return _clg(d, y, r, block=block, interpret=INTERPRET)

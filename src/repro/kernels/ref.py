@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.nn.attention import attention_reference
+from repro.nn.ssm import ssd_chunked
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """Oracle for kernels.flash_attn.flash_attention."""
+    return attention_reference(q, k, v, causal=causal, window=window,
+                               scale=scale)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk):
+    """Oracle for kernels.ssd_scan.ssd_scan (the XLA SSD path)."""
+    return ssd_chunked(x, dt, A, B, C, chunk)
+
+
+def clg_suffstats_ref(d: jnp.ndarray, y: jnp.ndarray, r: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels.clg_stats.clg_suffstats."""
+    sxx = jnp.einsum("nfd,nfe,nk->fkde", d, d, r)
+    sxy = jnp.einsum("nfd,nf,nk->fkd", d, y, r)
+    syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
+    return sxx, sxy, syy

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunk pass.
+
+TPU adaptation (DESIGN.md §6): one grid step processes one (batch*head,
+chunk) tile entirely in VMEM — the intra-chunk quadratic term (two
+[l, l] x [l, P/N] MXU matmuls), the chunk-state summary, and the
+inter-chunk recurrence, whose running state [P, N] persists in VMEM
+scratch across the sequentially-iterated chunk grid dimension.  This fuses
+what the XLA path (nn.ssm.ssd_chunked) does in five einsums + a lax.scan,
+eliminating the HBM round-trips of the intermediate [b,nc,l,l,H] decay
+tensors — the kernel's working set is O(l^2 + l(P+N)) per step.
+
+Grid: (B*H, n_chunks), chunk minor (sequential). Chunk length l and state
+N are the TPU-aligned tile dims (l=chunk from the config, N=64/128).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hfin_ref, h_scr, *,
+            l: int, nchunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)       # [l, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)     # [l]
+    A = a_ref[0]                              # scalar (>0; decay = exp(-A dt))
+    B = b_ref[0, 0].astype(jnp.float32)       # [l, N]
+    C = c_ref[0, 0].astype(jnp.float32)       # [l, N]
+
+    dA = -A * dt                              # [l] negative log-decays
+    cum = jnp.cumsum(dA)                      # [l]
+    total = cum[-1]
+    xd = x * dt[:, None]                      # [l, P]
+
+    # intra-chunk: (C B^T ⊙ decay-mask) @ xd — two MXU matmuls
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [l,l]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    y = jax.lax.dot_general(scores * decay, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # [l,P]
+
+    # inter-chunk: contribution of the carried state
+    h = h_scr[...]                            # [P, N]
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # chunk state summary + recurrence
+    w = jnp.exp(total - cum)[:, None] * B     # [l, N]
+    state = jax.lax.dot_general(xd, w, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)   # [P,N]
+    h_scr[...] = h * jnp.exp(total) + state
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nchunks - 1)
+    def _final():
+        hfin_ref[0] = h_scr[...].astype(hfin_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+             interpret: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [b, S, H, P]; dt: [b, S, H]; A: [H]; B/C: [b, S, G, N].
+
+    Returns (y [b, S, H, P], final state [b, H, P, N]). Matches
+    ``nn.ssm.ssd_chunked`` (the oracle) — tested in interpret mode.
+    """
+    b, S, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0
+    nc = S // chunk
+    rep = H // G
+
+    # head-major layouts: [b*H, nc, l, ...]
+    xh = jnp.moveaxis(x, 2, 1).reshape(b * H, nc, chunk, Pd)
+    dth = jnp.moveaxis(dt, 2, 1).reshape(b * H, nc, chunk)
+    Ah = jnp.tile(A, b)                                     # [b*H]
+    Bh = jnp.moveaxis(B, 2, 1).reshape(b * G, nc, chunk, N)
+    Ch = jnp.moveaxis(C, 2, 1).reshape(b * G, nc, chunk, N)
+
+    def x_map(bh, ci):
+        return (bh, ci, 0, 0)
+
+    def dt_map(bh, ci):
+        return (bh, ci, 0)
+
+    def a_map(bh, ci):
+        return (bh,)
+
+    def bc_map(bh, ci):
+        bb = bh // H
+        h = bh % H
+        return (bb * G + h // rep, ci, 0, 0)
+
+    def hfin_map(bh, ci):
+        return (bh, 0, 0)
+
+    y, hfin = pl.pallas_call(
+        functools.partial(_kernel, l=chunk, nchunks=nc),
+        grid=(b * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, Pd), x_map),
+            pl.BlockSpec((1, 1, chunk), dt_map),
+            pl.BlockSpec((1,), a_map),
+            pl.BlockSpec((1, 1, chunk, N), bc_map),
+            pl.BlockSpec((1, 1, chunk, N), bc_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, Pd), x_map),
+            pl.BlockSpec((1, Pd, N), hfin_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * H, nc, chunk, Pd), x.dtype),
+            jax.ShapeDtypeStruct((b * H, Pd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Pd, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, Ah, Bh, Ch)
+    y = jnp.moveaxis(y.reshape(b, H, S, Pd), 1, 2)
+    return y, hfin.reshape(b, H, Pd, N)

@@ -1,0 +1,31 @@
+"""Production mesh — (2 pods x) 16 x 16 TPU v5e chips.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS before first init.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes_of(mesh) -> Tuple[str, ...]:
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host devices (tests / CPU examples)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

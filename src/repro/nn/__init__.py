@@ -1,0 +1,8 @@
+"""Neural substrate for the assigned architectures (DESIGN.md §3).
+
+Pure-functional JAX: parameters are nested dicts of jnp arrays created by
+``init_*`` functions and consumed by ``apply``-style functions.  Sharding is
+attached externally (``repro.sharding.specs``) as a matching PartitionSpec
+tree — the module code is mesh-agnostic except for the explicit shard_map
+island in ``moe.py`` (expert parallelism) — see DESIGN.md §5.
+"""

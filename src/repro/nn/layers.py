@@ -1,0 +1,140 @@
+"""Common layers: norms, embeddings, RoPE, gated MLPs.
+
+Dtype policy (applies framework-wide): parameters live in ``param_dtype``
+(fp32 for training, bf16 for serving); matmuls run in bf16; normalization
+statistics, softmax and residual accumulation run in fp32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+def he_init(key, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(fan_in))
+
+
+# -- RMSNorm -------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- LayerNorm (whisper) ---------------------------------------------------------
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- Embedding -------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: Params, ids: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits in fp32 (loss numerics)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.bfloat16),
+                      p["table"].astype(jnp.bfloat16)).astype(jnp.float32)
+
+
+# -- RoPE -------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)                     # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                    # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -- learned absolute positions (whisper) -------------------------------------------
+
+
+def init_pos_embedding(key, max_len: int, d: int, dtype=jnp.float32) -> Params:
+    return {"pos": jax.random.normal(key, (max_len, d), dtype) * 0.01}
+
+
+def add_pos(p: Params, x: jnp.ndarray, offset=0) -> jnp.ndarray:
+    S = x.shape[-2]
+    pos = jax.lax.dynamic_slice_in_dim(p["pos"], offset, S, 0) \
+        if isinstance(offset, int) and offset == 0 else \
+        jax.lax.dynamic_slice_in_dim(p["pos"], offset, S, 0)
+    return x + pos.astype(x.dtype)
+
+
+# -- MLPs ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, ff: int, kind: str, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": he_init(k1, (d, ff), d, dtype),
+            "w_up": he_init(k2, (d, ff), d, dtype),
+            "w_down": he_init(k3, (ff, d), ff, dtype),
+        }
+    return {   # plain gelu (whisper)
+        "w_up": he_init(k1, (d, ff), d, dtype),
+        "b_up": jnp.zeros((ff,), dtype),
+        "w_down": he_init(k2, (ff, d), ff, dtype),
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    xb = x.astype(jnp.bfloat16)
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        g = act(xb @ p["w_gate"].astype(jnp.bfloat16))
+        u = xb @ p["w_up"].astype(jnp.bfloat16)
+        # bf16 down-proj output -> bf16 TP all-reduce (§Perf change A)
+        return jnp.einsum("...f,fd->...d", g * u,
+                          p["w_down"].astype(jnp.bfloat16),
+                          preferred_element_type=jnp.bfloat16
+                          ).astype(x.dtype)
+    h = jax.nn.gelu(xb @ p["w_up"].astype(jnp.bfloat16)
+                    + p["b_up"].astype(jnp.bfloat16), approximate=True)
+    return (h @ p["w_down"].astype(jnp.bfloat16)
+            + p["b_down"].astype(jnp.bfloat16)).astype(x.dtype)

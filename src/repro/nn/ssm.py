@@ -1,0 +1,243 @@
+"""Mamba2 SSD (state-space duality) block — arXiv:2405.21060, TPU-adapted.
+
+The SSD recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+                    y_t = C_t^T h_t + D x_t
+is computed in *chunked* form (the paper's SSD algorithm):
+
+  * intra-chunk: quadratic "attention-like" term (C B^T ⊙ decay mask) @ x —
+    dense [chunk x chunk] matmuls that map straight onto the MXU;
+  * inter-chunk: per-chunk summarized states passed through a
+    ``jax.lax.scan`` (sequential over S/chunk steps, parallel over batch,
+    heads and state — this is the recurrent-scan sharding surface).
+
+TPU-sharding note (a deliberate deviation from the reference CUDA impl):
+the original fuses [z|x|B|C|dt] into ONE in_proj; we keep SEPARATE
+projections so that head-indexed tensors (z, x, dt) can shard over the
+'model' axis while the tiny B/C/dt group tensors stay replicated — the SSD
+scan then runs with ZERO cross-chip communication; only w_out's contraction
+psums (DESIGN.md §5/§7).
+
+Decode: O(1) single-step state update (``ssd_decode_step``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.nn.layers import he_init, rmsnorm
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_mamba2(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> Params:
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    G, N = cfg.n_groups, cfg.state_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": he_init(ks[0], (d_model, d_in), d_model, dtype),
+        "w_x": he_init(ks[1], (d_model, d_in), d_model, dtype),
+        "w_B": he_init(ks[2], (d_model, G * N), d_model, dtype),
+        "w_C": he_init(ks[3], (d_model, G * N), d_model, dtype),
+        "w_dt": he_init(ks[4], (d_model, H), d_model, dtype),
+        "conv_x": he_init(ks[5], (cfg.conv_width, d_in), cfg.conv_width, dtype),
+        "conv_b_x": jnp.zeros((d_in,), dtype),
+        "conv_bc": he_init(ks[6], (cfg.conv_width, 2 * G * N), cfg.conv_width,
+                           dtype),
+        "conv_b_bc": jnp.zeros((2 * G * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),  # [H]
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(dtype),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "w_out": he_init(ks[7], (d_in, d_model), d_in, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d. x: [B, S, C]; w: [W, C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i: i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state."""
+
+    h: jnp.ndarray           # [B, H, P, N]
+    conv_x: jnp.ndarray      # [B, W-1, d_in] trailing x inputs
+    conv_bc: jnp.ndarray     # [B, W-1, 2*G*N] trailing B/C inputs
+
+
+def init_ssm_state(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype=jnp.float32) -> SSMState:
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    return SSMState(
+        h=jnp.zeros((batch, H, cfg.head_dim, cfg.state_dim), dtype),
+        conv_x=jnp.zeros((batch, cfg.conv_width - 1, d_in), dtype),
+        conv_bc=jnp.zeros((batch, cfg.conv_width - 1,
+                           2 * cfg.n_groups * cfg.state_dim), dtype),
+    )
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+                h0: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan. x: [b, S, H, P]; dt: [b, S, H] (>0); A: [H] (>0, used as -A);
+    B, C: [b, S, G, N]. Returns (y [b, S, H, P], final state [b, H, P, N])."""
+    b, S, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    # fold dt into x (the "discretized" input) and compute log-decays
+    dA = dt * (-A)[None, None, :]                  # [b, S, H] (negative)
+    xd = x * dt[..., None]
+    # chunk views
+    xc = xd.reshape(b, nc, chunk, H, Pd)
+    Bc = B.reshape(b, nc, chunk, G, N)
+    Cc = C.reshape(b, nc, chunk, G, N)
+    dAc = dA.reshape(b, nc, chunk, H)
+    cum = jnp.cumsum(dAc, axis=2)                  # [b, nc, l, H]
+    total = cum[:, :, -1]                          # [b, nc, H]
+
+    # --- intra-chunk (quadratic, MXU-friendly) --------------------------------
+    # decay(i<-j) = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # [b,nc,i,j,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores[i, j] = C_i . B_j  (per group) -> expand to heads
+    scores = jnp.einsum("bnigd,bnjgd->bnijg", Cc, Bc)        # [b,nc,i,j,G]
+    scores = jnp.repeat(scores, rep, axis=-1)                # [b,nc,i,j,H]
+    y_intra = jnp.einsum("bnijh,bnijh,bnjhp->bnihp",
+                         scores, Lmat, xc)
+
+    # --- chunk state summaries --------------------------------------------------
+    # state_n = sum_j exp(total - cum_j) B_j x_j^T
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)       # [b,nc,l,H]
+    Bh = jnp.repeat(Bc, rep, axis=3)                         # [b,nc,l,H,N]
+    states = jnp.einsum("bnlh,bnlhe,bnlhp->bnhpe",
+                        decay_to_end, Bh, xc)                # [b,nc,H,P,N]
+
+    # --- inter-chunk scan --------------------------------------------------------
+    chunk_decay = jnp.exp(total)                             # [b, nc, H]
+
+    def step(h, inp):
+        st, dec = inp                                        # [b,H,P,N], [b,H]
+        h_prev = h
+        h = h * dec[..., None, None] + st
+        return h, h_prev
+
+    init = h0 if h0 is not None else jnp.zeros((b, H, Pd, N), x.dtype)
+    final, h_prevs = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # [b,nc,H,P,N]
+
+    # --- inter-chunk contribution: C_i decay-from-start @ h_prev ------------------
+    decay_from_start = jnp.exp(cum)                          # [b,nc,l,H]
+    Ch = jnp.repeat(Cc, rep, axis=3)                         # [b,nc,l,H,N]
+    y_inter = jnp.einsum("bnlh,bnlhe,bnhpe->bnlhp",
+                         decay_from_start, Ch, h_prevs)
+
+    y = (y_intra + y_inter).reshape(b, S, H, Pd)
+    return y, final
+
+
+def apply_mamba2(params: Params, x: jnp.ndarray, d_model: int,
+                 cfg: SSMConfig, eps: float = 1e-5) -> jnp.ndarray:
+    """Full Mamba2 block (prefill/train). x: [B, S, d_model]."""
+    b, S, _ = x.shape
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    G, N = cfg.n_groups, cfg.state_dim
+    xb = x.astype(jnp.bfloat16)
+    z = xb @ params["w_z"].astype(jnp.bfloat16)
+    xs = xb @ params["w_x"].astype(jnp.bfloat16)
+    BC = jnp.concatenate(
+        [xb @ params["w_B"].astype(jnp.bfloat16),
+         xb @ params["w_C"].astype(jnp.bfloat16)], -1)
+    dt = xb @ params["w_dt"].astype(jnp.bfloat16)
+    xs = _causal_conv(xs.astype(jnp.float32),
+                      params["conv_x"].astype(jnp.float32),
+                      params["conv_b_x"].astype(jnp.float32))
+    BC = _causal_conv(BC.astype(jnp.float32),
+                      params["conv_bc"].astype(jnp.float32),
+                      params["conv_b_bc"].astype(jnp.float32))
+    B, C = jnp.split(BC, 2, -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = jnp.exp(params["A_log"].astype(jnp.float32))         # [H] > 0
+    y, _ = ssd_chunked(
+        xs.reshape(b, S, H, cfg.head_dim),
+        dt, A,
+        B.reshape(b, S, G, N), C.reshape(b, S, G, N),
+        min(cfg.chunk, S),
+    )
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xs.reshape(b, S, H, cfg.head_dim)
+    y = y.reshape(b, S, d_in)
+    # gated RMSNorm (mamba2 style), then output projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm({"scale": params["norm_scale"]}, y, eps)
+    return jnp.einsum("...i,io->...o", y.astype(jnp.bfloat16),
+                      params["w_out"].astype(jnp.bfloat16),
+                      preferred_element_type=jnp.bfloat16).astype(x.dtype)
+
+
+def ssd_decode_step(params: Params, x: jnp.ndarray, state: SSMState,
+                    d_model: int, cfg: SSMConfig, eps: float = 1e-5
+                    ) -> Tuple[jnp.ndarray, SSMState]:
+    """One-token decode. x: [B, 1, d_model] -> (y, new state)."""
+    b = x.shape[0]
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    G, N = cfg.n_groups, cfg.state_dim
+    xb = x[:, 0].astype(jnp.bfloat16)
+    z = xb @ params["w_z"].astype(jnp.bfloat16)
+    xs = xb @ params["w_x"].astype(jnp.bfloat16)
+    BC = jnp.concatenate(
+        [xb @ params["w_B"].astype(jnp.bfloat16),
+         xb @ params["w_C"].astype(jnp.bfloat16)], -1)
+    dt = xb @ params["w_dt"].astype(jnp.bfloat16)
+
+    # causal conv over ring buffers
+    def conv1(hist_buf, new, w, bias):
+        hist = jnp.concatenate(
+            [hist_buf, new[:, None, :].astype(hist_buf.dtype)], 1)
+        out = jax.nn.silu(
+            (hist.astype(jnp.float32) * w.astype(jnp.float32)[None]).sum(1)
+            + bias.astype(jnp.float32))
+        return out, hist[:, 1:]
+
+    xs, new_cx = conv1(state.conv_x, xs, params["conv_x"], params["conv_b_x"])
+    BC, new_cbc = conv1(state.conv_bc, BC, params["conv_bc"],
+                        params["conv_b_bc"])
+    B, C = jnp.split(BC, 2, -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B, H]
+    A = jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, H, cfg.head_dim)
+    Bh = jnp.repeat(B.reshape(b, G, N), H // G, axis=1)      # [B, H, N]
+    Ch = jnp.repeat(C.reshape(b, G, N), H // G, axis=1)
+    decay = jnp.exp(dt * (-A)[None])                         # [B, H]
+    h = state.h * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch) \
+        + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm({"scale": params["norm_scale"]}, y, eps)
+    out = (y.astype(jnp.bfloat16) @ params["w_out"].astype(jnp.bfloat16))
+    return out[:, None, :].astype(x.dtype), SSMState(
+        h=h, conv_x=new_cx, conv_bc=new_cbc)

@@ -1,0 +1,589 @@
+"""Model assembly: embeddings -> (scan over) blocks -> head, for all six
+architecture families (dense / moe / ssm / hybrid / vlm / audio).
+
+Layer stacking: homogeneous layer stacks are SCANNED (params stacked on a
+leading [L] axis, ``jax.lax.scan`` over layers, ``jax.checkpoint`` per
+layer) — constant-size HLO independent of depth, which is what keeps the
+512-device dry-run compile tractable.  The zamba2 hybrid interleaves a
+parameter-SHARED attention block every k layers (a python loop over scan
+segments; the shared block's weights appear once).
+
+Activation sharding: the model takes an optional ``Shardings`` carrying the
+mesh + logical axes and drops ``with_sharding_constraint`` pins at the
+block boundaries (batch over data axes; heads/ff over 'model').
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.nn import attention as attn
+from repro.nn import layers as L
+from repro.nn import moe as moe_lib
+from repro.nn import ssm as ssm_lib
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Shardings:
+    """Mesh context for activation pins; None members disable pinning."""
+
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    shard_heads: bool = True   # False in decode mode (ctx-parallel KV instead)
+    attn_seq_shard: bool = False  # True when Hq < model size (gemma): shard
+                                  # attention over SEQUENCE instead of heads
+    moe_ep: bool = True        # False under pure-FSDP training (experts are
+                               # FSDP-gathered; dispatch is device-local)
+
+    def pin(self, x: jnp.ndarray, spec: P) -> jnp.ndarray:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def act(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[B, S, d] residual-stream pin: batch over data, d replicated."""
+        return self.pin(x, P(self.data_axes, None, None))
+
+    def heads(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[B, S, H, D]: heads over model (train/prefill only)."""
+        if not self.shard_heads:
+            return self.pin(x, P(self.data_axes, None, None, None))
+        if self.attn_seq_shard:   # context-parallel attention (small-H archs)
+            return self.pin(x, P(self.data_axes, self.model_axis, None, None))
+        return self.pin(x, P(self.data_axes, None, self.model_axis, None))
+
+    def kv_heads(self, x: jnp.ndarray) -> jnp.ndarray:
+        """K/V are head-REPLICATED over model (Hkv < mesh size is common);
+        under seq-sharded attention they stay seq-replicated too (causal
+        all-gather semantics handled by GSPMD)."""
+        return self.pin(x, P(self.data_axes, None, None, None))
+
+
+NO_SHARD = Shardings(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.he_init(ks[0], (d, cfg.n_heads, hd), d, dtype),
+        "wk": L.he_init(ks[1], (d, cfg.n_kv_heads, hd), d, dtype),
+        "wv": L.he_init(ks[2], (d, cfg.n_kv_heads, hd), d, dtype),
+        "wo": L.he_init(ks[3], (cfg.n_heads, hd, d), cfg.n_heads * hd, dtype),
+    }
+
+
+def _qkv(p: Params, x: jnp.ndarray, sh: Shardings):
+    xb = x.astype(jnp.bfloat16)
+    q = jnp.einsum("bsd,dhk->bshk", xb, p["wq"].astype(jnp.bfloat16))
+    k = jnp.einsum("bsd,dhk->bshk", xb, p["wk"].astype(jnp.bfloat16))
+    v = jnp.einsum("bsd,dhk->bshk", xb, p["wv"].astype(jnp.bfloat16))
+    return sh.heads(q), sh.kv_heads(k), sh.kv_heads(v)
+
+
+def attention_block(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                    sh: Shardings, *, causal: bool = True,
+                    positions: Optional[jnp.ndarray] = None,
+                    window: Optional[int] = None) -> jnp.ndarray:
+    """Full-sequence attention (train/prefill). x: [B, S, d]."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, sh)
+    if cfg.rope_theta:
+        pos = positions if positions is not None else jnp.arange(S)[None]
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+    o = attn.attention_blockwise(q, k, v, causal=causal, window=window)
+    o = sh.heads(o)
+    # bf16 output -> GSPMD all-reduces the TP partial sums in bf16 (2x
+    # fewer link bytes than the default f32 accumulator; §Perf change A)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(jnp.bfloat16),
+                     p["wo"].astype(jnp.bfloat16),
+                     preferred_element_type=jnp.bfloat16)
+    return sh.act(out).astype(x.dtype)
+
+
+def attention_block_decode(p: Params, x: jnp.ndarray, cache: attn.KVCache,
+                           cfg: ModelConfig, sh: Shardings,
+                           window: Optional[int] = None
+                           ) -> Tuple[jnp.ndarray, attn.KVCache]:
+    """One-token decode. x: [B, 1, d]."""
+    q, k, v = _qkv(p, x, sh)
+    if cfg.rope_theta:
+        pos = cache.length[None, None]
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+    if sh.mesh is not None:
+        # production path: cache seq dim sharded over 'model' (flash-decode /
+        # context parallelism — DESIGN.md §5); q replicated over 'model'
+        cache = attn.cache_update_ctx_parallel(
+            cache, k.astype(cache.k.dtype), v.astype(cache.v.dtype),
+            sh.mesh, model_axis=sh.model_axis, data_axes=sh.data_axes)
+        o = attn.attention_decode_ctx_parallel(
+            q, cache, sh.mesh, model_axis=sh.model_axis,
+            data_axes=sh.data_axes, window=window)
+    else:
+        cache = attn.cache_update(cache, k.astype(cache.k.dtype),
+                                  v.astype(cache.v.dtype))
+        o = attn.attention_decode(q, cache, window=window)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(jnp.bfloat16),
+                     p["wo"].astype(jnp.bfloat16),
+                     preferred_element_type=jnp.bfloat16)
+    return sh.act(out).astype(x.dtype), cache
+
+
+def cross_attention_block(p: Params, x: jnp.ndarray, enc_k: jnp.ndarray,
+                          enc_v: jnp.ndarray, sh: Shardings) -> jnp.ndarray:
+    """Decoder cross-attn against precomputed encoder K/V (whisper)."""
+    xb = x.astype(jnp.bfloat16)
+    q = jnp.einsum("bsd,dhk->bshk", xb, p["wq"].astype(jnp.bfloat16))
+    o = attn.attention_blockwise(sh.heads(q), enc_k, enc_v, causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(jnp.bfloat16),
+                     p["wo"].astype(jnp.bfloat16),
+                     preferred_element_type=jnp.bfloat16)
+    return sh.act(out).astype(x.dtype)
+
+
+def encoder_kv(p: Params, enc_out: jnp.ndarray, sh: Shardings):
+    eb = enc_out.astype(jnp.bfloat16)
+    k = jnp.einsum("bsd,dhk->bshk", eb, p["wk"].astype(jnp.bfloat16))
+    v = jnp.einsum("bsd,dhk->bshk", eb, p["wv"].astype(jnp.bfloat16))
+    return sh.kv_heads(k), sh.kv_heads(v)
+
+
+# ---------------------------------------------------------------------------
+# per-layer blocks
+# ---------------------------------------------------------------------------
+
+
+def init_dense_block(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def dense_block(p: Params, x, cfg: ModelConfig, sh: Shardings):
+    h = attention_block(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        cfg, sh, window=cfg.sliding_window)
+    x = x + h
+    m = L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.mlp)
+    return sh.act(x + m)
+
+
+def init_moe_block(key, cfg: ModelConfig, ep_shards: int,
+                   dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+        "moe": moe_lib.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.moe,
+                                ep_shards, dtype),
+    }
+
+
+def moe_block(p: Params, x, cfg: ModelConfig, sh: Shardings):
+    h = attention_block(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        cfg, sh, window=cfg.sliding_window)
+    x = x + h
+    y, aux = moe_lib.apply_moe(
+        p["moe"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.moe,
+        mesh=sh.mesh if sh.moe_ep else None,
+        model_axis=sh.model_axis, data_axes=sh.data_axes)
+    return sh.act(x + y.astype(x.dtype)), aux
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    return {
+        "ln": L.init_rmsnorm(cfg.d_model, dtype),
+        "mamba": ssm_lib.init_mamba2(key, cfg.d_model, cfg.ssm, dtype),
+    }
+
+
+def mamba_block(p: Params, x, cfg: ModelConfig, sh: Shardings):
+    h = ssm_lib.apply_mamba2(p["mamba"], L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                             cfg.d_model, cfg.ssm, cfg.norm_eps)
+    return sh.act(x + h)
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(key, n: int, init_fn) -> Params:
+    """Initialize n layers and stack leaves on a leading [n] axis."""
+    keys = jax.random.split(key, n)
+    layers = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_model(key, cfg: ModelConfig, *, ep_shards: int = 1,
+               dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    params: Params = {"embed": L.init_embedding(ks[0], cfg.vocab,
+                                                cfg.d_model, dtype)}
+
+    if cfg.arch_type in ("dense", "vlm"):
+        params["blocks"] = _stack_init(
+            ks[1], cfg.n_layers, lambda k: init_dense_block(k, cfg, dtype))
+    elif cfg.arch_type == "moe":
+        params["blocks"] = _stack_init(
+            ks[1], cfg.n_layers,
+            lambda k: init_moe_block(k, cfg, ep_shards, dtype))
+    elif cfg.arch_type == "ssm":
+        params["blocks"] = _stack_init(
+            ks[1], cfg.n_layers, lambda k: init_mamba_block(k, cfg, dtype))
+    elif cfg.arch_type == "hybrid":
+        params["blocks"] = _stack_init(
+            ks[1], cfg.n_layers, lambda k: init_mamba_block(k, cfg, dtype))
+        shared = init_dense_block(ks[2], cfg, dtype)  # the SHARED attn block
+        params["shared_attn"] = shared
+    elif cfg.arch_type == "audio":
+        enc = cfg.encoder
+        params["enc_pos"] = L.init_pos_embedding(ks[3], enc.enc_len,
+                                                 cfg.d_model, dtype)
+        params["dec_pos"] = L.init_pos_embedding(ks[4], 1 << 16, cfg.d_model,
+                                                 dtype)
+        params["enc_blocks"] = _stack_init(
+            ks[1], enc.n_layers, lambda k: init_dense_block(k, cfg, dtype))
+
+        def dec_init(k):
+            k1, k2 = jax.random.split(k)
+            blk = init_dense_block(k1, cfg, dtype)
+            blk["ln_x"] = L.init_rmsnorm(cfg.d_model, dtype)
+            blk["xattn"] = init_attention(k2, cfg, dtype)
+            return blk
+
+        params["blocks"] = _stack_init(ks[2], cfg.n_layers, dec_init)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "table": L.he_init(ks[5], (cfg.vocab, cfg.d_model), cfg.d_model,
+                               dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+class ForwardOut(NamedTuple):
+    logits: jnp.ndarray
+    moe_aux: jnp.ndarray   # scalar: summed load-balance + z losses (0 if n/a)
+
+
+def _scan_blocks(block_fn, stacked: Params, x, *, with_aux=False,
+                 remat=True):
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    if with_aux:
+        def body(carry, pl):
+            y, aux = fn(pl, carry)
+            return y, aux
+
+        x, auxes = jax.lax.scan(body, x, stacked)
+        lb = sum(jnp.sum(a) for a in
+                 [auxes.load_balance, 0.001 * auxes.router_z])
+        return x, lb
+
+    def body(carry, pl):
+        return fn(pl, carry), None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x, jnp.asarray(0.0, jnp.float32)
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            sh: Shardings = NO_SHARD, *, remat: bool = True,
+            enc_input: Optional[jnp.ndarray] = None) -> ForwardOut:
+    """tokens: [B, S] int32. enc_input: [B, enc_len, d] (audio stub emb)."""
+    x = L.embed(params["embed"], tokens)
+    x = sh.act(x)
+    aux = jnp.asarray(0.0, jnp.float32)
+
+    if cfg.arch_type in ("dense", "vlm"):
+        x, _ = _scan_blocks(lambda p, h: dense_block(p, h, cfg, sh),
+                            params["blocks"], x, remat=remat)
+    elif cfg.arch_type == "moe":
+        x, aux = _scan_blocks(lambda p, h: moe_block(p, h, cfg, sh),
+                              params["blocks"], x, with_aux=True, remat=remat)
+    elif cfg.arch_type == "ssm":
+        x, _ = _scan_blocks(lambda p, h: mamba_block(p, h, cfg, sh),
+                            params["blocks"], x, remat=remat)
+    elif cfg.arch_type == "hybrid":
+        x = _hybrid_forward(params, x, cfg, sh, remat)
+    elif cfg.arch_type == "audio":
+        x = _audio_forward(params, x, cfg, sh, enc_input, remat)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.unembed(head, x)
+    vocab_axis = (sh.model_axis
+                  if sh.model_axis not in sh.data_axes else None)
+    return ForwardOut(logits=sh.pin(logits,
+                                    P(sh.data_axes, None, vocab_axis)),
+                      moe_aux=aux)
+
+
+def _hybrid_forward(params, x, cfg: ModelConfig, sh: Shardings, remat: bool):
+    """zamba2: mamba stack with a SHARED dense-attention block every k layers."""
+    k = cfg.hybrid_attn_every
+    Lz = cfg.n_layers
+    blocks = params["blocks"]
+    segs = Lz // k
+    block_fn = (jax.checkpoint(lambda p, h: mamba_block(p, h, cfg, sh))
+                if remat else (lambda p, h: mamba_block(p, h, cfg, sh)))
+    shared_fn = (jax.checkpoint(
+        lambda p, h: dense_block(p, h, cfg, sh)) if remat
+        else (lambda p, h: dense_block(p, h, cfg, sh)))
+
+    def seg_params(i0, n):
+        return jax.tree_util.tree_map(lambda a: a[i0:i0 + n], blocks)
+
+    done = 0
+    for s in range(segs):
+        xs = seg_params(done, k)
+        x, _ = jax.lax.scan(lambda c, pl: (block_fn(pl, c), None), x, xs)
+        done += k
+        x = shared_fn(params["shared_attn"], x)   # SHARED weights each time
+    if done < Lz:
+        xs = seg_params(done, Lz - done)
+        x, _ = jax.lax.scan(lambda c, pl: (block_fn(pl, c), None), x, xs)
+    return x
+
+
+def _audio_forward(params, x_dec, cfg: ModelConfig, sh: Shardings,
+                   enc_input: jnp.ndarray, remat: bool):
+    """whisper: bidirectional encoder over frame embeddings, causal decoder
+    with cross-attention."""
+    assert enc_input is not None, "audio arch needs enc_input embeddings"
+    e = L.add_pos(params["enc_pos"], enc_input.astype(x_dec.dtype))
+    e = sh.act(e)
+
+    def enc_block(p, h):
+        a = attention_block(p["attn"], L.rmsnorm(p["ln1"], h, cfg.norm_eps),
+                            cfg, sh, causal=False)
+        h = h + a
+        m = L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps), cfg.mlp)
+        return sh.act(h + m)
+
+    fn = jax.checkpoint(enc_block) if remat else enc_block
+    e, _ = jax.lax.scan(lambda c, pl: (fn(pl, c), None),
+                        e, params["enc_blocks"])
+
+    x = L.add_pos(params["dec_pos"], x_dec)
+
+    def dec_block(p, h):
+        a = attention_block(p["attn"], L.rmsnorm(p["ln1"], h, cfg.norm_eps),
+                            cfg, sh, causal=True)
+        h = h + a
+        ek, ev = encoder_kv(p["xattn"], e, sh)
+        c = cross_attention_block(
+            p["xattn"], L.rmsnorm(p["ln_x"], h, cfg.norm_eps), ek, ev, sh)
+        h = h + c
+        m = L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps), cfg.mlp)
+        return sh.act(h + m)
+
+    fn = jax.checkpoint(dec_block) if remat else dec_block
+    x, _ = jax.lax.scan(lambda c, pl: (fn(pl, c), None), x, params["blocks"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step): ONE new token against per-layer caches
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    """Per-layer recurrent state, leaves stacked on a leading [L] axis."""
+
+    kv: Optional[attn.KVCache]            # attention caches [L, ...]
+    ssm: Optional[ssm_lib.SSMState]       # mamba states [L, ...]
+    shared_kv: Optional[attn.KVCache]     # zamba shared-block caches [segs,...]
+    enc_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]]  # whisper cross K/V [L,...]
+
+
+def _stack_states(states):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def init_decode_state(params: Params, cfg: ModelConfig, batch: int,
+                      capacity: int, sh: Shardings = NO_SHARD,
+                      enc_input: Optional[jnp.ndarray] = None,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    """capacity = KV budget (window size for SWA archs at long context)."""
+    hd = cfg.head_dim_ if cfg.n_heads else 0
+    kv = ssm = shared = enc_kv = None
+    if cfg.arch_type in ("dense", "vlm", "moe", "audio"):
+        kv = _stack_states([
+            attn.init_kv_cache(batch, capacity, cfg.n_kv_heads, hd, dtype)
+            for _ in range(cfg.n_layers)])
+    if cfg.arch_type in ("ssm", "hybrid"):
+        ssm = _stack_states([
+            ssm_lib.init_ssm_state(batch, cfg.d_model, cfg.ssm, jnp.float32)
+            for _ in range(cfg.n_layers)])
+    if cfg.arch_type == "hybrid":
+        segs = cfg.n_layers // cfg.hybrid_attn_every
+        cap = min(capacity, cfg.sliding_window or capacity)
+        shared = _stack_states([
+            attn.init_kv_cache(batch, cap, cfg.n_kv_heads, hd, dtype)
+            for _ in range(segs)])
+    if cfg.arch_type == "audio":
+        # run the encoder once; cache cross-attention K/V per decoder layer
+        assert enc_input is not None
+        e = L.add_pos(params["enc_pos"], enc_input.astype(jnp.bfloat16))
+
+        def enc_block(p, h):
+            a = attention_block(p["attn"], L.rmsnorm(p["ln1"], h, cfg.norm_eps),
+                                cfg, sh, causal=False)
+            h = h + a
+            m = L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps), cfg.mlp)
+            return sh.act(h + m)
+
+        e, _ = jax.lax.scan(lambda c, pl: (enc_block(pl, c), None),
+                            sh.act(e), params["enc_blocks"])
+
+        def one_layer_kv(pl):
+            return encoder_kv(pl["xattn"], e, sh)
+
+        enc_kv = jax.vmap(one_layer_kv)(params["blocks"])
+    return DecodeState(kv=kv, ssm=ssm, shared_kv=shared, enc_kv=enc_kv)
+
+
+def decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
+                cfg: ModelConfig, sh: Shardings = NO_SHARD) -> Tuple[jnp.ndarray, DecodeState]:
+    """token: [B, 1] int32 -> (logits [B, 1, V], new state)."""
+    x = L.embed(params["embed"], token)
+    x = sh.act(x)
+    window = cfg.sliding_window
+
+    if cfg.arch_type in ("dense", "vlm", "moe"):
+        is_moe = cfg.arch_type == "moe"
+
+        def body(carry, inp):
+            h = carry
+            pl, cache = inp
+            a, cache = attention_block_decode(
+                pl["attn"], L.rmsnorm(pl["ln1"], h, cfg.norm_eps), cache,
+                cfg, sh, window=window)
+            h = h + a
+            hn = L.rmsnorm(pl["ln2"], h, cfg.norm_eps)
+            if is_moe:
+                y, _ = moe_lib.apply_moe(pl["moe"], hn, cfg.moe, mesh=sh.mesh,
+                                         model_axis=sh.model_axis,
+                                         data_axes=sh.data_axes)
+                h = h + y.astype(h.dtype)
+            else:
+                h = h + L.mlp(pl["mlp"], hn, cfg.mlp)
+            return sh.act(h), cache
+
+        x, kv = jax.lax.scan(body, x, (params["blocks"], state.kv))
+        state = state._replace(kv=kv)
+
+    elif cfg.arch_type == "ssm":
+        def body(carry, inp):
+            h = carry
+            pl, st = inp
+            y, st = ssm_lib.ssd_decode_step(
+                pl["mamba"], L.rmsnorm(pl["ln"], h, cfg.norm_eps), st,
+                cfg.d_model, cfg.ssm, cfg.norm_eps)
+            return sh.act(h + y), st
+
+        x, ssm = jax.lax.scan(body, x, (params["blocks"], state.ssm))
+        state = state._replace(ssm=ssm)
+
+    elif cfg.arch_type == "hybrid":
+        k = cfg.hybrid_attn_every
+        segs = cfg.n_layers // k
+
+        def mamba_body(carry, inp):
+            h = carry
+            pl, st = inp
+            y, st = ssm_lib.ssd_decode_step(
+                pl["mamba"], L.rmsnorm(pl["ln"], h, cfg.norm_eps), st,
+                cfg.d_model, cfg.ssm, cfg.norm_eps)
+            return sh.act(h + y), st
+
+        new_ssm, new_shared = [], []
+        done = 0
+        for s in range(segs):
+            seg = jax.tree_util.tree_map(lambda a: a[done:done + k],
+                                         (params["blocks"], state.ssm))
+            x, st = jax.lax.scan(mamba_body, x, seg)
+            new_ssm.append(st)
+            done += k
+            cache_s = jax.tree_util.tree_map(lambda a: a[s], state.shared_kv)
+            pshared = params["shared_attn"]
+            a, cache_s = attention_block_decode(
+                pshared["attn"], L.rmsnorm(pshared["ln1"], x, cfg.norm_eps),
+                cache_s, cfg, sh, window=window)
+            x = x + a
+            x = x + L.mlp(pshared["mlp"],
+                          L.rmsnorm(pshared["ln2"], x, cfg.norm_eps), cfg.mlp)
+            x = sh.act(x)
+            new_shared.append(cache_s)
+        if done < cfg.n_layers:
+            seg = jax.tree_util.tree_map(lambda a: a[done:],
+                                         (params["blocks"], state.ssm))
+            x, st = jax.lax.scan(mamba_body, x, seg)
+            new_ssm.append(st)
+        state = state._replace(
+            ssm=jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs), *new_ssm),
+            shared_kv=_stack_states(new_shared))
+
+    elif cfg.arch_type == "audio":
+        x = L.add_pos(params["dec_pos"], x, 0)  # position 0 slice; decode pos
+        enc_k, enc_v = state.enc_kv
+
+        def body(carry, inp):
+            h = carry
+            pl, cache, ek, ev = inp
+            a, cache = attention_block_decode(
+                pl["attn"], L.rmsnorm(pl["ln1"], h, cfg.norm_eps), cache,
+                cfg, sh)
+            h = h + a
+            c = cross_attention_block(
+                pl["xattn"], L.rmsnorm(pl["ln_x"], h, cfg.norm_eps),
+                ek, ev, sh)
+            h = h + c
+            h = h + L.mlp(pl["mlp"], L.rmsnorm(pl["ln2"], h, cfg.norm_eps),
+                          cfg.mlp)
+            return sh.act(h), cache
+
+        x, kv = jax.lax.scan(body, x,
+                             (params["blocks"], state.kv, enc_k, enc_v))
+        state = state._replace(kv=kv)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.unembed(head, x)
+    return logits, state

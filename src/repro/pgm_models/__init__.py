@@ -1,0 +1,39 @@
+"""latent-variable-models module — the paper's Table 2 model zoo.
+
+Static models (``static.py``): Naive Bayes (+ classifier), Gaussian mixture,
+multivariate Gaussian, Gaussian discriminant analysis, Bayesian linear
+regression, factor analysis / PPCA, mixture of FA, and the paper's
+Code-Fragment-11 custom model (global discrete + per-leaf local Gaussian).
+
+Dynamic models (``dynamic.py``): HMM, factorial HMM, auto-regressive HMM,
+input-output HMM, dynamic NB, Kalman filter (LDS), switching LDS.
+
+Text (``lda.py``): latent Dirichlet allocation (paper module 'lda').
+
+Every model follows the paper's API: ``Model(attributes)``,
+``update_model(stream_or_batch)`` (works for initial learning AND Bayesian
+updating, Eq. 3), ``get_model()``, ``posterior(...)``.
+"""
+
+from repro.pgm_models.base import Model
+from repro.pgm_models.static import (
+    BayesianLinearRegression,
+    CustomGlobalLocalModel,
+    FactorAnalysis,
+    GaussianDiscriminantAnalysis,
+    GaussianMixture,
+    MixtureOfFA,
+    MultivariateGaussian,
+    NaiveBayes,
+    NaiveBayesClassifier,
+)
+from repro.pgm_models.dynamic import (
+    AutoRegressiveHMM,
+    DynamicNaiveBayes,
+    FactorialHMMModel,
+    HiddenMarkovModel,
+    InputOutputHMM,
+    KalmanFilter,
+    SwitchingLDS,
+)
+from repro.pgm_models.lda import LDA

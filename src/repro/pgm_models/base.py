@@ -1,0 +1,120 @@
+"""Model — the paper's ``latentvariablemodels.staticmodels.Model`` analog.
+
+Subclasses override :meth:`build_spec` (the paper's ``buildDAG()``) to return
+a ``PlateSpec`` (+ optional latent mask).  ``update_model`` accepts a
+``DataStream``, a ``Batch`` or raw arrays and performs either batch VMP,
+distributed d-VMP (``mesh=``) or streaming Bayesian updating (repeated calls
+— Eq. 3), mirroring Code Fragments 7/9/12.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dvmp, vmp
+from repro.core.dag import PlateSpec
+from repro.data.stream import Attribute, Batch, DataStream, FINITE, REAL
+
+
+class Model:
+    def __init__(self, attributes: Sequence[Attribute], *, seed: int = 0,
+                 **prior_kwargs) -> None:
+        self.attributes = list(attributes)
+        spec, latent_mask = self.build_spec()
+        self.spec = spec
+        self.cp = vmp.compile_plate(spec, latent_mask)
+        self.prior = vmp.default_prior(self.cp, **prior_kwargs)
+        self.posterior = vmp.symmetry_broken(self.prior, jax.random.PRNGKey(seed))
+        self._chained_prior = self.prior  # Eq. 3 accumulator
+        self.n_seen = 0
+
+    # -- to be overridden ------------------------------------------------------
+
+    def build_spec(self) -> Tuple[PlateSpec, Optional[jnp.ndarray]]:
+        raise NotImplementedError
+
+    def supervised_r(self, batch: Batch) -> Optional[jnp.ndarray]:
+        """Return fixed responsibilities [N, K] for supervised models."""
+        return None
+
+    # -- data plumbing ----------------------------------------------------------
+
+    def _as_batch(self, data) -> Batch:
+        if isinstance(data, Batch):
+            return data
+        if isinstance(data, DataStream):
+            return data.collect()
+        xc = jnp.asarray(data, jnp.float32)
+        return Batch(xc, jnp.zeros((xc.shape[0], 0), jnp.int32),
+                     jnp.ones(xc.shape[0], jnp.float32))
+
+    # -- learning (paper Code Fragments 7, 9, 12) --------------------------------
+
+    def update_model(self, data, *, sweeps: int = 100, tol: float = 1e-5,
+                     mesh=None, data_axes: Tuple[str, ...] = ("data",)) -> float:
+        """Fit/refine the posterior on ``data``.
+
+        Repeated calls implement Bayesian updating (Eq. 3): the previous
+        posterior becomes the prior for the new data.  Returns the ELBO.
+        """
+        batch = self._as_batch(data)
+        prior = self._chained_prior
+        r_fixed = self.supervised_r(batch)
+
+        if r_fixed is not None:
+            # conjugate closed form: one local step + global update
+            stats, _ = vmp.local_step(
+                self.cp, self.posterior, batch.xc, batch.xd, batch.mask, r_fixed
+            )
+            if mesh is not None:
+                stats = jax.tree_util.tree_map(lambda s: s, stats)  # already global
+            post = vmp.global_update(prior, stats)
+            e = float(vmp.elbo(self.cp, prior, post, stats))
+        elif mesh is None:
+            st = vmp.vmp_fit(self.cp, prior, self.posterior,
+                             batch.xc, batch.xd, sweeps, tol)
+            post, e = st.post, float(st.elbo)
+        else:
+            st = dvmp.dvmp_fit(self.cp, prior, self.posterior, batch.xc,
+                               batch.xd, mesh, data_axes, sweeps, tol,
+                               mask=batch.mask)
+            post, e = st.post, float(st.elbo)
+
+        self.posterior = post
+        self._chained_prior = post      # Eq. 3: posterior -> next prior
+        self.n_seen += int(batch.mask.sum())
+        return e
+
+    # -- queries -----------------------------------------------------------------
+
+    def posterior_z(self, data) -> jnp.ndarray:
+        batch = self._as_batch(data)
+        return vmp.posterior_z(self.cp, self.posterior, batch.xc, batch.xd)
+
+    def get_model(self) -> vmp.PlateParams:
+        return self.posterior
+
+    # -- pretty print (paper Code Fragment 8) --------------------------------------
+
+    def __str__(self) -> str:
+        import numpy as np
+
+        p = self.posterior
+        lay = self.cp.layout
+        lines = [f"{type(self).__name__} (Bayesian posterior):"]
+        if lay.K > 1:
+            w = np.asarray(p.mix.alpha / p.mix.alpha.sum())
+            lines.append(f"P(Hidden) follows a Multinomial\n  {w}")
+        for f in range(lay.F):
+            mu = np.asarray(p.reg.m[f, :, 0])
+            var = np.asarray(p.reg.b[f] / p.reg.a[f])
+            lines.append(
+                f"P(X{f} | ...) follows a Normal|Multinomial"
+            )
+            for k in range(lay.K):
+                lines.append(f"  Normal [ mu = {mu[k]:.6f}, var = {var[k]:.6f} ]"
+                             f" | {{Hidden = {k}}}")
+        return "\n".join(lines)

@@ -1,0 +1,550 @@
+"""Dynamic latent-variable models — paper Table 2, right column.
+
+All models operate on ``SequenceBatch`` data ([B, T, ...]) and are learnt by
+variational Bayesian EM:
+
+  * HMM family — E-step = masked forward-backward (``lax.scan``), vmapped
+    over sequences; M-step = conjugate Dirichlet / Normal-Gamma /
+    MVNormalGamma updates from expected counts.  AR-HMM and IO-HMM reuse the
+    CLG emission (regression on the previous observation / exogenous input).
+  * Kalman filter (LDS) — E-step = Kalman smoothing; M-step = Bayesian
+    linear regression (MVNormalGamma) for transition and emission rows.
+  * Switching LDS — structured mean field q(s)q(h): factored-frontier pass
+    for the switch chain, Kalman smoothing under averaged dynamics, Bayesian
+    regression M-step per switch state.
+
+Streaming (Eq. 3) works exactly as in the static case: posteriors chain.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import expfam as ef
+from repro.data.stream import Attribute, DynamicDataStream, SequenceBatch, REAL
+
+
+# ---------------------------------------------------------------------------
+# masked forward-backward (shared by the HMM family)
+# ---------------------------------------------------------------------------
+
+
+def forward_backward(log_init: jnp.ndarray, log_trans: jnp.ndarray,
+                     loglik: jnp.ndarray, mask: jnp.ndarray):
+    """Single sequence. log_init [S], log_trans [S,S], loglik [T,S], mask [T].
+
+    Returns (gamma [T,S], xi_sum [S,S], loglik_scalar)."""
+    S = log_init.shape[0]
+    ll = loglik * mask[:, None]  # masked steps contribute nothing
+
+    def fstep(carry, inp):
+        loga_prev = carry
+        ll_t, m_t = inp
+        loga = jax.nn.logsumexp(
+            loga_prev[:, None] + log_trans, axis=0) + ll_t
+        loga = jnp.where(m_t > 0, loga, loga_prev)  # hold state over padding
+        return loga, loga
+
+    loga0 = log_init + ll[0]
+    _, logas = jax.lax.scan(fstep, loga0, (ll[1:], mask[1:]))
+    logas = jnp.concatenate([loga0[None], logas], 0)      # [T, S]
+    logZ = jax.nn.logsumexp(logas[-1])
+
+    def bstep(carry, inp):
+        logb_next = carry
+        ll_t1, m_t1 = inp
+        logb = jax.nn.logsumexp(
+            log_trans + (ll_t1 + logb_next)[None, :], axis=1)
+        logb = jnp.where(m_t1 > 0, logb, logb_next)
+        return logb, logb
+
+    logbT = jnp.zeros(S)
+    _, logbs = jax.lax.scan(bstep, logbT, (ll[1:][::-1], mask[1:][::-1]))
+    logbs = jnp.concatenate([logbs[::-1], logbT[None]], 0)  # [T, S]
+
+    gamma = jax.nn.softmax(logas + logbs, axis=-1) * mask[:, None]
+
+    # xi_t(i,j) ∝ a_t(i) T(i,j) l_{t+1}(j) b_{t+1}(j)
+    logxi = (logas[:-1, :, None] + log_trans[None]
+             + (ll[1:] + logbs[1:])[:, None, :])
+    logxi = logxi - jax.nn.logsumexp(logxi, axis=(1, 2), keepdims=True)
+    xi = jnp.exp(logxi) * mask[1:, None, None]
+    return gamma, xi.sum(0), logZ
+
+
+# ---------------------------------------------------------------------------
+# HMM with (optionally regression-) Gaussian emissions
+# ---------------------------------------------------------------------------
+
+
+class HMMPosterior(NamedTuple):
+    init: ef.Dirichlet        # [S]
+    trans: ef.Dirichlet       # [S, S] rows
+    emis: ef.MVNormalGamma    # [F, S, D] regression emission per feature/state
+
+
+class _HMMBase:
+    """Shared machinery; subclasses define the emission design vector."""
+
+    design_dim = 1  # bias only (plain Gaussian emission)
+
+    def __init__(self, attributes, n_states: int = 2, *, seed: int = 0,
+                 alpha0: float = 1.0, a0: float = 1.0, b0: float = 1.0):
+        self.attributes = list(attributes)
+        self.F = len([a for a in attributes if a.kind == REAL])
+        self.S = n_states
+        D = self.design_dim
+        self.prior = HMMPosterior(
+            init=ef.Dirichlet(jnp.full((self.S,), alpha0)),
+            trans=ef.Dirichlet(jnp.full((self.S, self.S), alpha0)),
+            emis=ef.MVNormalGamma(
+                m=jnp.zeros((self.F, self.S, D)),
+                K=jnp.broadcast_to(jnp.eye(D), (self.F, self.S, D, D)),
+                a=jnp.full((self.F, self.S), a0),
+                b=jnp.full((self.F, self.S), b0),
+            ),
+        )
+        key = jax.random.PRNGKey(seed)
+        m0 = self.prior.emis.m + jax.random.normal(
+            key, self.prior.emis.m.shape)
+        self.posterior = self.prior._replace(emis=self.prior.emis._replace(m=m0))
+        self._chained_prior = self.prior
+
+    # -- emission design: [B, T, F, D] --------------------------------------
+
+    def _design(self, xc: jnp.ndarray) -> jnp.ndarray:
+        B, T, F = xc.shape
+        return jnp.ones((B, T, F, 1), xc.dtype)
+
+    def _emission_loglik(self, post: HMMPosterior, xc: jnp.ndarray
+                         ) -> jnp.ndarray:
+        """[B, T, S] expected log-lik summed over features."""
+        mom = ef.mvnormalgamma_moments(post.emis)     # [F, S, ...]
+        d = self._design(xc)                          # [B, T, F, D]
+        y = xc                                        # [B, T, F]
+        quad = jnp.einsum("btfa,fsac,btfc->btfs", d, mom.e_lamww, d)
+        lin = jnp.einsum("btfa,fsa->btfs", d, mom.e_lamw)
+        ll = 0.5 * (
+            mom.e_loglam[None, None] - ef.LOG2PI
+            - mom.e_lam[None, None] * (y * y)[..., None]
+            + 2.0 * y[..., None] * lin - quad
+        )
+        return ll.sum(2)
+
+    def _estep(self, post: HMMPosterior, xc, mask):
+        log_init = ef.dirichlet_expected_logprob(post.init)
+        log_trans = ef.dirichlet_expected_logprob(post.trans)
+        ll = self._emission_loglik(post, xc)          # [B, T, S]
+        fb = jax.vmap(partial(forward_backward, log_init, log_trans))
+        gamma, xi, logZ = fb(ll, mask)
+        return gamma, xi, logZ
+
+    def _mstep(self, prior: HMMPosterior, gamma, xi, xc, mask) -> HMMPosterior:
+        init = ef.Dirichlet(prior.init.alpha + gamma[:, 0].sum(0))
+        trans = ef.Dirichlet(prior.trans.alpha + xi.sum(0))
+        d = self._design(xc)                          # [B, T, F, D]
+        w = gamma * mask[..., None]                   # [B, T, S]
+        sxx = jnp.einsum("btfa,btfc,bts->fsac", d, d, w)
+        sxy = jnp.einsum("btfa,btf,bts->fsa", d, xc, w)
+        syy = jnp.einsum("btf,btf,bts->fs", xc, xc, w)
+        n = jnp.broadcast_to(w.sum((0, 1))[None], syy.shape)
+        emis = ef.mvnormalgamma_update(
+            prior.emis, ef.RegSuffStats(sxx, sxy, syy, n))
+        return HMMPosterior(init=init, trans=trans, emis=emis)
+
+    # -- public API -----------------------------------------------------------
+
+    def update_model(self, data, *, sweeps: int = 30, tol: float = 1e-5) -> float:
+        batch = data.collect() if isinstance(data, DynamicDataStream) else data
+        xc, mask = batch.xc, batch.mask
+        prior = self._chained_prior
+        post = self.posterior
+        if not getattr(self, "_warm", False):
+            # data-driven symmetry breaking: bias term <- random observed frames
+            self._warm = True
+            rng = np.random.default_rng(13)
+            obs = xc[..., : self.F]   # emission columns (IOHMM: drops input)
+            B, T, F = obs.shape
+            picks = rng.integers(0, B * T, self.S)
+            frames = np.asarray(obs.reshape(B * T, F))[picks]    # [S, F]
+            m0 = np.array(post.emis.m)  # writable copy
+            m0[:, :, 0] = frames.T
+            post = post._replace(emis=post.emis._replace(m=jnp.asarray(m0)))
+        last = -np.inf
+        for _ in range(sweeps):
+            gamma, xi, logZ = self._estep(post, xc, mask)
+            post = self._mstep(prior, gamma, xi, xc, mask)
+            e = float(logZ.sum())
+            if abs(e - last) < tol * (abs(e) + 1.0):
+                break
+            last = e
+        self.posterior = post
+        self._chained_prior = post     # Eq. 3
+        return last
+
+    def filtered_posterior(self, xc: jnp.ndarray, mask=None) -> jnp.ndarray:
+        """[B, T, S] filtering distributions (Code Fragment 14 analog)."""
+        from repro.core.factored_frontier import factored_frontier_filter, Factorial2TBN
+
+        if mask is None:
+            mask = jnp.ones(xc.shape[:2])
+        post = self.posterior
+        ll = self._emission_loglik(post, xc)
+        init = jax.nn.softmax(ef.dirichlet_expected_logprob(post.init))
+        trans = jax.nn.softmax(ef.dirichlet_expected_logprob(post.trans), -1)
+        model = Factorial2TBN(init=init[None], trans=trans[None])
+
+        def one(seq_ll):
+            beliefs, _ = factored_frontier_filter(model, seq_ll[:, None, :])
+            return beliefs[:, 0]
+
+        return jax.vmap(one)(ll)
+
+    def viterbi_states(self, xc) -> jnp.ndarray:
+        g, _, _ = self._estep(self.posterior, xc, jnp.ones(xc.shape[:2]))
+        return g.argmax(-1)
+
+    def state_means(self) -> np.ndarray:
+        """[S, F] emission means (bias term of the regression)."""
+        return np.asarray(self.posterior.emis.m[:, :, 0]).T
+
+
+class HiddenMarkovModel(_HMMBase):
+    """Plain Gaussian-emission HMM."""
+
+
+class AutoRegressiveHMM(_HMMBase):
+    """Emission mean = w_s^T [1, x_{t-1,f}] (per feature) — AR(1) per state."""
+
+    design_dim = 2
+
+    def _design(self, xc):
+        B, T, F = xc.shape
+        prev = jnp.concatenate([jnp.zeros((B, 1, F), xc.dtype), xc[:, :-1]], 1)
+        return jnp.stack([jnp.ones_like(prev), prev], -1)   # [B,T,F,2]
+
+
+class InputOutputHMM(_HMMBase):
+    """Emission mean = w_s^T [1, u_t] with exogenous input u (last column)."""
+
+    design_dim = 2
+
+    def __init__(self, attributes, n_states: int = 2, **kw):
+        super().__init__(attributes, n_states, **kw)
+        self.F = self.F - 1  # last REAL column is the input, not an emission
+        # rebuild priors with the reduced F
+        D = self.design_dim
+        self.prior = self.prior._replace(emis=ef.MVNormalGamma(
+            m=jnp.zeros((self.F, self.S, D)),
+            K=jnp.broadcast_to(jnp.eye(D), (self.F, self.S, D, D)),
+            a=jnp.full((self.F, self.S), kw.get("a0", 1.0)),
+            b=jnp.full((self.F, self.S), kw.get("b0", 1.0)),
+        ))
+        key = jax.random.PRNGKey(kw.get("seed", 0))
+        m0 = self.prior.emis.m + jax.random.normal(key, self.prior.emis.m.shape)
+        self.posterior = self.prior._replace(
+            emis=self.prior.emis._replace(m=m0))
+        self._chained_prior = self.prior
+
+    def _split(self, xc):
+        return xc[..., :-1], xc[..., -1]
+
+    def _design(self, xc):
+        y, u = self._split(xc)
+        B, T, F = y.shape
+        ones = jnp.ones((B, T, F, 1), xc.dtype)
+        uu = jnp.broadcast_to(u[..., None, None], (B, T, F, 1))
+        return jnp.concatenate([ones, uu], -1)
+
+    def _emission_loglik(self, post, xc):
+        y, _ = self._split(xc)
+        mom = ef.mvnormalgamma_moments(post.emis)
+        d = self._design(xc)
+        quad = jnp.einsum("btfa,fsac,btfc->btfs", d, mom.e_lamww, d)
+        lin = jnp.einsum("btfa,fsa->btfs", d, mom.e_lamw)
+        ll = 0.5 * (mom.e_loglam[None, None] - ef.LOG2PI
+                    - mom.e_lam[None, None] * (y * y)[..., None]
+                    + 2.0 * y[..., None] * lin - quad)
+        return ll.sum(2)
+
+    def _mstep(self, prior, gamma, xi, xc, mask):
+        y, _ = self._split(xc)
+        init = ef.Dirichlet(prior.init.alpha + gamma[:, 0].sum(0))
+        trans = ef.Dirichlet(prior.trans.alpha + xi.sum(0))
+        d = self._design(xc)
+        w = gamma * mask[..., None]
+        sxx = jnp.einsum("btfa,btfc,bts->fsac", d, d, w)
+        sxy = jnp.einsum("btfa,btf,bts->fsa", d, y, w)
+        syy = jnp.einsum("btf,btf,bts->fs", y, y, w)
+        n = jnp.broadcast_to(w.sum((0, 1))[None], syy.shape)
+        emis = ef.mvnormalgamma_update(
+            prior.emis, ef.RegSuffStats(sxx, sxy, syy, n))
+        return HMMPosterior(init=init, trans=trans, emis=emis)
+
+
+class FactorialHMMModel:
+    """Factorial HMM: C independent chains, joint Gaussian emission.
+
+    Learnt with the factored-frontier mean-field: each chain's E-step sees
+    the residual of the other chains' expected contributions (standard
+    structured VB for fHMM, Ghahramani & Jordan 1997)."""
+
+    def __init__(self, attributes, n_chains: int = 2, n_states: int = 2,
+                 *, seed: int = 0):
+        self.F = len([a for a in attributes if a.kind == REAL])
+        self.C, self.S = n_chains, n_states
+        key = jax.random.PRNGKey(seed)
+        self.means = jax.random.normal(key, (self.C, self.S, self.F))
+        self.log_trans = jnp.log(jnp.full((self.C, self.S, self.S), 1.0 / n_states))
+        self.log_init = jnp.log(jnp.full((self.C, self.S), 1.0 / n_states))
+        self.noise = jnp.asarray(1.0)
+
+    def update_model(self, data, *, sweeps: int = 15) -> float:
+        batch = data.collect() if isinstance(data, DynamicDataStream) else data
+        xc, mask = batch.xc, batch.mask            # [B,T,F], [B,T]
+        B, T, F = xc.shape
+        gammas = jnp.full((B, T, self.C, self.S), 1.0 / self.S)
+        ll_total = 0.0
+        for _ in range(sweeps):
+            # chain-wise E-step against residuals
+            new_gammas = []
+            for c in range(self.C):
+                others = [cc for cc in range(self.C) if cc != c]
+                resid = xc - sum(
+                    jnp.einsum("bts,sf->btf", gammas[:, :, cc], self.means[cc])
+                    for cc in others
+                ) if others else xc
+                ll = -(0.5 / self.noise) * (
+                    (resid[..., None, :] - self.means[c]) ** 2
+                ).sum(-1) - 0.5 * F * jnp.log(2 * jnp.pi * self.noise)
+                fb = jax.vmap(partial(forward_backward, self.log_init[c],
+                                      self.log_trans[c]))
+                g, xi, logZ = fb(ll, mask)
+                new_gammas.append(g)
+                # M-step for chain c (responsibility-weighted residual means)
+                w = (g * mask[..., None])
+                denom = jnp.maximum(w.sum((0, 1)), 1e-6)[:, None]
+                self.means = self.means.at[c].set(
+                    jnp.einsum("bts,btf->sf", w, resid) / denom)
+                self.log_trans = self.log_trans.at[c].set(
+                    jnp.log(jnp.maximum(xi.sum(0) + 1.0, 1e-6))
+                    - jnp.log(jnp.maximum(
+                        xi.sum(0).sum(-1, keepdims=True) + self.S, 1e-6)))
+                ll_total = float(logZ.sum())
+            gammas = jnp.stack(new_gammas, 2)
+        self.gammas = gammas
+        return ll_total
+
+
+class DynamicNaiveBayes(_HMMBase):
+    """Dynamic NB = HMM whose hidden class smooths over time; emissions are
+    NB-style independent Gaussians — structurally our plain HMM (the paper's
+    dynamic NB is exactly this 2TBN)."""
+
+
+# ---------------------------------------------------------------------------
+# Kalman filter (LDS) and switching LDS
+# ---------------------------------------------------------------------------
+
+
+class KalmanFilter:
+    """Linear dynamical system learnt by Bayesian EM (Code Fragment 10).
+
+    h_t = A h_{t-1} + w,  x_t = C h_t + v; q(A_rows), q(C_rows) are
+    MVNormalGamma; q(h_{1:T}) from Kalman smoothing at the posterior mean.
+    """
+
+    def __init__(self, attributes, n_hidden: int = 2, *, seed: int = 0):
+        self.F = len([a for a in attributes if a.kind == REAL])
+        self.L = n_hidden
+        key1, key2 = jax.random.split(jax.random.PRNGKey(seed))
+        L, F = self.L, self.F
+        self.A = 0.5 * jnp.eye(L) + 0.01 * jax.random.normal(key1, (L, L))
+        self.C = jax.random.normal(key2, (F, L))
+        self.q = jnp.asarray(0.3)   # process noise var
+        self.r = jnp.asarray(0.3)   # obs noise var
+        # Bayesian accumulators (prior precision for A and C rows)
+        self.KA = jnp.broadcast_to(jnp.eye(L), (L, L, L))
+        self.KC = jnp.broadcast_to(jnp.eye(L), (F, L, L))
+
+    def set_num_hidden(self, n: int) -> "KalmanFilter":
+        self.__init__([Attribute(f"G{i}", REAL) for i in range(self.F)], n)
+        return self
+
+    # -- E-step: Kalman smoothing (scan) --------------------------------------
+
+    def _smooth(self, xs: jnp.ndarray):
+        """xs [T, F] -> means [T, L], covs [T, L, L], pair moments, loglik."""
+        L, F = self.L, self.F
+        A, C, q, r = self.A, self.C, self.q, self.r
+        Q = q * jnp.eye(L)
+        R = r * jnp.eye(F)
+
+        def fstep(carry, x_t):
+            m, P, ll = carry
+            mp = A @ m
+            Pp = A @ P @ A.T + Q
+            S = C @ Pp @ C.T + R
+            Sinv = jnp.linalg.inv(S)
+            Kg = Pp @ C.T @ Sinv
+            innov = x_t - C @ mp
+            m_new = mp + Kg @ innov
+            P_new = (jnp.eye(L) - Kg @ C) @ Pp
+            _, logdet = jnp.linalg.slogdet(S)
+            ll_new = ll - 0.5 * (logdet + innov @ Sinv @ innov
+                                 + F * jnp.log(2 * jnp.pi))
+            return (m_new, P_new, ll_new), (m_new, P_new, mp, Pp)
+
+        m0 = jnp.zeros(L)
+        P0 = jnp.eye(L)
+        (mT, PT, ll), (fm, fP, pm, pP) = jax.lax.scan(
+            fstep, (m0, P0, 0.0), xs)
+
+        def bstep(carry, inp):
+            ms_next, Ps_next = carry
+            fm_t, fP_t, pm_t1, pP_t1 = inp
+            J = fP_t @ A.T @ jnp.linalg.inv(pP_t1)
+            ms = fm_t + J @ (ms_next - pm_t1)
+            Ps = fP_t + J @ (Ps_next - pP_t1) @ J.T
+            pair = J @ Ps_next  # Cov(h_t, h_{t+1})
+            return (ms, Ps), (ms, Ps, pair)
+
+        (m1, P1), (sm, sP, pair) = jax.lax.scan(
+            bstep, (fm[-1], fP[-1]),
+            (fm[:-1], fP[:-1], pm[1:], pP[1:]), reverse=True)
+        sm = jnp.concatenate([sm, fm[-1][None]], 0)
+        sP = jnp.concatenate([sP, fP[-1][None]], 0)
+        return sm, sP, pair, ll
+
+    def update_model(self, data, *, sweeps: int = 25) -> float:
+        batch = data.collect() if isinstance(data, DynamicDataStream) else data
+        xs = batch.xc                                # [B, T, F]
+        B, T, F = xs.shape
+        L = self.L
+        if not getattr(self, "_warm", False):
+            # PCA warm start: C <- top-L principal axes, A <- lag-1 regression
+            self._warm = True
+            flat = np.asarray(xs.reshape(B * T, F))
+            flat = flat - flat.mean(0)
+            _, _, vt = np.linalg.svd(flat, full_matrices=False)
+            C0 = vt[:L].T                            # [F, L]
+            scores = flat @ C0                       # [B*T, L]
+            sc = scores.reshape(B, T, L)
+            xlag = sc[:, :-1].reshape(-1, L)
+            xnext = sc[:, 1:].reshape(-1, L)
+            A0 = np.linalg.lstsq(xlag, xnext, rcond=None)[0].T
+            self.C = jnp.asarray(C0, jnp.float32)
+            self.A = jnp.asarray(A0, jnp.float32)
+        ll = 0.0
+        for _ in range(sweeps):
+            sm, sP, pair, lls = jax.vmap(self._smooth)(xs)
+            ll = float(lls.sum())
+            # expected moments
+            Ehh = sP + sm[..., :, None] * sm[..., None, :]       # [B,T,L,L]
+            Ehh_lag = pair + sm[:, :-1, :, None] * sm[:, 1:, None, :]
+            # transition regression: h_t on h_{t-1}
+            Sxx = Ehh[:, :-1].sum((0, 1)) + jnp.eye(L)
+            Sxy = Ehh_lag.sum((0, 1))                            # [L, L] (t,t+1)
+            self.A = jnp.linalg.solve(Sxx, Sxy).T
+            # emission regression: x_t on h_t
+            Hxx = Ehh.sum((0, 1)) + jnp.eye(L)
+            Hxy = jnp.einsum("btl,btf->lf", sm, xs)
+            self.C = jnp.linalg.solve(Hxx, Hxy).T
+            # noise variances
+            resid = xs - jnp.einsum("fl,btl->btf", self.C, sm)
+            self.r = jnp.maximum(
+                (resid ** 2).mean() + jnp.einsum(
+                    "fl,btlm,fm->", self.C, sP, self.C) / (B * T * F), 1e-4)
+            dyn = sm[:, 1:] - jnp.einsum("lm,btm->btl", self.A, sm[:, :-1])
+            self.q = jnp.maximum((dyn ** 2).mean(), 1e-4)
+        self.smoothed = sm
+        return ll
+
+    def get_model(self):
+        return {"A": self.A, "C": self.C, "q": self.q, "r": self.r}
+
+    def filtered_states(self, xs: jnp.ndarray) -> jnp.ndarray:
+        sm, _, _, _ = jax.vmap(self._smooth)(xs)
+        return sm
+
+
+class SwitchingLDS:
+    """Switching LDS: discrete switch s_t selects the dynamics matrix A_s.
+
+    Structured mean-field: q(s) (factored frontier over the switch chain,
+    using expected innovation likelihoods) x q(h) (Kalman smoothing under
+    switch-averaged dynamics); M-step = responsibility-weighted regressions.
+    """
+
+    def __init__(self, attributes, n_states: int = 2, n_hidden: int = 2,
+                 *, seed: int = 0):
+        self.F = len([a for a in attributes if a.kind == REAL])
+        self.S, self.L = n_states, n_hidden
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        self.A = (0.5 * jnp.eye(self.L)[None]
+                  + 0.3 * jax.random.normal(k1, (self.S, self.L, self.L)))
+        self.C = jax.random.normal(k2, (self.F, self.L))
+        self.q = jnp.asarray(0.3)
+        self.r = jnp.asarray(0.3)
+        self.log_trans = jnp.log(
+            0.9 * jnp.eye(self.S) + 0.1 / self.S)
+        self.base = KalmanFilter(
+            [Attribute(f"G{i}", REAL) for i in range(self.F)], n_hidden)
+
+    def update_model(self, data, *, sweeps: int = 10) -> float:
+        from repro.core.factored_frontier import (
+            Factorial2TBN, factored_frontier_filter)
+
+        batch = data.collect() if isinstance(data, DynamicDataStream) else data
+        xs = batch.xc
+        B, T, F = xs.shape
+        S, L = self.S, self.L
+        resp = jnp.full((B, T, S), 1.0 / S)
+        ll = 0.0
+        for _ in range(sweeps):
+            # q(h): smooth under switch-averaged A
+            self.base.C = self.C
+            self.base.q, self.base.r = self.q, self.r
+            self.base.A = jnp.einsum(
+                "bts,slm->lm", resp, self.A) / (B * T)
+            sm, sP, pair, lls = jax.vmap(self.base._smooth)(xs)
+            ll = float(lls.sum())
+            # q(s): innovation loglik per switch state
+            pred = jnp.einsum("slm,btm->btsl", self.A, sm[:, :-1])
+            innov = sm[:, 1:, None, :] - pred                 # [B,T-1,S,L]
+            loglik = -0.5 * (innov ** 2).sum(-1) / self.q
+            loglik = jnp.concatenate(
+                [jnp.zeros((B, 1, S)), loglik], axis=1)
+            model = Factorial2TBN(
+                init=jnp.full((1, S), 1.0 / S),
+                trans=jnp.exp(self.log_trans)[None])
+
+            def one(seq_ll):
+                beliefs, _ = factored_frontier_filter(model, seq_ll[:, None, :])
+                return beliefs[:, 0]
+
+            resp = jax.vmap(one)(loglik)
+            # M-step: per-switch-state transition regression
+            Ehh = sP + sm[..., :, None] * sm[..., None, :]
+            Ehh_lag = pair + sm[:, :-1, :, None] * sm[:, 1:, None, :]
+            for s in range(S):
+                w = resp[:, 1:, s]
+                Sxx = jnp.einsum("bt,btlm->lm", w, Ehh[:, :-1]) + jnp.eye(L)
+                Sxy = jnp.einsum("bt,btlm->lm", w, Ehh_lag)
+                self.A = self.A.at[s].set(jnp.linalg.solve(Sxx, Sxy).T)
+            # shared emission + noises (as in KalmanFilter)
+            Hxx = Ehh.sum((0, 1)) + jnp.eye(L)
+            Hxy = jnp.einsum("btl,btf->lf", sm, xs)
+            self.C = jnp.linalg.solve(Hxx, Hxy).T
+            resid = xs - jnp.einsum("fl,btl->btf", self.C, sm)
+            self.r = jnp.maximum((resid ** 2).mean(), 1e-4)
+            dyn = sm[:, 1:] - jnp.einsum(
+                "bts,slm,btm->btl", resp[:, 1:], self.A, sm[:, :-1])
+            self.q = jnp.maximum((dyn ** 2).mean(), 1e-4)
+        self.resp = resp
+        return ll

@@ -1,0 +1,194 @@
+"""Static latent-variable models — paper Table 2, left column."""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dag import PlateSpec
+from repro.data.stream import Attribute, Batch, FINITE, REAL
+from repro.pgm_models.base import Model
+
+
+def _split_attrs(attributes: Sequence[Attribute]):
+    cont = [a for a in attributes if a.kind == REAL]
+    disc = [a for a in attributes if a.kind == FINITE]
+    return cont, disc
+
+
+class GaussianMixture(Model):
+    """Diagonal Gaussian mixture with a global discrete latent (CF 7)."""
+
+    def __init__(self, attributes, n_states: int = 2, **kw):
+        self.n_states = n_states
+        super().__init__(attributes, **kw)
+
+    def build_spec(self) -> Tuple[PlateSpec, Optional[jnp.ndarray]]:
+        cont, disc = _split_attrs(self.attributes)
+        if disc:
+            raise ValueError("GaussianMixture expects continuous attributes")
+        return PlateSpec(n_features=len(cont), latent_card=self.n_states), None
+
+
+class MultivariateGaussian(Model):
+    """Full-covariance Gaussian via the CLG chain rule:
+    p(x) = prod_f N(x_f | w^T [1, x_<f]) — a dense upper-triangular CLG DAG."""
+
+    def build_spec(self):
+        cont, disc = _split_attrs(self.attributes)
+        F = len(cont)
+        parents = tuple(tuple(range(f)) for f in range(F))
+        return PlateSpec(n_features=F, latent_card=0,
+                         feature_parents=parents), None
+
+    def joint_mean(self) -> np.ndarray:
+        """Implied joint mean via ancestral substitution."""
+        p = self.posterior
+        lay = self.cp.layout
+        mu = np.zeros(lay.F)
+        for f in range(lay.F):
+            w = np.asarray(p.reg.m[f, 0])
+            mu[f] = w[0] + sum(w[1 + j] * mu[j] for j in range(f))
+        return mu
+
+
+class NaiveBayes(Model):
+    """Unsupervised NB (latent class) over mixed continuous/discrete leaves."""
+
+    def __init__(self, attributes, n_states: int = 2, **kw):
+        self.n_states = n_states
+        super().__init__(attributes, **kw)
+
+    def build_spec(self):
+        cont, disc = _split_attrs(self.attributes)
+        dmap = []
+        # discrete leaves are indexed AFTER continuous in (xc | xd) layout
+        for j, a in enumerate(disc):
+            dmap.append((len(cont) + j, a.card))
+        return PlateSpec(n_features=len(cont) + len(disc),
+                         latent_card=self.n_states,
+                         discrete_features=tuple(dmap)), None
+
+
+class NaiveBayesClassifier(NaiveBayes):
+    """Supervised NB: last discrete attribute is the observed class."""
+
+    def __init__(self, attributes, **kw):
+        cont, disc = _split_attrs(attributes)
+        if not disc:
+            raise ValueError("needs a class attribute (FINITE_SET, last)")
+        self.class_card = disc[-1].card
+        # class column is consumed as the label -> not a leaf
+        feats = [a for a in attributes if a is not disc[-1]]
+        super().__init__(feats, n_states=self.class_card, **kw)
+
+    def supervised_r(self, batch: Batch) -> Optional[jnp.ndarray]:
+        # label column = LAST discrete column of the incoming batch
+        y = batch.xd[:, -1]
+        return jnp.eye(self.class_card)[y.astype(jnp.int32)]
+
+    def _as_batch(self, data) -> Batch:
+        b = super()._as_batch(data)
+        # strip the label column from the leaf matrix (keep it for supervised_r)
+        return b
+
+    def update_model(self, data, **kw) -> float:
+        b = super()._as_batch(data)
+        r = self.supervised_r(b)
+        stripped = Batch(b.xc, b.xd[:, :-1], b.mask)
+        from repro.core import vmp
+
+        stats, _ = vmp.local_step(self.cp, self.posterior, stripped.xc,
+                                  stripped.xd, stripped.mask, r)
+        post = vmp.global_update(self._chained_prior, stats)
+        e = float(vmp.elbo(self.cp, self._chained_prior, post, stats))
+        self.posterior = post
+        self._chained_prior = post
+        self.n_seen += int(b.mask.sum())
+        return e
+
+    def predict(self, data) -> jnp.ndarray:
+        b = super()._as_batch(data)
+        stripped = Batch(b.xc, b.xd[:, :-1] if b.xd.shape[1] else b.xd, b.mask)
+        return self.posterior_z(stripped).argmax(-1)
+
+
+class GaussianDiscriminantAnalysis(NaiveBayesClassifier):
+    """GDA = supervised Gaussian class-conditionals; same machinery as the
+    supervised NB with continuous leaves only (diagonal covariances)."""
+
+
+class BayesianLinearRegression(Model):
+    """Last REAL attribute regressed on all other REAL attributes."""
+
+    def build_spec(self):
+        cont, disc = _split_attrs(self.attributes)
+        F = len(cont)
+        parents = tuple(
+            tuple(range(F - 1)) if f == F - 1 else () for f in range(F)
+        )
+        return PlateSpec(n_features=F, latent_card=0,
+                         feature_parents=parents), None
+
+    def coefficients(self) -> np.ndarray:
+        """[bias, w_1..w_d] posterior mean of the regression weights."""
+        m = np.asarray(self.posterior.reg.m[-1, 0])
+        lay = self.cp.layout
+        return m[: 1 + lay.P]
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        w = jnp.asarray(self.coefficients())
+        return w[0] + x @ w[1:]
+
+
+class FactorAnalysis(Model):
+    """x = W h + mu + eps with h ~ N(0, I_L) — PPCA when noise is tied."""
+
+    def __init__(self, attributes, n_hidden: int = 2, **kw):
+        self.n_hidden = n_hidden
+        super().__init__(attributes, **kw)
+
+    def build_spec(self):
+        cont, _ = _split_attrs(self.attributes)
+        return PlateSpec(n_features=len(cont), latent_card=0,
+                         latent_dim=self.n_hidden), None
+
+    def loading_matrix(self) -> np.ndarray:
+        """[F, L] posterior-mean factor loadings."""
+        lay = self.cp.layout
+        return np.asarray(self.posterior.reg.m[:, 0, 1 + lay.P:])
+
+
+class MixtureOfFA(Model):
+    """Mixture of factor analysers: discrete latent selects the loading."""
+
+    def __init__(self, attributes, n_states: int = 2, n_hidden: int = 2, **kw):
+        self.n_states = n_states
+        self.n_hidden = n_hidden
+        super().__init__(attributes, **kw)
+
+    def build_spec(self):
+        cont, _ = _split_attrs(self.attributes)
+        return PlateSpec(n_features=len(cont), latent_card=self.n_states,
+                         latent_dim=self.n_hidden), None
+
+
+class CustomGlobalLocalModel(Model):
+    """The paper's Code-Fragment-11 custom model: a global multinomial hidden
+    variable plus ONE local Gaussian hidden parent per observed leaf.
+
+    Realized as latent_dim = F with a diagonal latent mask: leaf f sees only
+    latent dimension f."""
+
+    def __init__(self, attributes, n_states: int = 2, **kw):
+        self.n_states = n_states
+        super().__init__(attributes, **kw)
+
+    def build_spec(self):
+        cont, _ = _split_attrs(self.attributes)
+        F = len(cont)
+        mask = jnp.eye(F, dtype=jnp.float32)
+        return PlateSpec(n_features=F, latent_card=self.n_states,
+                         latent_dim=F), mask

@@ -1,0 +1,95 @@
+"""Batched request serving — the inference-side example driver.
+
+A minimal continuous-batching engine: a fixed batch of request slots decodes
+in lock-step (synchronized positions — the layout ``decode_32k``/
+``long_500k`` lower); finished requests free their slot for queued prompts.
+Slot refill uses teacher-forced prefill via repeated decode steps (simple,
+cache-correct); a production system would run a separate prefill graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, params, cfg: ModelConfig, batch: int, capacity: int,
+                 sh: T.Shardings = T.NO_SHARD, eos: Optional[int] = None,
+                 greedy: bool = True, seed: int = 0):
+        self.params, self.cfg, self.sh = params, cfg, sh
+        self.batch, self.capacity = batch, capacity
+        self.eos = eos
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.state = T.init_decode_state(params, cfg, batch, capacity, sh)
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * batch
+        self._step = jax.jit(
+            lambda st, tok: T.decode_step(params, st, tok, cfg, sh))
+        self._pending_prefill: List[List[int]] = [[] for _ in range(batch)]
+        self._tok = np.zeros((batch, 1), np.int32)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for i in range(self.batch):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[i] = req
+                # prompt tokens are fed one per engine step (lock-step decode)
+                self._pending_prefill[i] = list(req.prompt)
+                self._tok[i, 0] = self._pending_prefill[i].pop(0) \
+                    if self._pending_prefill[i] else 0
+
+    def step(self) -> int:
+        """One synchronized decode step for the whole batch.
+
+        Returns the number of active requests."""
+        self._fill_slots()
+        if not any(self.active):
+            return 0
+        logits, self.state = self._step(self.state, jnp.asarray(self._tok))
+        if self.greedy:
+            nxt = np.asarray(logits[:, 0].argmax(-1), np.int32)
+        else:
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(
+                jax.random.categorical(sub, logits[:, 0]), np.int32)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self._pending_prefill[i]:
+                # still teacher-forcing the prompt
+                self._tok[i, 0] = self._pending_prefill[i].pop(0)
+                continue
+            tok = int(nxt[i])
+            req.out.append(tok)
+            self._tok[i, 0] = tok
+            if (self.eos is not None and tok == self.eos) \
+                    or len(req.out) >= req.max_new:
+                req.done = True
+                self.active[i] = None
+        return sum(r is not None for r in self.active)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break

@@ -1,0 +1,7 @@
+"""PartitionSpec tables per (architecture x mode x mesh) — DESIGN.md §5."""
+
+from repro.sharding.specs import (
+    decode_state_specs,
+    param_specs,
+    train_state_specs,
+)

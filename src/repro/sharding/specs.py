@@ -1,0 +1,184 @@
+"""PartitionSpec trees for params / optimizer / decode states.
+
+Logical layout (DESIGN.md §5), production mesh ('pod','data','model'):
+
+  TRAIN  — FSDP('data') x TP('model'), pure DP over 'pod':
+    d_model-indexed weight dims  -> 'data'   (ZeRO weight sharding)
+    head/ff/expert/vocab dims    -> 'model'  (tensor parallel)
+    optimizer moments inherit the param specs (ZeRO-1/3 for free).
+
+  SERVE  — TP('model') only (bf16 weights fit); batch over ('pod','data');
+    decode-mode attention weights replicated, KV cache SEQ-sharded over
+    'model' (context parallel — see attention.attention_decode_ctx_parallel).
+
+Specs are matched to leaves by parameter NAME (the last one/two path keys),
+so the one rule table covers every architecture's tree shape.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+def _rules(fsdp: Optional[str], model: str, stacked: bool, mode: str,
+           cfg: ModelConfig):
+    """name -> spec for the trailing (non-layer) dims."""
+    # §Perf change D: decode attention WEIGHTS shard over 'model' (q-heads)
+    # even though decode ACTIVATIONS are model-replicated for the
+    # ctx-parallel KV path — GSPMD inserts tiny [B,1,H,D] activation
+    # gathers/psums instead of every chip reading every attention weight.
+    att_model = model
+    table = {
+        # embeddings
+        "table": P(model, fsdp),
+        "pos": P(fsdp, None),
+        # norms
+        "scale": P(None), "bias": P(None),
+        # attention [d, H, hd] / [H, hd, d]
+        # q heads sharded (G-major GQA fold keeps this TP-able); k/v head
+        # counts are usually < mesh model size -> replicated over 'model'
+        "wq": P(fsdp, att_model, None),
+        "wk": P(fsdp, None, None),
+        "wv": P(fsdp, None, None),
+        "wo": P(att_model, None, fsdp),
+        # dense mlp
+        "w_gate": P(fsdp, model),
+        "w_up": P(fsdp, model),
+        "w_down": P(model, fsdp),
+        "b_up": P(model), "b_down": P(None),
+        # moe (EP layout [s, E_loc, d, ff_loc]); router replicated
+        "router": P(None, None),
+        "moe/w_gate": P(model, None, fsdp, None),
+        "moe/w_up": P(model, None, fsdp, None),
+        "moe/w_down": P(model, None, None, fsdp),
+        # mamba2
+        "w_z": P(fsdp, model), "w_x": P(fsdp, model),
+        "w_B": P(fsdp, None), "w_C": P(fsdp, None),
+        "w_dt": P(fsdp, model),
+        "conv_x": P(None, model), "conv_b_x": P(model),
+        "conv_bc": P(None, None), "conv_b_bc": P(None),
+        "A_log": P(model), "D": P(model), "dt_bias": P(model),
+        "norm_scale": P(model),
+        "w_out": P(model, fsdp),
+    }
+    return table
+
+
+def fix_spec(spec: P, shape: Tuple[int, ...],
+             axis_sizes: Optional[dict]) -> P:
+    """Drop axis names on dims they don't evenly divide (-> replicate).
+
+    jax requires in_shardings to divide the dim exactly (e.g. granite's
+    vocab 49155 cannot shard 16-ways) — such dims fall back to replicated,
+    which is also what a production system does for ragged vocab tails.
+    """
+    if axis_sizes is None:
+        return spec
+    fixed = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= axis_sizes.get(a, 1)
+        fixed.append(ax if dim % size == 0 else None)
+    return P(*fixed[: len(shape)])
+
+
+def param_specs(params: PyTree, cfg: ModelConfig, mode: str = "train", *,
+                data_axes: Tuple[str, ...] = ("data",),
+                model_axis: str = "model",
+                axis_sizes: Optional[dict] = None) -> PyTree:
+    """Build the PartitionSpec tree matching ``params``.
+
+    mode: 'train' (FSDP+TP) | 'serve' (TP) | 'decode' (TP, attn replicated).
+    ``axis_sizes``: mesh axis sizes for divisibility fixing (see fix_spec).
+    """
+    if mode == "train_fsdp":
+        # pure-FSDP strategy (§Perf change C): weights sharded over EVERY
+        # mesh axis, no tensor parallelism — activation psums disappear in
+        # favour of param all-gathers + grad reduce-scatters.
+        fsdp = tuple(data_axes) + (model_axis,)
+        model_axis = None
+    else:
+        fsdp = data_axes[-1] if mode == "train" else None
+    rules = _rules(fsdp, model_axis, True, mode, cfg)
+
+    def spec_for(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        parent = keys[-2] if len(keys) > 1 else ""
+        qual = f"{parent}/{name}"
+        spec = rules.get(qual, rules.get(name))
+        if spec is None:
+            return P()  # replicate unknowns
+        # layer-stacked leaves ([L, ...]) get a leading None
+        base_dims = len(spec)
+        if leaf.ndim == base_dims + 1:
+            spec = P(*((None,) + tuple(spec)))
+        elif leaf.ndim != base_dims:
+            return P()  # shape mismatch (e.g. shared block unstacked): safe
+        return fix_spec(spec, tuple(leaf.shape), axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def train_state_specs(state, cfg: ModelConfig, *, data_axes=("data",),
+                      model_axis="model", axis_sizes=None, mode="train"):
+    """TrainState / VBTrainState specs: moments mirror the param specs."""
+    pspec = param_specs(state.params if hasattr(state, "params")
+                        else state.vb.mean, cfg, mode,
+                        data_axes=data_axes, model_axis=model_axis,
+                        axis_sizes=axis_sizes)
+    if hasattr(state, "params"):   # AdamW TrainState
+        return type(state)(
+            params=pspec,
+            opt=type(state.opt)(m=pspec, v=pspec, step=P()),
+            step=P(),
+        )
+    # VBTrainState
+    vb = state.vb
+    return type(state)(
+        vb=type(vb)(mean=pspec, fisher=pspec, prior_mean=pspec,
+                    prior_prec=pspec, step=P()),
+        step=P(),
+    )
+
+
+def decode_state_specs(state, cfg: ModelConfig, *, data_axes=("data",),
+                       model_axis="model", axis_sizes=None):
+    """DecodeState specs: KV caches [L, B, C, Hkv, D] — batch over data,
+    cache SEQ over 'model' (context parallel); SSM states head-sharded."""
+    def fx(spec, leaf):
+        return fix_spec(spec, tuple(leaf.shape), axis_sizes)
+
+    def kv_spec(cache):
+        return type(cache)(
+            k=fx(P(None, data_axes, model_axis, None, None), cache.k),
+            v=fx(P(None, data_axes, model_axis, None, None), cache.v),
+            length=P(None),
+        )
+
+    kv = kv_spec(state.kv) if state.kv is not None else None
+    shared = kv_spec(state.shared_kv) if state.shared_kv is not None else None
+    ssm = None
+    if state.ssm is not None:
+        ssm = type(state.ssm)(
+            h=fx(P(None, data_axes, model_axis, None, None), state.ssm.h),
+            conv_x=fx(P(None, data_axes, None, model_axis), state.ssm.conv_x),
+            conv_bc=fx(P(None, data_axes, None, None), state.ssm.conv_bc),
+        )
+    enc_kv = None
+    if state.enc_kv is not None:
+        enc_kv = (fx(P(None, data_axes, None, None, None), state.enc_kv[0]),
+                  fx(P(None, data_axes, None, None, None), state.enc_kv[1]))
+    return type(state)(kv=kv, ssm=ssm, shared_kv=shared, enc_kv=enc_kv)

@@ -1,0 +1,51 @@
+"""Checkpointing: flat-key npz round-trip for arbitrary pytrees.
+
+Plays the role of the paper's model-persistence (HUGIN/ARFF export): the
+neutral numpy container is the interop boundary (DESIGN.md §7.3).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+_SEP = "\x1f"  # unit separator: safe key joiner
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: PyTree) -> None:
+    tmp = path + ".tmp.npz"  # savez keeps the name when it ends with .npz
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+
+
+def load(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path) as data:
+        flat, tdef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                            for q in p)
+            arr = data[key]
+            if arr.shape != tuple(leaf.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+            leaves.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)

@@ -1,0 +1,98 @@
+"""Hand-rolled optimizers (no optax in this environment).
+
+``adamw``            standard AdamW with cosine schedule + warmup.
+``sgd_momentum``     baseline.
+
+State is a pytree mirroring params; everything jit/pjit-friendly.  Under the
+production mesh the (m, v) moments inherit the FSDP param sharding, giving
+ZeRO-1/3 semantics for free.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    m: PyTree
+    v: PyTree
+    step: jnp.ndarray
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(m=z, v=jax.tree_util.tree_map(jnp.copy, z),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        return base_lr * w * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+    return lr
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: AdamWState, *,
+                 lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                 clip_norm=1.0) -> Tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    # global-norm clip (fp32)
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_fn(step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** step)
+        vhat = v / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(m=new_m, v=new_v, step=step)
+
+
+class SGDState(NamedTuple):
+    mom: PyTree
+    step: jnp.ndarray
+
+
+def sgd_init(params: PyTree) -> SGDState:
+    return SGDState(
+        mom=jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params),
+        step=jnp.zeros((), jnp.int32))
+
+
+def sgd_update(params, grads, state: SGDState, *, lr=1e-2, momentum=0.9):
+    def upd(p, g, m):
+        m = momentum * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    out = [upd(p, g, m) for p, g, m in zip(
+        flat_p, jax.tree_util.tree_leaves(grads),
+        jax.tree_util.tree_leaves(state.mom))]
+    return (tdef.unflatten([o[0] for o in out]),
+            SGDState(mom=tdef.unflatten([o[1] for o in out]),
+                     step=state.step + 1))

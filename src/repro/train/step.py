@@ -1,0 +1,110 @@
+"""train_step / loss — the jit/pjit unit the launcher lowers.
+
+``train_step``     AdamW step (the throughput baseline).
+``vb_train_step``  streaming-VB (VON) step — the paper's technique as a
+                   first-class training mode (--optimizer vb).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.bayes import vb_optimizer as vb
+from repro.configs.base import ModelConfig
+from repro.nn import transformer as T
+from repro.train import optimizer as opt
+
+PyTree = Any
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            mask: Optional[jnp.ndarray] = None,
+            z_loss: float = 1e-4) -> jnp.ndarray:
+    """Next-token cross entropy with z-loss; logits fp32 [B, S, V]."""
+    logz = jax.nn.logsumexp(logits, -1)                      # [B, S]
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    nll = logz - gold
+    zl = z_loss * logz ** 2
+    per_tok = nll + zl
+    if mask is None:
+        return per_tok.mean()
+    return (per_tok * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+class TrainBatch(NamedTuple):
+    tokens: jnp.ndarray          # [B, S] int32
+    labels: jnp.ndarray          # [B, S] int32 (shifted by the pipeline)
+    enc_input: Optional[jnp.ndarray] = None  # audio/vlm stub embeddings
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: opt.AdamWState
+    step: jnp.ndarray
+
+
+def init_train_state(params: PyTree) -> TrainState:
+    return TrainState(params=params, opt=opt.adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def loss_fn(params, batch: TrainBatch, cfg: ModelConfig, sh: T.Shardings,
+            aux_weight: float = 0.01):
+    out = T.forward(params, batch.tokens, cfg, sh, remat=True,
+                    enc_input=batch.enc_input)
+    loss = lm_loss(out.logits, batch.labels)
+    return loss + aux_weight * out.moe_aux, (loss, out.moe_aux)
+
+
+def train_step(state: TrainState, batch: TrainBatch, cfg: ModelConfig,
+               sh: T.Shardings = T.NO_SHARD, *,
+               lr_fn=opt.cosine_schedule(3e-4, 100, 10_000)
+               ) -> Tuple[TrainState, dict]:
+    (total, (loss, aux)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(state.params, batch, cfg, sh)
+    params, ostate = opt.adamw_update(state.params, grads, state.opt,
+                                      lr_fn=lr_fn)
+    return (TrainState(params=params, opt=ostate, step=state.step + 1),
+            {"loss": loss, "moe_aux": aux, "total": total})
+
+
+# -- streaming-VB training mode (the paper's technique) -------------------------
+
+
+class VBTrainState(NamedTuple):
+    vb: vb.VBState
+    step: jnp.ndarray
+
+
+def init_vb_state(params: PyTree, prior_prec: float = 1.0) -> VBTrainState:
+    return VBTrainState(vb=vb.vb_init(params, prior_prec=prior_prec),
+                        step=jnp.zeros((), jnp.int32))
+
+
+def vb_train_step(state: VBTrainState, batch: TrainBatch, cfg: ModelConfig,
+                  sh: T.Shardings = T.NO_SHARD, *, n_total: float = 1e6,
+                  lr: float = 0.1) -> Tuple[VBTrainState, dict]:
+    """One VON step: grads of the NLL -> natural-gradient posterior update.
+
+    The gradient all-reduce over the data axes IS the d-VMP message psum
+    (DESIGN.md §2); XLA inserts it from the sharding of ``batch``.
+    """
+    (total, (loss, aux)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(state.vb.mean, batch, cfg, sh)
+    new_vb = vb.vb_update(state.vb, grads, n_total=n_total, lr=lr)
+    return (VBTrainState(vb=new_vb, step=state.step + 1),
+            {"loss": loss, "moe_aux": aux, "total": total,
+             "kl": vb.posterior_kl(new_vb, n_total)})
+
+
+# -- serve step ------------------------------------------------------------------
+
+
+def serve_step(params: PyTree, state: T.DecodeState, token: jnp.ndarray,
+               cfg: ModelConfig, sh: T.Shardings = T.NO_SHARD):
+    """ONE new token against the KV/SSM cache — the decode-shape unit."""
+    return T.decode_step(params, state, token, cfg, sh)

@@ -1,0 +1,104 @@
+"""Trainer loop: checkpointing, eval, drift-aware streaming training.
+
+Ties the substrate together the way the examples/launchers use it:
+AdamW or streaming-VB steps, periodic eval + checkpoint, and — when the
+drift monitor fires — Eq.-3 prior chaining with tempering (the NN analog of
+core/streaming.stream_update's drift response).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bayes import vb_optimizer as vb
+from repro.bayes.drift import LossDriftMonitor
+from repro.configs.base import ModelConfig
+from repro.nn import transformer as T
+from repro.train import checkpoint as ck
+from repro.train import optimizer as opt
+from repro.train import step as ts
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    optimizer: str = "adamw"          # adamw | vb
+    lr: float = 3e-4
+    steps: int = 1000
+    warmup: int = 100
+    n_total: float = 1e6              # stream scale for VB
+    ckpt_path: Optional[str] = None
+    ckpt_every: int = 500
+    eval_every: int = 100
+    drift_threshold: float = 5.0
+    drift_temper: float = 0.3         # prior forgetting on drift (Eq. 3)
+    log_every: int = 25
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, params, tcfg: TrainerConfig,
+                 sh: T.Shardings = T.NO_SHARD):
+        self.cfg, self.tcfg, self.sh = cfg, tcfg, sh
+        self.monitor = LossDriftMonitor.create(tcfg.drift_threshold)
+        self.history: list = []
+        self.n_drifts = 0
+        if tcfg.optimizer == "adamw":
+            self.state = ts.init_train_state(params)
+            lr_fn = opt.cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.steps)
+            self._step = jax.jit(
+                partial(ts.train_step, cfg=cfg, sh=sh, lr_fn=lr_fn))
+        else:
+            self.state = ts.init_vb_state(params)
+            self._step = jax.jit(
+                partial(ts.vb_train_step, cfg=cfg, sh=sh,
+                        n_total=tcfg.n_total, lr=tcfg.lr))
+
+    @property
+    def params(self):
+        return (self.state.params if self.tcfg.optimizer == "adamw"
+                else self.state.vb.mean)
+
+    def _on_drift(self):
+        """Eq.-3 response: temper the chained prior so the model re-adapts
+        (VB mode); AdamW mode just logs (no prior to chain)."""
+        self.n_drifts += 1
+        if self.tcfg.optimizer == "vb":
+            new_vb = vb.chain_prior(self.state.vb, self.tcfg.n_total,
+                                    temper=self.tcfg.drift_temper)
+            self.state = self.state._replace(vb=new_vb)
+
+    def fit(self, batches: Iterator, eval_fn: Optional[Callable] = None
+            ) -> dict:
+        t0 = time.time()
+        tok_per_batch = None
+        for i, batch in enumerate(batches):
+            if tok_per_batch is None:
+                tok_per_batch = int(np.prod(batch.tokens.shape))
+            self.state, metrics = self._step(self.state, batch)
+            loss = float(metrics["loss"])
+            self.history.append(loss)
+            self.monitor, drifted = self.monitor.observe(jnp.asarray(loss))
+            if bool(drifted):
+                self._on_drift()
+            if self.tcfg.log_every and i % self.tcfg.log_every == 0:
+                tps = tok_per_batch * (i + 1) / (time.time() - t0)
+                print(f"[trainer] step={i:5d} loss={loss:.4f} "
+                      f"tok/s={tps:,.0f}"
+                      + (" DRIFT" if bool(drifted) else ""))
+            if eval_fn and self.tcfg.eval_every \
+                    and i and i % self.tcfg.eval_every == 0:
+                eval_fn(self.params, i)
+            if self.tcfg.ckpt_path and self.tcfg.ckpt_every \
+                    and i and i % self.tcfg.ckpt_every == 0:
+                ck.save(self.tcfg.ckpt_path, self.params)
+        if self.tcfg.ckpt_path:
+            ck.save(self.tcfg.ckpt_path, self.params)
+        return {"final_loss": self.history[-1],
+                "n_drifts": self.n_drifts,
+                "steps": len(self.history)}

@@ -1,0 +1,72 @@
+"""Exponential-family algebra: conjugate updates vs closed forms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import expfam as ef
+
+
+def test_dirichlet_update_and_mean():
+    prior = ef.Dirichlet(jnp.array([1.0, 1.0, 1.0]))
+    post = ef.dirichlet_update(prior, jnp.array([10.0, 0.0, 30.0]))
+    np.testing.assert_allclose(
+        ef.dirichlet_mean(post), [11 / 43, 1 / 43, 31 / 43], rtol=1e-6)
+
+
+def test_dirichlet_kl_zero_and_positive():
+    d = ef.Dirichlet(jnp.array([2.0, 3.0]))
+    assert float(ef.dirichlet_kl(d, d)) == pytest.approx(0.0, abs=1e-6)
+    e = ef.Dirichlet(jnp.array([1.0, 5.0]))
+    assert float(ef.dirichlet_kl(d, e)) > 0
+
+
+def test_normalgamma_posterior_matches_closed_form():
+    rng = np.random.default_rng(0)
+    x = rng.normal(2.5, 1.3, size=500).astype(np.float32)
+    prior = ef.NormalGamma(jnp.array(0.0), jnp.array(1.0),
+                           jnp.array(1.0), jnp.array(1.0))
+    stats = ef.gauss_suffstats(jnp.asarray(x), jnp.ones(500))
+    post = ef.normalgamma_update(prior, stats)
+    # posterior mean of mu
+    assert float(post.mu0) == pytest.approx(x.mean(), abs=0.02)
+    # posterior mean of variance b/a ~ sample var
+    assert float(post.b / post.a) == pytest.approx(x.var(), rel=0.1)
+
+
+def test_normalgamma_kl_properties():
+    q = ef.NormalGamma(jnp.array(1.0), jnp.array(2.0), jnp.array(3.0),
+                       jnp.array(2.0))
+    assert float(ef.normalgamma_kl(q, q)) == pytest.approx(0.0, abs=1e-5)
+    p = ef.NormalGamma(jnp.array(0.0), jnp.array(1.0), jnp.array(1.0),
+                       jnp.array(1.0))
+    assert float(ef.normalgamma_kl(q, p)) > 0
+
+
+def test_mvnormalgamma_recovers_regression():
+    rng = np.random.default_rng(1)
+    N, D = 2000, 3
+    w = np.array([0.5, -1.2, 2.0], np.float32)
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    y = X @ w + 0.3 * rng.normal(size=N).astype(np.float32)
+    prior = ef.MVNormalGamma(m=jnp.zeros(D), K=jnp.eye(D),
+                             a=jnp.array(1.0), b=jnp.array(1.0))
+    stats = ef.reg_suffstats(jnp.asarray(X), jnp.asarray(y), jnp.ones((N,)))
+    post = ef.mvnormalgamma_update(prior, stats)
+    np.testing.assert_allclose(np.asarray(post.m), w, atol=0.05)
+    # noise precision E[lam] = a/b ~ 1/0.09
+    assert float(post.a / post.b) == pytest.approx(1 / 0.09, rel=0.15)
+
+
+def test_suffstat_additivity():
+    """The d-VMP property: stats are additive over data shards."""
+    rng = np.random.default_rng(2)
+    X = jnp.asarray(rng.normal(size=(100, 2)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=100).astype(np.float32))
+    w = jnp.ones((100,))
+    full = ef.reg_suffstats(X, y, w)
+    a = ef.reg_suffstats(X[:40], y[:40], w[:40])
+    b = ef.reg_suffstats(X[40:], y[40:], w[40:])
+    for fa, (sa, sb) in zip(full, zip(a, b)):
+        np.testing.assert_allclose(fa, sa + sb, rtol=1e-5, atol=1e-4)

@@ -1,0 +1,109 @@
+"""Inference algorithms: importance sampling, factored frontier, MAP."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dag import (BayesianNetwork, CLGCPD, DAG, MultinomialCPD,
+                            Variables)
+from repro.core.factored_frontier import (Factorial2TBN,
+                                          factored_frontier_filter,
+                                          factored_frontier_smooth,
+                                          hmm_forward, predictive_posterior)
+from repro.core.importance_sampling import ImportanceSampling
+from repro.core.map_inference import map_inference
+
+
+@pytest.fixture(scope="module")
+def clg_net():
+    vs = Variables()
+    Z = vs.new_multinomial("Z", 2)
+    X1 = vs.new_gaussian("X1")
+    X2 = vs.new_gaussian("X2")
+    dag = DAG(vs)
+    dag.add_parent(X1, Z)
+    dag.add_parent(X2, Z)
+    cpds = {
+        "Z": MultinomialCPD(jnp.array([0.3, 0.7])),
+        "X1": CLGCPD(alpha=jnp.array([0.0, 4.0]), beta=jnp.zeros((2, 0)),
+                     sigma2=jnp.array([1.0, 1.0])),
+        "X2": CLGCPD(alpha=jnp.array([-2.0, 2.0]), beta=jnp.zeros((2, 0)),
+                     sigma2=jnp.array([1.0, 1.0])),
+    }
+    return BayesianNetwork(dag, cpds), Z
+
+
+def test_importance_sampling_matches_exact(clg_net):
+    bn, Z = clg_net
+    inf = ImportanceSampling(n_samples=100_000, seed=1)
+    inf.set_model(bn)
+    inf.set_evidence({"X1": 3.0, "X2": 1.0})
+    inf.run_inference()
+    post = np.asarray(inf.posterior_discrete(Z))
+
+    def norm_pdf(x, m):
+        return np.exp(-0.5 * (x - m) ** 2) / np.sqrt(2 * np.pi)
+
+    l0 = 0.3 * norm_pdf(3, 0) * norm_pdf(1, -2)
+    l1 = 0.7 * norm_pdf(3, 4) * norm_pdf(1, 2)
+    exact = np.array([l0, l1]) / (l0 + l1)
+    np.testing.assert_allclose(post, exact, atol=0.01)
+    assert float(inf.effective_sample_size()) > 1000
+
+
+def test_bn_sampling_consistency(clg_net):
+    bn, Z = clg_net
+    asg = bn.sample(jax.random.PRNGKey(0), 50_000)
+    assert float((asg["Z"] == 1).mean()) == pytest.approx(0.7, abs=0.02)
+    x1_mean_given_z1 = float(asg["X1"][asg["Z"] == 1].mean())
+    assert x1_mean_given_z1 == pytest.approx(4.0, abs=0.05)
+
+
+def test_factored_frontier_exact_for_single_chain():
+    key = jax.random.PRNGKey(4)
+    T, S = 40, 3
+    trans = jax.nn.softmax(jax.random.normal(key, (S, S)) * 2, -1)
+    init = jnp.ones(S) / S
+    ll = jax.random.normal(key, (T, S))
+    bel, _ = hmm_forward(init, trans, ll)
+    a = init * jnp.exp(ll[0]); a = a / a.sum()
+    for t in range(1, T):
+        a = (a @ trans) * jnp.exp(ll[t]); a = a / a.sum()
+    np.testing.assert_allclose(np.asarray(bel[-1]), np.asarray(a), atol=1e-5)
+
+
+def test_factored_frontier_smoothing_and_prediction():
+    key = jax.random.PRNGKey(5)
+    model = Factorial2TBN(
+        init=jnp.array([[0.9, 0.1], [0.5, 0.5]]),
+        trans=jnp.stack([jnp.array([[0.9, 0.1], [0.1, 0.9]]),
+                         jnp.array([[0.5, 0.5], [0.5, 0.5]])]))
+    ll = jax.random.normal(key, (20, 2, 2))
+    gamma = factored_frontier_smooth(model, ll)
+    assert gamma.shape == (20, 2, 2)
+    np.testing.assert_allclose(np.asarray(gamma.sum(-1)), 1.0, atol=1e-5)
+    beliefs, _ = factored_frontier_filter(model, ll)
+    pred = predictive_posterior(model, beliefs[-1], horizon=50)
+    # chain 1 is uniform-mixing: long-horizon prediction -> stationary 0.5
+    np.testing.assert_allclose(np.asarray(pred[1]), [0.5, 0.5], atol=1e-3)
+
+
+def test_map_inference_finds_mode():
+    vs = Variables()
+    Z = vs.new_multinomial("Z", 2)
+    W = vs.new_multinomial("W", 3)
+    X1 = vs.new_gaussian("X1")
+    dag = DAG(vs)
+    dag.add_parent(X1, Z)
+    dag.add_parent(W, Z)
+    cpds = {
+        "Z": MultinomialCPD(jnp.array([0.3, 0.7])),
+        "W": MultinomialCPD(jnp.array([[0.8, 0.1, 0.1], [0.1, 0.1, 0.8]])),
+        "X1": CLGCPD(alpha=jnp.array([0.0, 4.0]), beta=jnp.zeros((2, 0)),
+                     sigma2=jnp.array([1.0, 1.0])),
+    }
+    bn = BayesianNetwork(dag, cpds)
+    asg, lp = map_inference(bn, {"X1": 3.8}, n_starts=16, n_passes=4)
+    assert asg == {"Z": 1, "W": 2}
+    assert np.isfinite(lp)

@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.clg_stats import clg_suffstats
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+KEYS = jax.random.split(jax.random.PRNGKey(0), 8)
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 4, 2, 64),     # GQA
+    (1, 128, 4, 1, 128),    # MQA
+    (1, 192, 2, 2, 256),    # gemma-style head_dim, ragged seq/block
+])
+@pytest.mark.parametrize("window", [None, 64])
+def test_flash_attention_sweep(B, S, Hq, Hkv, D, window):
+    q = jax.random.normal(KEYS[0], (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(KEYS[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(KEYS[2], (B, S, Hkv, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, bq=64, bk=64)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-5), (jnp.bfloat16, 0.05)])
+def test_flash_attention_dtypes(dtype, tol):
+    B, S, Hq, Hkv, D = 1, 128, 2, 1, 64
+    q = jax.random.normal(KEYS[0], (B, S, Hq, D)).astype(dtype)
+    k = jax.random.normal(KEYS[1], (B, S, Hkv, D)).astype(dtype)
+    v = jax.random.normal(KEYS[2], (B, S, Hkv, D)).astype(dtype)
+    out = flash_attention(q, k, v, bq=64, bk=64)
+    exp = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_noncausal():
+    B, S, Hq, Hkv, D = 1, 128, 2, 2, 64
+    q = jax.random.normal(KEYS[0], (B, S, Hq, D))
+    k = jax.random.normal(KEYS[1], (B, S, Hkv, D))
+    v = jax.random.normal(KEYS[2], (B, S, Hkv, D))
+    out = flash_attention(q, k, v, causal=False, bq=64, bk=64)
+    exp = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+@pytest.mark.parametrize("b,S,H,P,G,N,chunk", [
+    (2, 128, 4, 32, 1, 64, 32),
+    (1, 256, 2, 64, 2, 32, 64),
+    (1, 128, 8, 64, 1, 128, 128),   # mamba2-1.3b tile shape
+])
+def test_ssd_scan_sweep(b, S, H, P, G, N, chunk):
+    x = jax.random.normal(KEYS[3], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(KEYS[4], (b, S, H)))
+    A = jnp.exp(jax.random.normal(KEYS[5], (H,)) * 0.3)
+    B = jax.random.normal(KEYS[6], (b, S, G, N))
+    C = jax.random.normal(KEYS[7], (b, S, G, N))
+    y, h = ssd_scan(x, dt, A, B, C, chunk)
+    y_ref, h_ref = ref.ssd_scan_ref(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_scan_chunk_invariance():
+    """Different chunk sizes = same math (the SSD identity)."""
+    b, S, H, P, G, N = 1, 128, 2, 16, 1, 32
+    x = jax.random.normal(KEYS[3], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(KEYS[4], (b, S, H)))
+    A = jnp.exp(jax.random.normal(KEYS[5], (H,)) * 0.3)
+    B = jax.random.normal(KEYS[6], (b, S, G, N))
+    C = jax.random.normal(KEYS[7], (b, S, G, N))
+    y32, _ = ssd_scan(x, dt, A, B, C, 32)
+    y128, _ = ssd_scan(x, dt, A, B, C, 128)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128),
+                               atol=3e-4, rtol=3e-4)
+
+
+@pytest.mark.parametrize("N,F,D,K,block", [
+    (1000, 3, 4, 2, 256),
+    (513, 1, 2, 5, 128),     # ragged N vs block
+    (256, 2, 8, 16, 64),     # K = 16 components
+])
+def test_clg_suffstats_sweep(N, F, D, K, block):
+    d = jax.random.normal(KEYS[0], (N, F, D))
+    y = jax.random.normal(KEYS[1], (N, F))
+    r = jax.nn.softmax(jax.random.normal(KEYS[2], (N, K)), -1)
+    sxx, sxy, syy = clg_suffstats(d, y, r, block=block)
+    rxx, rxy, ryy = ref.clg_suffstats_ref(d, y, r)
+    np.testing.assert_allclose(np.asarray(sxx), np.asarray(rxx),
+                               atol=1e-3, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sxy), np.asarray(rxy),
+                               atol=1e-3, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(syy), np.asarray(ryy),
+                               atol=1e-3, rtol=1e-4)
+
+
+def test_clg_kernel_feeds_conjugate_update():
+    """Kernel output slots directly into the expfam conjugate update."""
+    from repro.core import expfam as ef
+
+    N, F, D, K = 400, 2, 3, 2
+    d = jax.random.normal(KEYS[0], (N, F, D))
+    y = jax.random.normal(KEYS[1], (N, F))
+    r = jax.nn.softmax(jax.random.normal(KEYS[2], (N, K)), -1)
+    sxx, sxy, syy = clg_suffstats(d, y, r, block=128)
+    n = jnp.broadcast_to(r.sum(0)[None], syy.shape)
+    prior = ef.MVNormalGamma(
+        m=jnp.zeros((F, K, D)),
+        K=jnp.broadcast_to(jnp.eye(D), (F, K, D, D)),
+        a=jnp.ones((F, K)), b=jnp.ones((F, K)))
+    post = ef.mvnormalgamma_update(
+        prior, ef.RegSuffStats(sxx, sxy, syy, n))
+    assert bool(jnp.isfinite(post.m).all())
+    assert bool((post.b > 0).all())

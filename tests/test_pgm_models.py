@@ -1,0 +1,162 @@
+"""Model zoo (paper Table 2): parameter recovery on synthetic data."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic as syn
+from repro.pgm_models import (AutoRegressiveHMM, BayesianLinearRegression,
+                              CustomGlobalLocalModel, DynamicNaiveBayes,
+                              FactorAnalysis, FactorialHMMModel,
+                              GaussianMixture, HiddenMarkovModel,
+                              InputOutputHMM, KalmanFilter, LDA, MixtureOfFA,
+                              MultivariateGaussian, NaiveBayesClassifier,
+                              SwitchingLDS)
+
+
+def test_gaussian_mixture_recovery():
+    s, means, _ = syn.gmm_stream(2000, 3, 4, seed=1)
+    m = GaussianMixture(s.attributes, n_states=3, seed=0)
+    e = m.update_model(s)
+    learnt = np.sort(np.asarray(m.posterior.reg.m[:, :, 0]).T, axis=0)
+    np.testing.assert_allclose(learnt, np.sort(means, 0), atol=0.3)
+    assert np.isfinite(e)
+
+
+def test_gmm_bayesian_updating_streams():
+    """Code Fragment 9: repeated update_model calls refine the posterior."""
+    s, means, _ = syn.gmm_stream(2000, 3, 4, seed=1)   # well-separated
+    m = GaussianMixture(s.attributes, n_states=3, seed=0)
+    for b in s.batches(500):
+        m.update_model(b)
+    learnt = np.sort(np.asarray(m.posterior.reg.m[:, :, 0]).T, axis=0)
+    np.testing.assert_allclose(learnt, np.sort(means, 0), atol=0.35)
+
+
+def test_naive_bayes_classifier():
+    s, y = syn.nb_stream(1500, 3, 2, 2, seed=2)
+    clf = NaiveBayesClassifier(s.attributes)
+    clf.update_model(s)
+    acc = float((np.asarray(clf.predict(s)) == y).mean())
+    assert acc > 0.75, acc
+
+
+def test_bayesian_linear_regression():
+    s, w_true = syn.regression_stream(2000, 4, seed=3)
+    blr = BayesianLinearRegression(s.attributes)
+    blr.update_model(s)
+    co = blr.coefficients()          # [bias, w...]
+    np.testing.assert_allclose(co[0], w_true[-1], atol=0.1)
+    np.testing.assert_allclose(co[1:], w_true[:-1], atol=0.1)
+
+
+def test_factor_analysis_subspace():
+    s, W = syn.fa_stream(3000, 6, 2, seed=4)
+    fa = FactorAnalysis(s.attributes, n_hidden=2)
+    fa.update_model(s)
+    L = fa.loading_matrix()
+    u1, _, _ = np.linalg.svd(W, full_matrices=False)
+    u2, _, _ = np.linalg.svd(L, full_matrices=False)
+    assert np.linalg.svd(u1.T @ u2)[1].min() > 0.95
+
+
+def test_multivariate_gaussian_mean():
+    s, means, _ = syn.gmm_stream(1500, 1, 4, seed=5)
+    mg = MultivariateGaussian(s.attributes)
+    mg.update_model(s)
+    np.testing.assert_allclose(mg.joint_mean(), means[0], atol=0.15)
+
+
+def test_custom_model_cf11_runs():
+    s, _, _ = syn.gmm_stream(1000, 2, 3, seed=6)
+    cm = CustomGlobalLocalModel(s.attributes, n_states=2)
+    e = cm.update_model(s)
+    assert np.isfinite(e)
+
+
+def test_mixture_of_fa_runs():
+    s, _ = syn.fa_stream(1500, 5, 2, seed=7)
+    m = MixtureOfFA(s.attributes, n_states=2, n_hidden=2)
+    assert np.isfinite(m.update_model(s, sweeps=40))
+
+
+def test_hmm_state_recovery():
+    ds, trans, means, zs = syn.hmm_sequences(20, 60, 3, 2, seed=6)
+    hm = HiddenMarkovModel(ds.attributes, n_states=3, seed=1)
+    hm.update_model(ds)
+    learnt = np.sort(hm.state_means()[:, 0])
+    np.testing.assert_allclose(learnt, np.sort(means[:, 0]), atol=0.4)
+    vit = hm.viterbi_states(ds.collect().xc)
+    acc = max((np.asarray(vit) == np.array(p)[zs].reshape(vit.shape)).mean()
+              for p in itertools.permutations(range(3)))
+    assert acc > 0.9, acc
+
+
+def test_hmm_filtered_and_transitions():
+    ds, trans, means, zs = syn.hmm_sequences(15, 50, 2, 2, seed=9)
+    hm = HiddenMarkovModel(ds.attributes, n_states=2, seed=1)
+    hm.update_model(ds)
+    tl = np.asarray(hm.posterior.trans.alpha)
+    tl = tl / tl.sum(-1, keepdims=True)
+    assert np.diag(tl).min() > 0.5   # sticky transitions recovered
+    filt = hm.filtered_posterior(ds.collect().xc)
+    np.testing.assert_allclose(np.asarray(filt.sum(-1)), 1.0, atol=1e-4)
+
+
+def test_kalman_filter_dynamics():
+    ds, A, C = syn.lds_sequences(10, 80, 2, 3, seed=7)
+    kf = KalmanFilter(ds.attributes, n_hidden=2)
+    kf.update_model(ds, sweeps=15)
+    radius = np.abs(np.linalg.eigvals(np.asarray(kf.A))).max()
+    assert 0.6 < radius < 1.05, radius
+    xs = ds.collect().xc
+    sm = kf.filtered_states(xs)
+    pred = jnp.einsum("fl,btl->btf", kf.C,
+                      jnp.einsum("lm,btm->btl", kf.A, sm[:, :-1]))
+    err = float(((pred - xs[:, 1:]) ** 2).mean())
+    naive = float(((xs[:, 1:] - xs[:, :-1]) ** 2).mean())
+    assert err < 0.5 * naive, (err, naive)
+
+
+def test_hmm_variants_train():
+    ds, *_ = syn.hmm_sequences(10, 40, 2, 2, seed=8)
+    for cls in (AutoRegressiveHMM, InputOutputHMM, DynamicNaiveBayes):
+        m = cls(ds.attributes, n_states=2, seed=1)
+        ll1 = m.update_model(ds, sweeps=3)
+        ll2 = m.update_model(ds, sweeps=10)
+        assert np.isfinite(ll2)
+
+
+def test_factorial_hmm_and_slds_run():
+    ds, *_ = syn.hmm_sequences(8, 40, 2, 2, seed=9)
+    fh = FactorialHMMModel(ds.attributes, n_chains=2, n_states=2)
+    assert np.isfinite(fh.update_model(ds, sweeps=4))
+    ds2, _, _ = syn.lds_sequences(6, 50, 2, 3, seed=10)
+    sl = SwitchingLDS(ds2.attributes, n_states=2, n_hidden=2)
+    assert np.isfinite(sl.update_model(ds2, sweeps=4))
+
+
+def test_lda_topic_recovery():
+    counts, beta = syn.lda_corpus(300, 50, 4, doc_len=150, seed=8)
+    lda = LDA(4, 50, seed=0)
+    lda.update_model(counts, sweeps=30)
+    top = lda.topics()
+    score = max(sum(float(top[p[t]] @ beta[t]) for t in range(4))
+                for p in itertools.permutations(range(4)))
+    perfect = sum(float(beta[t] @ beta[t]) for t in range(4))
+    # random topics score ~ 4/vocab ~ 0.08; require >= 75% of perfect
+    assert score > 0.75 * perfect, (score, perfect)
+    # doc-topic posteriors normalized
+    dt = lda.doc_topics(counts[:10])
+    np.testing.assert_allclose(dt.sum(-1), 1.0, atol=1e-4)
+
+
+def test_lda_svi_stream():
+    counts, beta = syn.lda_corpus(200, 40, 3, seed=9)
+    lda = LDA(3, 40, seed=0)
+    for i in range(0, 200, 20):
+        lda.svi_step(counts[i:i + 20], n_total=200)
+    b1 = float(lda.perplexity_bound(jnp.asarray(counts[:50])))
+    assert np.isfinite(b1)

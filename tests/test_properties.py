@@ -1,0 +1,135 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import expfam as ef
+from repro.core import svi, vmp
+from repro.core.dag import PlateSpec
+from repro.nn import attention as A
+from repro.sharding.specs import fix_spec
+from jax.sharding import PartitionSpec as P
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6), st.integers(10, 60), st.integers(0, 2 ** 31 - 1))
+def test_suffstats_shard_additivity(k, n, seed):
+    """THE d-VMP invariant: messages are additive over any data split."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2 * n, 3)).astype(np.float32))
+    xd = jnp.zeros((2 * n, 0), jnp.int32)
+    spec = PlateSpec(n_features=3, latent_card=k)
+    cp = vmp.compile_plate(spec)
+    params = vmp.symmetry_broken(vmp.default_prior(cp),
+                                 jax.random.PRNGKey(seed % 1000))
+    full, _ = vmp.local_step(cp, params, x, xd, jnp.ones(2 * n))
+    a, _ = vmp.local_step(cp, params, x[:n], xd[:n], jnp.ones(n))
+    b, _ = vmp.local_step(cp, params, x[n:], xd[n:], jnp.ones(n))
+    for fa, sa, sb in zip(jax.tree_util.tree_leaves(full),
+                          jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(fa), np.asarray(sa + sb),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_dirichlet_update_order_invariance(k, seed):
+    rng = np.random.default_rng(seed)
+    prior = ef.Dirichlet(jnp.asarray(rng.uniform(0.5, 3.0, k + 1)
+                                     .astype(np.float32)))
+    c1 = jnp.asarray(rng.uniform(0, 10, k + 1).astype(np.float32))
+    c2 = jnp.asarray(rng.uniform(0, 10, k + 1).astype(np.float32))
+    a = ef.dirichlet_update(ef.dirichlet_update(prior, c1), c2)
+    b = ef.dirichlet_update(ef.dirichlet_update(prior, c2), c1)
+    np.testing.assert_allclose(np.asarray(a.alpha), np.asarray(b.alpha),
+                               rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+def test_natural_roundtrip_property(k, seed):
+    spec = PlateSpec(n_features=2, latent_card=k)
+    cp = vmp.compile_plate(spec)
+    params = vmp.symmetry_broken(vmp.default_prior(cp),
+                                 jax.random.PRNGKey(seed % 997))
+    back = svi.from_natural(svi.to_natural(params))
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 40), st.integers(4, 16))
+def test_ring_buffer_position_reconstruction(length, cap):
+    """Every cache slot's reconstructed absolute position is the latest
+    write < length congruent to the slot (the ring invariant)."""
+    slots = np.arange(cap)
+    wraps = (length - 1 - slots) // cap
+    abs_pos = slots + wraps * cap
+    for s in range(cap):
+        cands = [t for t in range(length) if t % cap == s]
+        if cands:
+            assert abs_pos[s] == max(cands)
+        else:
+            assert abs_pos[s] < 0 or abs_pos[s] >= length
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 7), st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_attention_blockwise_equals_reference(sq_blocks, hkv, seed):
+    rng = np.random.default_rng(seed)
+    S = sq_blocks * 13 + 1
+    Hq = hkv * 2
+    q = jnp.asarray(rng.normal(size=(1, S, Hq, 8)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, S, hkv, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, S, hkv, 8)).astype(np.float32))
+    r = A.attention_reference(q, k, v, causal=True)
+    b = A.attention_blockwise(q, k, v, causal=True, kv_block=16)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.tuples(st.integers(1, 64), st.integers(1, 64)),
+       st.sampled_from([("data", 2), ("model", 4), ("model", 16)]))
+def test_fix_spec_always_divides(shape, axis):
+    name, size = axis
+    spec = P(name, None)
+    fixed = fix_spec(spec, shape, {name: size})
+    for dim, ax in zip(shape, tuple(fixed) + (None,) * 2):
+        if ax is not None:
+            assert dim % size == 0
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_streaming_two_halves_equals_one_batch_supervised(seed):
+    """Eq. 3 is EXACT for conjugate (supervised) updates: chaining the
+    posterior over two half-batches equals one full-batch update."""
+    rng = np.random.default_rng(seed)
+    n = 60
+    x = jnp.asarray(rng.normal(size=(2 * n, 2)).astype(np.float32))
+    z = jnp.asarray(rng.integers(0, 2, 2 * n))
+    r = jax.nn.one_hot(z, 2)
+    xd = jnp.zeros((2 * n, 0), jnp.int32)
+    spec = PlateSpec(n_features=2, latent_card=2)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    # one shot
+    s_full, _ = vmp.local_step(cp, prior, x, xd, jnp.ones(2 * n), r)
+    post_full = vmp.global_update(prior, s_full)
+    # chained
+    s1, _ = vmp.local_step(cp, prior, x[:n], xd[:n], jnp.ones(n), r[:n])
+    p1 = vmp.global_update(prior, s1)
+    s2, _ = vmp.local_step(cp, p1, x[n:], xd[n:], jnp.ones(n), r[n:])
+    p2 = vmp.global_update(p1, s2)
+    np.testing.assert_allclose(np.asarray(post_full.reg.m),
+                               np.asarray(p2.reg.m), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(post_full.mix.alpha),
+                               np.asarray(p2.mix.alpha), rtol=1e-5)

@@ -1,0 +1,76 @@
+"""Streaming VB (Eq. 3), drift detection, SVI."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import streaming, svi, vmp
+from repro.core.dag import PlateSpec
+from repro.data.synthetic import drift_stream, gmm_stream
+
+
+def _setup(f=3, k=2, seed=0):
+    spec = PlateSpec(n_features=f, latent_card=k)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    init = vmp.symmetry_broken(prior, jax.random.PRNGKey(seed))
+    return cp, prior, init
+
+
+def test_streaming_matches_batch_on_stationary_data():
+    stream, means, _ = gmm_stream(1600, 2, 3, seed=7)
+    cp, prior, init = _setup()
+    # batch fit
+    full = stream.collect()
+    st = vmp.vmp_fit(cp, prior, init, full.xc, full.xd, 100, 1e-6)
+    # streaming fit, 8 batches of 200
+    ss = streaming.stream_init(prior, init)
+    for b in stream.batches(200):
+        ss, info = streaming.stream_update(cp, prior, ss, b.xc, b.xd)
+    m_batch = np.sort(np.asarray(st.post.reg.m[:, :, 0]).ravel())
+    m_stream = np.sort(np.asarray(ss.post.reg.m[:, :, 0]).ravel())
+    np.testing.assert_allclose(m_stream, m_batch, atol=0.2)
+    assert int(ss.n_drifts) == 0
+
+
+def test_drift_detection_fires_on_shift():
+    stream, n_phase = drift_stream(1500, 3, seed=8)
+    cp, prior, init = _setup(k=1)
+    ss = streaming.stream_init(prior, init)
+    drift_batches = []
+    for i, b in enumerate(stream.batches(250)):
+        ss, info = streaming.stream_update(cp, prior, ss, b.xc, b.xd,
+                                           drift_threshold=3.0)
+        if bool(info["drifted"]):
+            drift_batches.append(i)
+    # phase flips at batch 6 (1500/250); drift must fire shortly after
+    assert drift_batches, "no drift detected"
+    assert min(drift_batches) in (6, 7), drift_batches
+    # and the model must have re-adapted to the new mean (+6 shift)
+    final_means = np.asarray(ss.post.reg.m[:, 0, 0])
+    assert (final_means > 2.0).all(), final_means
+
+
+def test_svi_converges_to_batch_posterior():
+    stream, means, _ = gmm_stream(2000, 2, 3, seed=9)
+    cp, prior, init = _setup(seed=1)
+    full = stream.collect()
+    st = vmp.vmp_fit(cp, prior, init, full.xc, full.xd, 100, 1e-6)
+    state = svi.svi_init(init)
+    for epoch in range(6):
+        for b in stream.batches(250):
+            state = svi.svi_step(cp, prior, state, b.xc, b.xd, 2000.0)
+    post = svi.svi_posterior(state)
+    m_b = np.sort(np.asarray(st.post.reg.m[:, :, 0]).ravel())
+    m_s = np.sort(np.asarray(post.reg.m[:, :, 0]).ravel())
+    np.testing.assert_allclose(m_s, m_b, atol=0.25)
+
+
+def test_natural_coordinate_roundtrip():
+    cp, prior, init = _setup()
+    nat = svi.to_natural(init)
+    back = svi.from_natural(nat)
+    for a, b in zip(jax.tree_util.tree_leaves(init),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
