@@ -10,6 +10,8 @@ without numeric tables; the benchmarks instantiate its CLAIMS:
   (vi)   parallel importance sampling throughput + ESS
   (vii)  kernels (interpret mode — correctness-grade timing only)
   (viii) end-to-end LM training throughput (reduced configs)
+  (ix)   exact (junction tree) vs approximate (IS, VMP) posterior accuracy
+         and throughput — the paper's HUGIN link, replaced natively
 
 (d-VMP shard invariance — claim (ii) — is exercised in
 tests/test_distributed.py and at 256/512-chip scale by the dry-run.)
@@ -198,6 +200,86 @@ def bench_kernels():
     print(f"kernel_clg_stats_512,{us:.0f},interpret-mode")
 
 
+def bench_exact_vs_approx():
+    """(ix) exact junction tree vs importance sampling vs VMP: marginal
+    accuracy and query throughput (the infer_exact subsystem — the paper's
+    HUGIN link, served natively)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.dag import (BayesianNetwork, CLGCPD, DAG,
+                                MultinomialCPD, Variables)
+    from repro.core.importance_sampling import ImportanceSampling
+    from repro.data.synthetic import gmm_stream
+    from repro.infer_exact import JunctionTreeEngine
+    from repro.pgm_models import GaussianMixture
+
+    # ground-truth CLG mixture Z -> X0..X3
+    K, Fdim = 3, 4
+    rng = np.random.RandomState(0)
+    vs = Variables()
+    Z = vs.new_multinomial("Z", K)
+    xs = [vs.new_gaussian(f"X{f}") for f in range(Fdim)]
+    dag = DAG(vs)
+    for x in xs:
+        dag.add_parent(x, Z)
+    cpds = {"Z": MultinomialCPD(jnp.asarray(rng.dirichlet(np.ones(K))))}
+    for f, x in enumerate(xs):
+        cpds[x.name] = CLGCPD(jnp.asarray(rng.randn(K) * 3.0),
+                              jnp.zeros((K, 0)),
+                              jnp.ones(K))
+    bn = BayesianNetwork(dag, cpds)
+    B = 64
+    sample = bn.sample(jax.random.PRNGKey(1), B)
+    evidence = {x.name: sample[x.name] for x in xs}
+
+    # junction tree: B queries, ONE batched device call
+    jt = JunctionTreeEngine(bn)
+    jt.set_evidence(evidence)
+    jt.run_inference()  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jt.run_inference()
+        exact = jt.posterior_discrete(Z)
+    jax.block_until_ready(exact)
+    dt = (time.perf_counter() - t0) / 3
+    exact = np.asarray(exact)
+    print(f"exact_vs_approx_jt,{dt / B * 1e6:.0f},{B / dt:.0f} q/s "
+          f"(batched, err=0 oracle)")
+
+    # importance sampling: one run per query instance
+    n_is = 8
+    t0 = time.perf_counter()
+    is_err = 0.0
+    for b in range(n_is):
+        inf = ImportanceSampling(n_samples=20_000, seed=b)
+        inf.set_model(bn)
+        inf.set_evidence({x.name: float(sample[x.name][b]) for x in xs})
+        inf.run_inference()
+        is_err = max(is_err, float(np.abs(
+            np.asarray(inf.posterior_discrete(Z)) - exact[b]).max()))
+    dt = (time.perf_counter() - t0) / n_is
+    print(f"exact_vs_approx_is20k,{dt * 1e6:.0f},{1 / dt:.1f} q/s "
+          f"max_err={is_err:.4f}")
+
+    # VMP: fit a GaussianMixture, compare its E-step posterior against the
+    # junction tree run on the model's own BN export
+    stream, _, _ = gmm_stream(2000, K, Fdim, seed=2)
+    m = GaussianMixture(stream.attributes, n_states=K)
+    m.update_model(stream)
+    batch = stream.collect()
+    t0 = time.perf_counter()
+    rz = m.posterior_z(batch)
+    jax.block_until_ready(rz)
+    dt = time.perf_counter() - t0
+    re = m.posterior_exact(batch)
+    vmp_err = float(np.abs(np.asarray(rz) - np.asarray(re)).max())
+    print(f"exact_vs_approx_vmp,{dt / batch.xc.shape[0] * 1e6:.2f},"
+          f"{batch.xc.shape[0] / dt:.0f} q/s max_err={vmp_err:.2e} "
+          f"(vs jt on exported BN)")
+
+
 def bench_lm_training():
     """(viii) reduced-config LM training throughput."""
     import jax
@@ -231,7 +313,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for fn in (bench_vmp_parallel, bench_streaming, bench_drift,
                bench_model_zoo, bench_importance_sampling, bench_kernels,
-               bench_lm_training):
+               bench_exact_vs_approx, bench_lm_training):
         fn()
 
 

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Tier-1 smoke runner.  Two gates:
+#   1. the full pytest suite with -x (any collection error — e.g. a jax
+#      import that moved between versions — fails fast instead of landing),
+#   2. an end-to-end 2-variable junction-tree query through the public API,
+#      so the exact-inference path is exercised even under pytest -k filters.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+
+python - <<'EOF'
+import jax.numpy as jnp
+from repro.core.dag import BayesianNetwork, DAG, MultinomialCPD, Variables
+from repro.infer_exact import JunctionTreeEngine
+
+vs = Variables()
+a = vs.new_multinomial("A", 2)
+b = vs.new_multinomial("B", 2)
+dag = DAG(vs)
+dag.add_parent(b, a)
+bn = BayesianNetwork(dag, {
+    "A": MultinomialCPD(jnp.array([0.6, 0.4])),
+    "B": MultinomialCPD(jnp.array([[0.9, 0.1], [0.2, 0.8]])),
+})
+eng = JunctionTreeEngine(bn)
+eng.set_evidence({"B": 1})
+eng.run_inference()
+post = eng.posterior_discrete(a)
+expect = jnp.array([0.6 * 0.1, 0.4 * 0.8])
+expect = expect / expect.sum()
+assert jnp.allclose(post, expect, atol=1e-6), (post, expect)
+print(f"ci smoke: P(A | B=1) = {post} OK")
+EOF

@@ -1,0 +1,56 @@
+"""Version compatibility shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace (and renamed ``check_rep`` -> ``check_vma``) in newer jax
+releases.  The repo targets the modern spelling; this module maps it onto
+whatever the installed jax provides so the import never breaks at collection
+time again (see scripts/ci.sh).
+
+Usage everywhere in the repo:
+
+    from repro.core.compat import shard_map
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.6: top-level export with check_vma kwarg
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x/0.5.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_ACCEPTS_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, **kwargs):
+    """Drop-in ``jax.shard_map`` accepting the modern ``check_vma`` kwarg.
+
+    Call sites use the decorator-with-kwargs form
+    ``partial(shard_map, mesh=..., in_specs=..., out_specs=..., check_vma=...)``;
+    on older jax the ``check_vma`` flag is translated to ``check_rep``.
+    """
+    if not _ACCEPTS_VMA and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` with every axis Auto, portable across jax versions.
+
+    ``axis_types=`` / ``jax.sharding.AxisType`` only exist on newer jax;
+    older releases treat every axis as Auto already, so there the kwarg is
+    dropped.  On newer jax the Auto types are passed explicitly (shard_map
+    requires non-Manual axes).
+    """
+    import jax
+
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs.setdefault(
+            "axis_types", (jax.sharding.AxisType.Auto,) * len(axis_names))
+    else:
+        kwargs.pop("axis_types", None)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+__all__ = ["shard_map", "make_mesh"]

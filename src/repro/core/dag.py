@@ -82,8 +82,24 @@ class DAG:
     def add_parent(self, child: Variable, parent: Variable) -> None:
         if parent.name == child.name:
             raise ValueError("self-loop")
+        if any(p.name == parent.name for p in self.parents[child.name]):
+            raise ValueError(
+                f"duplicate edge {parent.name!r} -> {child.name!r}")
+        # incremental acyclicity: the new edge closes a cycle iff the child
+        # is already an ancestor of the parent — walk only those ancestors
+        # instead of re-running a full-graph DFS per edge.  Checked before
+        # mutation, so a rejected edge leaves the DAG untouched.
+        stack, seen = [parent.name], set()
+        while stack:
+            u = stack.pop()
+            if u == child.name:
+                raise ValueError(
+                    f"edge {parent.name!r} -> {child.name!r} creates a cycle")
+            if u in seen:
+                continue
+            seen.add(u)
+            stack.extend(p.name for p in self.parents[u])
         self.parents[child.name].append(parent)
-        self._check_acyclic()
 
     def get_parents(self, v: Variable) -> List[Variable]:
         return self.parents[v.name]
@@ -106,9 +122,6 @@ class DAG:
         for v in self.variables:
             visit(v)
         return order
-
-    def _check_acyclic(self) -> None:
-        self.topological_order()
 
 
 # ---------------------------------------------------------------------------

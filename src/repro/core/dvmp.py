@@ -30,7 +30,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.core.compat import shard_map
 
 from repro.core import vmp as V
 from repro.core.vmp import CompiledPlate, PlateParams, PlateStats, VMPState

@@ -1,0 +1,31 @@
+"""Native exact inference — the HUGIN-link replacement (paper §2.2, §3).
+
+The AMIDST toolbox obtains exact posteriors only by *interfacing out* to the
+commercial HUGIN engine; this package is the in-repo replacement: a
+junction-tree engine for the CLG ``BayesianNetwork`` of ``repro.core.dag``
+whose factor algebra is batched over evidence instances and backed by Pallas
+kernels (``repro.kernels.factor_ops``).
+
+Modules:
+  graph      moralization, min-fill triangulation, junction-tree construction
+             with running-intersection verification (static Python over DAG)
+  factors    batched log-space discrete factor algebra (product, marginalize,
+             evidence reduction) with a Pallas fast path
+  engine     JunctionTreeEngine — two-pass (collect/distribute) belief
+             propagation; continuous CLG leaves by analytic conditioning
+  brute      brute-force enumeration oracle for tests and tiny networks
+"""
+
+from repro.infer_exact.brute import brute_posterior, enumerate_log_joint
+from repro.infer_exact.engine import JunctionTreeEngine
+from repro.infer_exact.factors import Factor
+from repro.infer_exact.graph import JunctionTree, compile_junction_tree
+
+__all__ = [
+    "JunctionTreeEngine",
+    "JunctionTree",
+    "compile_junction_tree",
+    "Factor",
+    "brute_posterior",
+    "enumerate_log_joint",
+]

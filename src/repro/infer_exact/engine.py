@@ -1,0 +1,305 @@
+"""JunctionTreeEngine — native exact inference for CLG Bayesian networks.
+
+Replaces the AMIDST paper's HUGIN link (§2.2): the same ``set_model /
+set_evidence / run_inference / posterior_*`` surface as
+``repro.core.importance_sampling.ImportanceSampling``, but exact.
+
+Two-pass (collect/distribute) belief propagation on the compiled clique
+tree.  All tables carry a leading evidence-batch axis, so ``set_evidence``
+with ``[B]``-shaped value arrays propagates B query instances through the
+tree in ONE jitted device call — the serving path batches requests that
+share an evidence *schema* (set of observed names) onto this axis.
+
+Continuous CLG nodes are handled by analytic conditioning on their discrete
+parents:
+
+  * observed   — its likelihood lambda(d_pa) = N(x; alpha(d)+beta(d)^T c,
+                 sigma2(d)) enters the clique holding its (married) discrete
+                 parents; continuous co-parents must be observed too.
+  * unobserved — contributes nothing during propagation (integrates to 1);
+                 queried posteriors are the analytic mixture of its per-
+                 configuration Gaussians under the joint of its discrete
+                 parents.  Unobserved continuous *internal* nodes with
+                 observed continuous children need the strong junction tree
+                 (ROADMAP open item) and raise ``NotImplementedError``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dag import BayesianNetwork, Variable
+from repro.infer_exact import factors as F
+from repro.infer_exact.graph import JunctionTree, compile_junction_tree
+
+
+class JunctionTreeEngine:
+    """Paper §3.4 inference API, exact flavor."""
+
+    def __init__(self, bn: Optional[BayesianNetwork] = None, *,
+                 use_pallas: Optional[bool] = None) -> None:
+        self.use_pallas = F.USE_PALLAS if use_pallas is None else use_pallas
+        self.bn: Optional[BayesianNetwork] = None
+        self.jt: Optional[JunctionTree] = None
+        self.evidence: Dict[str, jnp.ndarray] = {}
+        self._beliefs: Optional[Tuple[jnp.ndarray, ...]] = None
+        self._logz: Optional[jnp.ndarray] = None
+        self._batched = False
+        self._compiled: Dict[Tuple[str, ...], object] = {}
+        if bn is not None:
+            self.set_model(bn)
+
+    # -- compilation ---------------------------------------------------------
+
+    def set_model(self, bn: BayesianNetwork) -> None:
+        self.bn = bn
+        self.jt = compile_junction_tree(bn)
+        self._card = {v.name: v.card for v in bn.order if v.is_discrete}
+        # canonical (sorted) scope per clique — the jitted propagation's
+        # static output layout
+        self._scopes: Tuple[Tuple[str, ...], ...] = tuple(
+            tuple(sorted(c)) for c in self.jt.cliques)
+        # home clique of every CPD / lambda factor
+        self._home: Dict[str, Optional[int]] = {}
+        for v in bn.order:
+            dpa = {p.name for p in bn.dag.get_parents(v) if p.is_discrete}
+            if v.is_discrete:
+                self._home[v.name] = self.jt.smallest_containing({v.name} | dpa)
+            else:
+                self._home[v.name] = (
+                    self.jt.smallest_containing(dpa) if dpa else 0)
+        # message schedule: DFS from clique 0, children -> root then back
+        adj: Dict[int, List[Tuple[int, Tuple[str, ...]]]] = {
+            i: [] for i in range(len(self.jt.cliques))}
+        for (a, b), s in zip(self.jt.edges, self.jt.sepsets):
+            sep = tuple(sorted(s))
+            adj[a].append((b, sep))
+            adj[b].append((a, sep))
+        schedule: List[Tuple[int, int, Tuple[str, ...]]] = []  # (child, parent)
+        seen = {0}
+        stack: List[Tuple[int, int, Tuple[str, ...]]] = [
+            (c, 0, s) for c, s in adj[0]]
+        pre: List[Tuple[int, int, Tuple[str, ...]]] = []
+        while stack:
+            u, p, s = stack.pop()
+            if u in seen:
+                continue
+            seen.add(u)
+            pre.append((u, p, s))
+            for w, sw in adj[u]:
+                if w not in seen:
+                    stack.append((w, u, sw))
+        schedule = list(reversed(pre))           # post-order: leaves first
+        self._collect = tuple(schedule)          # (child, parent, sepset)
+        self._distribute = tuple(pre)            # root outward
+        self._compiled = {}
+        self._beliefs = None
+
+    # -- evidence / propagation ----------------------------------------------
+
+    def set_evidence(self, evidence: Dict[str, object]) -> None:
+        ev = {k: jnp.asarray(v) for k, v in evidence.items()}
+        if self.bn is not None:
+            by_name = {v.name: v for v in self.bn.order}
+            for k, a in ev.items():
+                if k not in by_name:
+                    raise ValueError(f"unknown evidence variable {k!r}")
+                v = by_name[k]
+                if v.is_discrete:
+                    import numpy as np
+
+                    vals = np.asarray(a)
+                    if vals.size and ((vals < 0) | (vals >= v.card)).any():
+                        raise ValueError(
+                            f"evidence for {k!r} outside [0, {v.card})")
+        self.evidence = ev
+        self._beliefs = None
+
+    def run_inference(self) -> None:
+        """Propagate. One device call for the full (batched) tree.
+
+        Zero-probability evidence is reported as ``log_evidence() == -inf``
+        (posteriors are then 0/0 = NaN — check the evidence first).
+        """
+        names = tuple(sorted(self.evidence))
+        vals = []
+        B = 1
+        for n in names:
+            a = self.evidence[n].reshape(-1)
+            B = max(B, a.shape[0])
+            vals.append(a)
+        sizes = {v.shape[0] for v in vals if v.shape[0] > 1}
+        if len(sizes) > 1:
+            raise ValueError(
+                f"evidence batch lengths disagree: {sorted(sizes)}")
+        self._batched = any(v.shape[0] > 1 for v in vals)
+        vals = tuple(jnp.broadcast_to(v, (B,)) for v in vals)
+        fn = self._compiled.get(names)
+        if fn is None:
+            fn = jax.jit(partial(self._propagate, names))
+            self._compiled[names] = fn
+        self._beliefs, self._logz = fn(vals)
+
+    def _cpd_factor(self, v: Variable) -> F.Factor:
+        """log CPD table of a discrete node as a Factor (parents-major)."""
+        dpa = [p.name for p in self.bn.dag.get_parents(v) if
+               self._card.get(p.name) is not None]
+        scope = tuple(dpa) + (v.name,)
+        cards = tuple(self._card[n] for n in scope)
+        return F.Factor(scope, cards,
+                        jnp.log(jnp.asarray(self.bn.cpds[v.name].table)))
+
+    def _lambda_factor(self, v: Variable, ev: Dict[str, jnp.ndarray],
+                       B: int) -> F.Factor:
+        """Evidence likelihood of an observed continuous node over its
+        discrete parents (analytic CLG conditioning)."""
+        parents = self.bn.dag.get_parents(v)
+        dpa = [p for p in parents if p.is_discrete]
+        cpa = [p for p in parents if not p.is_discrete]
+        for p in cpa:
+            if p.name not in ev:
+                raise NotImplementedError(
+                    f"unobserved continuous parent {p.name!r} of observed "
+                    f"{v.name!r}: needs the strong junction tree "
+                    "(ROADMAP open item)")
+        cpd = self.bn.cpds[v.name]
+        alpha = jnp.asarray(cpd.alpha)                 # [*dcards]
+        sigma2 = jnp.asarray(cpd.sigma2)
+        mean = jnp.broadcast_to(alpha, (B,) + alpha.shape)
+        if cpa:
+            beta = jnp.asarray(cpd.beta)               # [*dcards, C]
+            for ci, p in enumerate(cpa):
+                val = ev[p.name].reshape((B,) + (1,) * alpha.ndim)
+                mean = mean + beta[..., ci] * val
+        x = ev[v.name].reshape((B,) + (1,) * alpha.ndim)
+        ll = -0.5 * (jnp.log(2 * jnp.pi * sigma2) + (x - mean) ** 2 / sigma2)
+        scope = tuple(p.name for p in dpa)
+        cards = tuple(self._card[n] for n in scope)
+        return F.Factor(scope, cards, ll)
+
+    def _potentials(self, names: Tuple[str, ...],
+                    values: Tuple[jnp.ndarray, ...]) -> List[F.Factor]:
+        """Batched clique log-potentials with evidence folded in."""
+        B = values[0].shape[0] if values else 1
+        ev = dict(zip(names, values))
+        pots: List[F.Factor] = []
+        for scope in self._scopes:
+            cards = tuple(self._card[n] for n in scope)
+            pots.append(F.Factor(scope, cards, jnp.zeros((B,) + cards)))
+
+        def add(ci: int, f: F.Factor) -> None:
+            pots[ci] = F.product([pots[ci], f])
+
+        for v in self.bn.order:
+            if v.is_discrete:
+                add(self._home[v.name], self._cpd_factor(v))
+                if v.name in ev:
+                    idx = ev[v.name].astype(jnp.int32)
+                    add(self.jt.smallest_containing({v.name}),
+                        F.indicator(v.name, v.card, idx))
+            elif v.name in ev:
+                add(self._home[v.name], self._lambda_factor(v, ev, B))
+        return pots
+
+    def _propagate(self, names: Tuple[str, ...],
+                   values: Tuple[jnp.ndarray, ...]
+                   ) -> Tuple[Tuple[jnp.ndarray, ...], jnp.ndarray]:
+        pots = self._potentials(names, values)
+        up = self.use_pallas
+        msgs: Dict[Tuple[int, int], F.Factor] = {}
+        # collect: leaves -> root
+        for u, p, sep in self._collect:
+            f = pots[u]
+            for w, _, _ in self._collect:
+                if (w, u) in msgs:
+                    f = F.absorb(f, msgs[(w, u)], use_pallas=up)
+            msgs[(u, p)] = F.marginalize(f, sep, use_pallas=up)
+        # distribute: root -> leaves
+        for u, p, sep in self._distribute:
+            f = pots[p]
+            for (a, b), m in list(msgs.items()):
+                if b == p and a != u:
+                    f = F.absorb(f, m, use_pallas=up)
+            msgs[(p, u)] = F.marginalize(f, sep, use_pallas=up)
+        # beliefs
+        beliefs: List[jnp.ndarray] = []
+        logz = None
+        for i, scope in enumerate(self._scopes):
+            f = pots[i]
+            for (a, b), m in msgs.items():
+                if b == i:
+                    f = F.absorb(f, m, use_pallas=up)
+            table = F._permute(f, scope)
+            beliefs.append(table)
+            if i == 0:
+                logz = F.marginalize(F.Factor(scope, f.cards, table), (),
+                                     use_pallas=False).logp
+        return tuple(beliefs), logz
+
+    # -- queries -------------------------------------------------------------
+
+    def _require_run(self) -> None:
+        if self._beliefs is None:
+            raise RuntimeError("call run_inference() first")
+
+    def _joint(self, names: Tuple[str, ...]) -> jnp.ndarray:
+        """Normalized joint log-posterior over ``names`` (one clique)."""
+        ci = self.jt.smallest_containing(set(names))
+        scope = self._scopes[ci]
+        cards = tuple(self._card[n] for n in scope)
+        f = F.Factor(scope, cards, self._beliefs[ci])
+        f = F.normalize(F.marginalize(f, names))
+        return F._permute(f, names)
+
+    def _maybe_squeeze(self, a: jnp.ndarray) -> jnp.ndarray:
+        return a if self._batched else a[0]
+
+    def posterior_discrete(self, var: Variable) -> jnp.ndarray:
+        """p(var | e): [card], or [B, card] under batched evidence."""
+        self._require_run()
+        name = var.name if isinstance(var, Variable) else str(var)
+        return self._maybe_squeeze(jnp.exp(self._joint((name,))))
+
+    def posterior_mean_var(self, var: Variable
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Mixture mean/variance of an unobserved continuous CLG node."""
+        self._require_run()
+        if var.name in self.evidence:
+            raise ValueError(f"{var.name!r} is observed")
+        parents = self.bn.dag.get_parents(var)
+        dpa = [p for p in parents if p.is_discrete]
+        cpa = [p for p in parents if not p.is_discrete]
+        for p in cpa:
+            if p.name not in self.evidence:
+                raise NotImplementedError(
+                    f"unobserved continuous parent {p.name!r}: needs the "
+                    "strong junction tree (ROADMAP open item)")
+        cpd = self.bn.cpds[var.name]
+        alpha = jnp.asarray(cpd.alpha)
+        sigma2 = jnp.asarray(cpd.sigma2)
+        B = self._logz.shape[0]
+        if dpa:
+            w = jnp.exp(self._joint(tuple(p.name for p in dpa)))  # [B,*dcards]
+        else:
+            w = jnp.ones((B,) + (1,) * alpha.ndim)
+        mu = jnp.broadcast_to(alpha, (B,) + alpha.shape)
+        if cpa:
+            beta = jnp.asarray(cpd.beta)
+            for ci, p in enumerate(cpa):
+                val = jnp.broadcast_to(
+                    self.evidence[p.name].reshape(-1), (B,))
+                mu = mu + beta[..., ci] * val.reshape((B,) + (1,) * alpha.ndim)
+        axes = tuple(range(1, mu.ndim))
+        mean = (w * mu).sum(axes)
+        second = (w * (sigma2 + mu ** 2)).sum(axes)
+        return (self._maybe_squeeze(mean),
+                self._maybe_squeeze(second - mean ** 2))
+
+    def log_evidence(self) -> jnp.ndarray:
+        """log p(e) — exact model evidence of the observed values."""
+        self._require_run()
+        return self._maybe_squeeze(self._logz)

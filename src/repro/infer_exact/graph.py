@@ -1,0 +1,200 @@
+"""Junction-tree compilation: moralize, triangulate, build, verify.
+
+All static Python over the ``DAG`` of ``repro.core.dag`` — this runs once
+per network at engine construction and produces the hashable structure the
+jitted propagation closes over.
+
+Pipeline (Lauritzen–Spiegelhalter):
+
+  1. *Moralize* the discrete subgraph: connect every discrete node to its
+     discrete parents and marry those parents pairwise.  The discrete-parent
+     set of each **continuous** CLG node is married too, so the evidence
+     likelihood lambda(d_pa) of an observed continuous leaf — and the joint
+     needed to query an unobserved one — always fits inside one clique.
+  2. *Triangulate* with the min-fill heuristic, collecting elimination
+     cliques; keep the maximal ones.
+  3. Build the tree as a maximum-weight spanning tree over pairwise sepset
+     sizes (Kruskal; zero-weight edges permitted so disconnected moral
+     graphs still yield a single tree — empty sepsets exchange only the
+     subtree normalizer, which cancels on normalization).
+  4. Verify the running-intersection property: for every variable the
+     cliques containing it must induce a connected subtree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Sequence, Set, Tuple
+
+from repro.core.dag import BayesianNetwork
+
+
+@dataclasses.dataclass(frozen=True)
+class JunctionTree:
+    """Compiled clique-tree structure (no parameters, fully static)."""
+
+    cliques: Tuple[FrozenSet[str], ...]
+    edges: Tuple[Tuple[int, int], ...]          # tree edges (i < j)
+    sepsets: Tuple[FrozenSet[str], ...]         # aligned with edges
+    elimination_order: Tuple[str, ...]
+    fill_in_count: int
+
+    def neighbors(self, i: int) -> List[Tuple[int, FrozenSet[str]]]:
+        out = []
+        for (a, b), s in zip(self.edges, self.sepsets):
+            if a == i:
+                out.append((b, s))
+            elif b == i:
+                out.append((a, s))
+        return out
+
+    def smallest_containing(self, names: Set[str]) -> int:
+        """Index of the smallest clique containing every name (error if none)."""
+        best, best_size = -1, None
+        for i, c in enumerate(self.cliques):
+            if names <= c and (best_size is None or len(c) < best_size):
+                best, best_size = i, len(c)
+        if best < 0:
+            raise ValueError(f"no clique contains {sorted(names)}")
+        return best
+
+
+def moral_scopes(bn: BayesianNetwork) -> List[Set[str]]:
+    """One scope per factor that must land inside a clique."""
+    scopes: List[Set[str]] = []
+    for v in bn.order:
+        dpa = {p.name for p in bn.dag.get_parents(v) if p.is_discrete}
+        if v.is_discrete:
+            scopes.append({v.name} | dpa)
+        elif dpa:
+            scopes.append(dpa)       # lambda(d_pa) of a continuous CLG node
+    return scopes
+
+
+def moralize(bn: BayesianNetwork) -> Dict[str, Set[str]]:
+    """Undirected moral graph over the *discrete* variables."""
+    adj: Dict[str, Set[str]] = {
+        v.name: set() for v in bn.order if v.is_discrete}
+    for scope in moral_scopes(bn):
+        nodes = sorted(scope)
+        for i, a in enumerate(nodes):
+            for b in nodes[i + 1:]:
+                adj[a].add(b)
+                adj[b].add(a)
+    return adj
+
+
+def min_fill_triangulate(
+    adj: Dict[str, Set[str]]
+) -> Tuple[List[FrozenSet[str]], Tuple[str, ...], int]:
+    """Min-fill elimination; returns (maximal cliques, order, #fill edges)."""
+    g = {v: set(ns) for v, ns in adj.items()}
+    order: List[str] = []
+    cliques: List[FrozenSet[str]] = []
+    fills = 0
+
+    def fill_cost(v: str) -> int:
+        ns = sorted(g[v])
+        c = 0
+        for i, a in enumerate(ns):
+            for b in ns[i + 1:]:
+                if b not in g[a]:
+                    c += 1
+        return c
+
+    while g:
+        v = min(sorted(g), key=fill_cost)     # sorted() makes ties stable
+        ns = sorted(g[v])
+        cliques.append(frozenset([v] + ns))
+        for i, a in enumerate(ns):
+            for b in ns[i + 1:]:
+                if b not in g[a]:
+                    g[a].add(b)
+                    g[b].add(a)
+                    fills += 1
+        for a in ns:
+            g[a].discard(v)
+        del g[v]
+        order.append(v)
+
+    maximal = [c for c in cliques
+               if not any(c < other for other in cliques)]
+    # dedupe while preserving order
+    seen: Set[FrozenSet[str]] = set()
+    uniq = []
+    for c in maximal:
+        if c not in seen:
+            seen.add(c)
+            uniq.append(c)
+    return uniq, tuple(order), fills
+
+
+def spanning_tree(cliques: Sequence[FrozenSet[str]]
+                  ) -> Tuple[Tuple[Tuple[int, int], ...],
+                             Tuple[FrozenSet[str], ...]]:
+    """Max-weight spanning tree over |C_i ∩ C_j| (Kruskal + union-find)."""
+    n = len(cliques)
+    if n == 1:
+        return (), ()
+    cand = sorted(
+        ((len(cliques[i] & cliques[j]), i, j)
+         for i in range(n) for j in range(i + 1, n)),
+        key=lambda t: (-t[0], t[1], t[2]))
+    parent = list(range(n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    edges: List[Tuple[int, int]] = []
+    seps: List[FrozenSet[str]] = []
+    for w, i, j in cand:
+        ri, rj = find(i), find(j)
+        if ri != rj:
+            parent[ri] = rj
+            edges.append((i, j))
+            seps.append(cliques[i] & cliques[j])
+            if len(edges) == n - 1:
+                break
+    return tuple(edges), tuple(seps)
+
+
+def verify_running_intersection(
+    cliques: Sequence[FrozenSet[str]],
+    edges: Sequence[Tuple[int, int]],
+) -> None:
+    """Raise if some variable's cliques do not form a connected subtree."""
+    names = set().union(*cliques) if cliques else set()
+    adj: Dict[int, List[int]] = {i: [] for i in range(len(cliques))}
+    for a, b in edges:
+        adj[a].append(b)
+        adj[b].append(a)
+    for name in names:
+        holders = [i for i, c in enumerate(cliques) if name in c]
+        # BFS inside the induced subgraph
+        seen = {holders[0]}
+        stack = [holders[0]]
+        while stack:
+            u = stack.pop()
+            for w in adj[u]:
+                if w not in seen and name in cliques[w]:
+                    seen.add(w)
+                    stack.append(w)
+        if seen != set(holders):
+            raise AssertionError(
+                f"running intersection violated for {name!r}: "
+                f"cliques {holders} not connected")
+
+
+def compile_junction_tree(bn: BayesianNetwork) -> JunctionTree:
+    """Full pipeline: moralize -> min-fill -> spanning tree -> verify."""
+    adj = moralize(bn)
+    if not adj:
+        raise ValueError("network has no discrete variables")
+    cliques, order, fills = min_fill_triangulate(adj)
+    edges, seps = spanning_tree(cliques)
+    verify_running_intersection(cliques, edges)
+    return JunctionTree(cliques=tuple(cliques), edges=edges, sepsets=seps,
+                        elimination_order=order, fill_in_count=fills)

@@ -1,0 +1,165 @@
+"""Pallas TPU kernels for batched log-space factor algebra (infer_exact).
+
+The factor algebra of ``repro.infer_exact.factors`` flattens every table
+over a discrete scope ``(v_1..v_k)`` to ``[B, M, N]`` where ``B`` is the
+evidence-batch axis (many query instances propagate in ONE device call),
+``N`` the product of the cardinalities being acted on (marginalized /
+shared with the sepset / indexed by evidence) and ``M`` the product of the
+remaining axes:
+
+    log_product(a [B,M,N], b [B,N])   -> [B,M,N]   factor product (log add)
+    log_marginalize(x [B,M,N])        -> [B,M]     stable logsumexp over N
+    evidence_select(x [B,M,N], i [B]) -> [B,M]     per-instance evidence slice
+
+``log_product`` and ``log_marginalize`` back the two message-passing hot
+loops (sepset absorption, marginalization onto a sepset).
+``evidence_select`` backs ``factors.reduce_evidence`` — the shrink-style
+evidence reduction of the algebra layer; the default engine path folds
+evidence as indicator factors instead, keeping clique shapes static per
+evidence schema.
+
+``log_marginalize`` uses the flash-attention style running-max/rescale
+accumulation over N tiles so arbitrarily wide factors stream through VMEM.
+All three tolerate ``-inf`` entries (structural zeros from evidence
+indicators) without producing NaNs.
+
+Oracles: ``repro.kernels.ref.{log_product_ref,log_marginalize_ref,
+evidence_select_ref}``.  Jit'd public wrappers: ``repro.kernels.ops``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# log_product: a [B, M, N] + b [B, N] broadcast over M
+# ---------------------------------------------------------------------------
+
+
+def _product_kernel(a_ref, b_ref, o_ref):
+    o_ref[0] = a_ref[0] + b_ref[0][None, :]
+
+
+def log_product(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 256,
+                interpret: bool = True) -> jnp.ndarray:
+    """Log-space factor product of ``a`` with a sepset factor ``b``."""
+    B, M, N = a.shape
+    bm = min(bm, M)
+    nm = pl.cdiv(M, bm)
+    pad_m = nm * bm - M
+    if pad_m:
+        a = jnp.pad(a, ((0, 0), (0, pad_m), (0, 0)))
+    out = pl.pallas_call(
+        _product_kernel,
+        grid=(B, nm),
+        in_specs=[
+            pl.BlockSpec((1, bm, N), lambda b_, mi: (b_, mi, 0)),
+            pl.BlockSpec((1, N), lambda b_, mi: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, N), lambda b_, mi: (b_, mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nm * bm, N), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:, :M]
+
+
+# ---------------------------------------------------------------------------
+# log_marginalize: stable streaming logsumexp over the last axis
+# ---------------------------------------------------------------------------
+
+
+def _marginalize_kernel(x_ref, o_ref, m_scr, s_scr, *, nn: int):
+    ni = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)           # [bm, bn]
+    m_prev = m_scr[...]                        # [bm]
+    m_new = jnp.maximum(m_prev, x.max(-1))
+    # safe center: where the running max is still -inf every exp() below is 0
+    ms = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - ms), 0.0)
+    s_scr[...] = s_scr[...] * corr + jnp.exp(x - ms[:, None]).sum(-1)
+    m_scr[...] = m_new
+
+    @pl.when(ni == nn - 1)
+    def _final():
+        s = s_scr[...]
+        ms_f = jnp.where(jnp.isfinite(m_scr[...]), m_scr[...], 0.0)
+        o_ref[0] = jnp.where(s > 0.0, ms_f + jnp.log(jnp.maximum(s, 1e-37)),
+                             NEG_INF)
+
+
+def log_marginalize(x: jnp.ndarray, *, bm: int = 256, bn: int = 256,
+                    interpret: bool = True) -> jnp.ndarray:
+    """logsumexp over the last axis of ``x [B, M, N]`` -> ``[B, M]``."""
+    B, M, N = x.shape
+    bm, bn = min(bm, M), min(bn, N)
+    nm, nn = pl.cdiv(M, bm), pl.cdiv(N, bn)
+    pad_m, pad_n = nm * bm - M, nn * bn - N
+    if pad_m or pad_n:
+        x = jnp.pad(x, ((0, 0), (0, pad_m), (0, pad_n)),
+                    constant_values=NEG_INF)
+    out = pl.pallas_call(
+        functools.partial(_marginalize_kernel, nn=nn),
+        grid=(B, nm, nn),
+        in_specs=[pl.BlockSpec((1, bm, bn), lambda b_, mi, ni: (b_, mi, ni))],
+        out_specs=pl.BlockSpec((1, bm), lambda b_, mi, ni: (b_, mi)),
+        out_shape=jax.ShapeDtypeStruct((B, nm * bm), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm,), jnp.float32),
+            pltpu.VMEM((bm,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return out[:, :M]
+
+
+# ---------------------------------------------------------------------------
+# evidence_select: per-batch-instance gather along the last axis
+# ---------------------------------------------------------------------------
+
+
+def _select_kernel(x_ref, i_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)           # [bm, N]
+    idx = i_ref[0, 0]
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    o_ref[0] = jnp.where(col == idx, x, NEG_INF).max(-1)
+
+
+def evidence_select(x: jnp.ndarray, idx: jnp.ndarray, *, bm: int = 256,
+                    interpret: bool = True) -> jnp.ndarray:
+    """``x [B, M, N], idx [B] int`` -> ``[B, M]`` with ``out[b] = x[b,:,idx[b]]``.
+
+    This is batched evidence reduction: each query instance clamps its own
+    observed value, shrinking the factor by one axis in a single device call.
+    """
+    B, M, N = x.shape
+    bm = min(bm, M)
+    nm = pl.cdiv(M, bm)
+    pad_m = nm * bm - M
+    if pad_m:
+        x = jnp.pad(x, ((0, 0), (0, pad_m), (0, 0)), constant_values=NEG_INF)
+    out = pl.pallas_call(
+        _select_kernel,
+        grid=(B, nm),
+        in_specs=[
+            pl.BlockSpec((1, bm, N), lambda b_, mi: (b_, mi, 0)),
+            pl.BlockSpec((1, 1), lambda b_, mi: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda b_, mi: (b_, mi)),
+        out_shape=jax.ShapeDtypeStruct((B, nm * bm), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), idx.astype(jnp.int32).reshape(B, 1))
+    return out[:, :M]

@@ -13,6 +13,9 @@ from functools import partial
 import jax
 
 from repro.kernels.clg_stats import clg_suffstats as _clg
+from repro.kernels.factor_ops import (evidence_select as _evsel,
+                                      log_marginalize as _logmarg,
+                                      log_product as _logprod)
 from repro.kernels.flash_attn import flash_attention as _flash
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
@@ -33,3 +36,18 @@ def ssd_scan(x, dt, A, B, C, chunk=128):
 @partial(jax.jit, static_argnames=("block",))
 def clg_suffstats(d, y, r, *, block=512):
     return _clg(d, y, r, block=block, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("bm",))
+def log_product(a, b, *, bm=256):
+    return _logprod(a, b, bm=bm, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn"))
+def log_marginalize(x, *, bm=256, bn=256):
+    return _logmarg(x, bm=bm, bn=bn, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("bm",))
+def evidence_select(x, idx, *, bm=256):
+    return _evsel(x, idx, bm=bm, interpret=INTERPRET)

@@ -28,3 +28,21 @@ def clg_suffstats_ref(d: jnp.ndarray, y: jnp.ndarray, r: jnp.ndarray
     sxy = jnp.einsum("nfd,nf,nk->fkd", d, y, r)
     syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
     return sxx, sxy, syy
+
+
+def log_product_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.factor_ops.log_product."""
+    return a + b[:, None, :]
+
+
+def log_marginalize_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.factor_ops.log_marginalize."""
+    import jax.scipy.special as jsp
+
+    return jsp.logsumexp(x, axis=-1)
+
+
+def evidence_select_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.factor_ops.evidence_select."""
+    return jnp.take_along_axis(
+        x, idx.astype(jnp.int32)[:, None, None], axis=-1)[..., 0]

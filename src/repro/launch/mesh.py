@@ -10,13 +10,13 @@ from typing import Tuple
 
 import jax
 
+from repro.core.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axes_of(mesh) -> Tuple[str, ...]:
@@ -26,6 +26,4 @@ def data_axes_of(mesh) -> Tuple[str, ...]:
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over host devices (tests / CPU examples)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

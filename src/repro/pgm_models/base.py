@@ -14,8 +14,9 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import dvmp, vmp
-from repro.core.dag import PlateSpec
+from repro.core import dvmp, expfam as ef, vmp
+from repro.core.dag import (BayesianNetwork, CLGCPD, DAG, MultinomialCPD,
+                            PlateSpec, Variables)
 from repro.data.stream import Attribute, Batch, DataStream, FINITE, REAL
 
 
@@ -96,6 +97,91 @@ class Model:
 
     def get_model(self) -> vmp.PlateParams:
         return self.posterior
+
+    # -- exact inference (infer_exact junction tree — HUGIN-link replacement)
+
+    def to_bayesian_network(self) -> BayesianNetwork:
+        """Export the posterior-mean point estimate as a concrete CLG
+        ``BayesianNetwork``.
+
+        Node names: the latent is ``"Z"`` (present when ``latent_card > 1``);
+        feature ``i`` of the spec is ``"X{i}"``.  Models with a continuous
+        latent ``H`` (FA/PPCA family) are not expressible as a finite node
+        set and raise ``NotImplementedError``.
+        """
+        lay = self.cp.layout
+        if self.spec.latent_dim > 0:
+            raise NotImplementedError(
+                "continuous latent H has no finite-node BN export")
+        spec, p = self.spec, self.posterior
+        dm = spec.discrete_map
+        vs = Variables()
+        z = vs.new_multinomial("Z", lay.K) if lay.K > 1 else None
+        feats = {}
+        for i in range(spec.n_features):
+            feats[i] = (vs.new_multinomial(f"X{i}", dm[i]) if i in dm
+                        else vs.new_gaussian(f"X{i}"))
+        dag = DAG(vs)
+        cpds = {}
+        if z is not None:
+            cpds["Z"] = MultinomialCPD(ef.dirichlet_mean(p.mix))
+        cont_ids = [i for i in range(spec.n_features) if i not in dm]
+        sigma2 = p.reg.b / p.reg.a                       # [F, K] E-style var
+        for f, orig in enumerate(cont_ids):
+            v = feats[orig]
+            if z is not None:
+                dag.add_parent(v, z)
+            pa = spec.parent_idx(orig)
+            for pi in pa:
+                dag.add_parent(v, feats[pi])
+            m = p.reg.m[f]                               # [K, 1 + P]
+            alpha, beta = m[:, 0], m[:, 1:1 + len(pa)]
+            s2 = sigma2[f]
+            if z is None:                                # no discrete parent
+                alpha, beta, s2 = alpha[0], beta[0], s2[0]
+            cpds[v.name] = CLGCPD(alpha=alpha, beta=beta, sigma2=s2)
+        for new_d, (orig, card) in enumerate(sorted(dm.items())):
+            v = feats[orig]
+            if z is not None:
+                dag.add_parent(v, z)
+            alpha = p.disc.alpha[new_d, :, :card]        # [K, card]
+            table = alpha / alpha.sum(-1, keepdims=True)
+            cpds[v.name] = MultinomialCPD(table if z is not None
+                                          else table[0])
+        return BayesianNetwork(dag, cpds)
+
+    def posterior_exact(self, data, *, use_pallas=None) -> jnp.ndarray:
+        """Exact p(Z | x) via the native junction-tree engine.
+
+        ``data`` is either an evidence dict (name -> scalar or [B] array,
+        names as in :meth:`to_bayesian_network`) or anything
+        :meth:`posterior_z` accepts — a Batch/DataStream/array whose rows
+        become one batched propagation (a single device call).
+
+        This is the correctness oracle for the approximate engines: for
+        plate models with a single discrete latent it must agree with
+        :meth:`posterior_z` up to VMP convergence.
+        """
+        from repro.infer_exact import JunctionTreeEngine
+
+        if self.cp.layout.K <= 1:
+            raise ValueError("model has no discrete latent to query")
+        bn = self.to_bayesian_network()
+        if isinstance(data, dict):
+            evidence = data
+        else:
+            batch = self._as_batch(data)
+            dm = self.spec.discrete_map
+            cont_ids = [i for i in range(self.spec.n_features)
+                        if i not in dm]
+            evidence = {f"X{orig}": batch.xc[:, f]
+                        for f, orig in enumerate(cont_ids)}
+            for new_d, (orig, _) in enumerate(sorted(dm.items())):
+                evidence[f"X{orig}"] = batch.xd[:, new_d]
+        eng = JunctionTreeEngine(bn, use_pallas=use_pallas)
+        eng.set_evidence(evidence)
+        eng.run_inference()
+        return eng.posterior_discrete(bn.dag.variables.by_name("Z"))
 
     # -- pretty print (paper Code Fragment 8) --------------------------------------
 

@@ -1,1 +1,2 @@
-"""Serving substrate: batched decode engine over the serve_step unit."""
+"""Serving substrate: batched LM decode engine plus the schema-batched
+exact-query path (``PGMQueryEngine`` over the infer_exact junction tree)."""

@@ -1,10 +1,21 @@
 """Batched request serving — the inference-side example driver.
 
-A minimal continuous-batching engine: a fixed batch of request slots decodes
-in lock-step (synchronized positions — the layout ``decode_32k``/
-``long_500k`` lower); finished requests free their slot for queued prompts.
-Slot refill uses teacher-forced prefill via repeated decode steps (simple,
-cache-correct); a production system would run a separate prefill graph.
+Two serving surfaces:
+
+* :class:`DecodeEngine` — LM continuous batching: a fixed batch of request
+  slots decodes in lock-step (synchronized positions — the layout
+  ``decode_32k``/``long_500k`` lower); finished requests free their slot for
+  queued prompts.  Slot refill uses teacher-forced prefill via repeated
+  decode steps (simple, cache-correct); a production system would run a
+  separate prefill graph.
+
+* :class:`PGMQueryEngine` — the probabilistic-query path.  Queries against a
+  CLG ``BayesianNetwork`` queue up and, at ``flush()``, are grouped by
+  evidence *schema* (the set of observed variable names).  Each group rides
+  the leading batch axis of the junction-tree factor tables, so N exact
+  queries sharing a schema cost ONE device call (``mode="exact"``, the
+  infer_exact subsystem); ``mode="importance"`` serves the same API from
+  the approximate sampler for throughput comparisons.
 """
 
 from __future__ import annotations
@@ -93,3 +104,92 @@ class DecodeEngine:
         for _ in range(max_steps):
             if self.step() == 0 and not self.queue:
                 break
+
+
+# ---------------------------------------------------------------------------
+# Exact-query serving path (infer_exact junction tree)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PGMQuery:
+    qid: int
+    target: str                       # variable whose posterior is requested
+    evidence: Dict[str, float]
+    result: Optional[np.ndarray] = None       # posterior table over target
+    log_evidence: Optional[float] = None      # exact mode only
+    done: bool = False
+
+
+class PGMQueryEngine:
+    """Schema-batched posterior queries over a CLG Bayesian network.
+
+    ``mode="exact"`` routes through :class:`JunctionTreeEngine` — queries
+    with the same evidence schema propagate together in one batched device
+    call.  ``mode="importance"`` answers each query with likelihood
+    weighting (one sampler run per query) behind the same API.
+    """
+
+    def __init__(self, bn, *, mode: str = "exact", n_samples: int = 10_000,
+                 use_pallas: Optional[bool] = None, seed: int = 0) -> None:
+        from repro.infer_exact import JunctionTreeEngine
+
+        if mode not in ("exact", "importance"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.bn = bn
+        self.mode = mode
+        self.n_samples = n_samples
+        self.seed = seed
+        self._jt = (JunctionTreeEngine(bn, use_pallas=use_pallas)
+                    if mode == "exact" else None)
+        self._queue: List[PGMQuery] = []
+        self._next = 0
+
+    def submit(self, target: str, evidence: Dict[str, float]) -> PGMQuery:
+        q = PGMQuery(self._next, target, dict(evidence))
+        self._next += 1
+        self._queue.append(q)
+        return q
+
+    def flush(self) -> List[PGMQuery]:
+        """Answer every queued query; one device call per evidence schema."""
+        done, queue = [], self._queue
+        self._queue = []
+        groups: Dict[tuple, List[PGMQuery]] = {}
+        for q in queue:
+            groups.setdefault(tuple(sorted(q.evidence)), []).append(q)
+        for schema, qs in groups.items():
+            if self.mode == "exact":
+                self._flush_exact(schema, qs)
+            else:
+                self._flush_importance(qs)
+            done.extend(qs)
+        return done
+
+    def _flush_exact(self, schema: tuple, qs: List[PGMQuery]) -> None:
+        ev = {n: jnp.asarray([q.evidence[n] for q in qs]) for n in schema}
+        self._jt.set_evidence(ev)
+        self._jt.run_inference()
+        logz = np.atleast_1d(np.asarray(self._jt.log_evidence()))
+        for target in {q.target for q in qs}:
+            var = self.bn.dag.variables.by_name(target)
+            post = np.atleast_2d(
+                np.asarray(self._jt.posterior_discrete(var)))
+            for b, q in enumerate(qs):
+                if q.target == target:
+                    q.result = post[b if post.shape[0] > 1 else 0]
+                    q.log_evidence = float(logz[b if logz.size > 1 else 0])
+                    q.done = True
+
+    def _flush_importance(self, qs: List[PGMQuery]) -> None:
+        from repro.core.importance_sampling import ImportanceSampling
+
+        for q in qs:
+            inf = ImportanceSampling(n_samples=self.n_samples,
+                                     seed=self.seed + q.qid)
+            inf.set_model(self.bn)
+            inf.set_evidence(q.evidence)
+            inf.run_inference()
+            var = self.bn.dag.variables.by_name(q.target)
+            q.result = np.asarray(inf.posterior_discrete(var))
+            q.done = True

@@ -123,3 +123,67 @@ def test_clg_kernel_feeds_conjugate_update():
         prior, ef.RegSuffStats(sxx, sxy, syy, n))
     assert bool(jnp.isfinite(post.m).all())
     assert bool((post.b > 0).all())
+
+
+# -- batched factor algebra (infer_exact hot loops) ---------------------------
+
+
+def _factor_table(key, shape, p_neg_inf=0.25):
+    """Random log table with structural zeros (evidence indicators)."""
+    x = jax.random.normal(key, shape)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), p_neg_inf, shape)
+    return jnp.where(mask, -jnp.inf, x)
+
+
+@pytest.mark.parametrize("B,M,N", [
+    (1, 8, 8),
+    (4, 300, 13),      # ragged M, prime N
+    (2, 64, 700),      # N wider than one tile -> streaming accumulation
+    (3, 1, 1),
+])
+def test_factor_log_product(B, M, N):
+    from repro.kernels.factor_ops import log_product
+
+    a = _factor_table(KEYS[3], (B, M, N))
+    b = jax.random.normal(KEYS[4], (B, N))
+    out = log_product(a, b, bm=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.log_product_ref(a, b)),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("B,M,N", [
+    (1, 8, 8),
+    (4, 300, 13),
+    (2, 64, 700),
+    (3, 1, 1),
+])
+def test_factor_log_marginalize(B, M, N):
+    from repro.kernels.factor_ops import log_marginalize
+
+    x = _factor_table(KEYS[5], (B, M, N))
+    out = log_marginalize(x, bm=64, bn=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.log_marginalize_ref(x)),
+                               atol=1e-5)
+
+
+def test_factor_log_marginalize_all_neg_inf():
+    """Fully impossible rows must stay -inf, not NaN."""
+    from repro.kernels.factor_ops import log_marginalize
+
+    x = jnp.full((2, 4, 300), -jnp.inf)
+    out = np.asarray(log_marginalize(x, bn=64, interpret=True))
+    assert np.all(np.isneginf(out))
+
+
+@pytest.mark.parametrize("B,M,N", [(1, 8, 8), (4, 300, 13), (2, 64, 700)])
+def test_factor_evidence_select(B, M, N):
+    from repro.kernels.factor_ops import evidence_select
+
+    x = _factor_table(KEYS[6], (B, M, N))
+    idx = jax.random.randint(KEYS[7], (B,), 0, N)
+    out = evidence_select(x, idx, bm=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.evidence_select_ref(x, idx)),
+                               atol=1e-6)
