@@ -32,3 +32,19 @@ for i, b in enumerate(stream.batches(250)):
           f" {flag:6s}| {mean0:+.2f}")
 print(f"\ntotal drifts detected: {int(state.n_drifts)} "
       f"(true change point: batch {n_phase // 250})")
+
+# -- same stream, ONE device program: the resident stream_fit scan driver ----
+import jax.numpy as jnp  # noqa: E402
+
+batches = list(drift_stream(n_per_phase=2500, f=4, seed=0)[0].batches(250))
+state2, infos = streaming.stream_fit(
+    cp, prior, streaming.stream_init(
+        prior, vmp.symmetry_broken(prior, jax.random.PRNGKey(0))),
+    jnp.stack([b.xc for b in batches]),
+    jnp.stack([b.xd for b in batches]),
+    jnp.stack([b.mask for b in batches]),
+    drift_threshold=3.0)
+print(f"stream_fit (single lax.scan): drifts={int(state2.n_drifts)}, "
+      f"flags match loop: "
+      f"{int(state2.n_drifts) == int(state.n_drifts)}, "
+      f"final mean[0]={float(state2.post.reg.m[0, 0, 0]):+.2f}")

@@ -1,15 +1,34 @@
 #!/usr/bin/env bash
-# Tier-1 smoke runner.  Two gates:
+# Tier-1 smoke runner.  Three gates:
 #   1. the full pytest suite with -x (any collection error — e.g. a jax
 #      import that moved between versions — fails fast instead of landing),
 #   2. an end-to-end 2-variable junction-tree query through the public API,
-#      so the exact-inference path is exercised even under pytest -k filters.
+#      so the exact-inference path is exercised even under pytest -k filters,
+#   3. the streaming perf harness in --json mode on tiny sizes with schema
+#      validation, so perf-trajectory breakage (BENCH_streaming.json) fails
+#      tier-1 instead of silently rotting.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
+
+BENCH_OUT="$(mktemp -t bench_streaming_smoke.XXXXXX.json)"
+trap 'rm -f "$BENCH_OUT"' EXIT
+python benchmarks/run.py --json --n 1000 --batch 250 --sweeps 2 \
+    --out "$BENCH_OUT"
+python - "$BENCH_OUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from run import validate_bench_streaming
+
+with open(sys.argv[1]) as fh:
+    payload = json.load(fh)
+validate_bench_streaming(payload)
+print("ci smoke: BENCH_streaming schema OK "
+      f"(speedup {payload['speedup_inst_per_s']:.2f}x)")
+EOF
 
 python - <<'EOF'
 import jax.numpy as jnp

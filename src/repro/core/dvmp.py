@@ -24,6 +24,7 @@ per-iteration Flink superstep barrier.
 
 from __future__ import annotations
 
+import functools
 from functools import partial
 from typing import Optional, Tuple
 
@@ -40,42 +41,33 @@ def _psum_stats(stats: PlateStats, axes) -> PlateStats:
     return jax.tree_util.tree_map(lambda s: jax.lax.psum(s, axes), stats)
 
 
-def dvmp_fit(
-    cp: CompiledPlate,
-    prior: PlateParams,
-    init: PlateParams,
-    xc: jnp.ndarray,
-    xd: jnp.ndarray,
-    mesh: Mesh,
-    data_axes: Tuple[str, ...] = ("data",),
-    max_sweeps: int = 100,
-    tol: float = 1e-4,
-    mask: Optional[jnp.ndarray] = None,
-) -> VMPState:
-    """Distributed VMP fit.
+# ---------------------------------------------------------------------------
+# Program caches.  Building a fresh ``shard_map`` + ``jax.jit`` wrapper per
+# call forced a retrace (and on the streaming path, one retrace PER ARRIVING
+# BATCH).  The wrappers are pure functions of (cp, mesh, data_axes) plus the
+# python scalars closed over by the body, so we build each program once per
+# key — ``CompiledPlate`` hashes by identity and ``Mesh`` is hashable; jax's
+# own jit cache then handles shape/dtype variation.  ``lru_cache`` bounds
+# retention for long-lived processes that build plates/meshes dynamically.
+# ---------------------------------------------------------------------------
 
-    xc: [N, F], xd: [N, Fd] — N must divide by the product of data-axis sizes;
-    use ``mask`` (same leading dim) to pad ragged global batches.
-    Global params are replicated; data is sharded over ``data_axes``.
-    Result is numerically identical to single-device ``vmp_fit`` on the
-    concatenated data (up to float reduction order) — tested.
-    """
-    if mask is None:
-        mask = jnp.ones(xc.shape[0], xc.dtype)
 
+@functools.lru_cache(maxsize=64)
+def _fit_program(cp: CompiledPlate, mesh: Mesh, data_axes: Tuple[str, ...],
+                 max_sweeps: int, tol: float, backend: str,
+                 chunk: Optional[int]):
     dspec = P(data_axes)
     rep = P()
 
-    in_specs = (rep, rep, dspec, dspec, dspec)
-    out_specs = rep
-
     @partial(
-        shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        shard_map, mesh=mesh,
+        in_specs=(rep, rep, dspec, dspec, dspec), out_specs=rep,
         check_vma=False,
     )
     def fit_shard(prior_, init_, xc_, xd_, mask_):
         def sweep(state: VMPState) -> VMPState:
-            stats, _ = V.local_step(cp, state.post, xc_, xd_, mask_)
+            stats, _ = V.local_step(cp, state.post, xc_, xd_, mask_,
+                                    backend=backend, chunk=chunk)
             stats = _psum_stats(stats, data_axes)      # the d-VMP collective
             post = V.global_update(prior_, stats)
             e = V.elbo(cp, prior_, post, stats)
@@ -92,7 +84,57 @@ def dvmp_fit(
                       delta=jnp.asarray(jnp.inf), sweep=jnp.asarray(0))
         return jax.lax.while_loop(cond, sweep, sweep(s0))
 
-    return jax.jit(fit_shard)(prior, init, xc, xd, mask)
+    return jax.jit(fit_shard)
+
+
+@functools.lru_cache(maxsize=64)
+def _sweep_program(cp: CompiledPlate, mesh: Mesh, data_axes: Tuple[str, ...],
+                   backend: str, chunk: Optional[int]):
+    dspec = P(data_axes)
+    rep = P()
+
+    @partial(
+        shard_map, mesh=mesh,
+        in_specs=(rep, rep, dspec, dspec, dspec), out_specs=(rep, rep),
+        check_vma=False,
+    )
+    def body(prior_, post_, xc_, xd_, mask_):
+        stats, _ = V.local_step(cp, post_, xc_, xd_, mask_,
+                                backend=backend, chunk=chunk)
+        stats = _psum_stats(stats, data_axes)
+        new = V.global_update(prior_, stats)
+        return new, V.elbo(cp, prior_, new, stats)
+
+    return jax.jit(body)
+
+
+def dvmp_fit(
+    cp: CompiledPlate,
+    prior: PlateParams,
+    init: PlateParams,
+    xc: jnp.ndarray,
+    xd: jnp.ndarray,
+    mesh: Mesh,
+    data_axes: Tuple[str, ...] = ("data",),
+    max_sweeps: int = 100,
+    tol: float = 1e-4,
+    mask: Optional[jnp.ndarray] = None,
+    backend: str = "einsum",
+    chunk: Optional[int] = None,
+) -> VMPState:
+    """Distributed VMP fit.
+
+    xc: [N, F], xd: [N, Fd] — N must divide by the product of data-axis sizes;
+    use ``mask`` (same leading dim) to pad ragged global batches.
+    Global params are replicated; data is sharded over ``data_axes``.
+    Result is numerically identical to single-device ``vmp_fit`` on the
+    concatenated data (up to float reduction order) — tested.
+    """
+    if mask is None:
+        mask = jnp.ones(xc.shape[0], xc.dtype)
+    prog = _fit_program(cp, mesh, tuple(data_axes), max_sweeps, tol,
+                        backend, chunk)
+    return prog(prior, init, xc, xd, mask)
 
 
 def dvmp_one_sweep(
@@ -104,21 +146,10 @@ def dvmp_one_sweep(
     mask: jnp.ndarray,
     mesh: Mesh,
     data_axes: Tuple[str, ...] = ("data",),
+    backend: str = "einsum",
+    chunk: Optional[int] = None,
 ) -> Tuple[PlateParams, jnp.ndarray]:
     """Single distributed sweep — the building block reused by streaming VB
     (one sweep per arriving batch) and by the SVI driver."""
-    dspec = P(data_axes)
-    rep = P()
-
-    @partial(
-        shard_map, mesh=mesh,
-        in_specs=(rep, rep, dspec, dspec, dspec), out_specs=(rep, rep),
-        check_vma=False,
-    )
-    def body(prior_, post_, xc_, xd_, mask_):
-        stats, _ = V.local_step(cp, post_, xc_, xd_, mask_)
-        stats = _psum_stats(stats, data_axes)
-        new = V.global_update(prior_, stats)
-        return new, V.elbo(cp, prior_, new, stats)
-
-    return jax.jit(body)(prior, post, xc, xd, mask)
+    prog = _sweep_program(cp, mesh, tuple(data_axes), backend, chunk)
+    return prog(prior, post, xc, xd, mask)

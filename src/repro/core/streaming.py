@@ -16,11 +16,20 @@ Implements:
 
 All of this works identically on one device or on the d-VMP mesh (pass
 ``mesh=``) — the paper's headline "same code multi-core or distributed".
+
+Two drivers share one step body (:func:`_stream_step`):
+
+* :func:`stream_update` — one host call per arriving batch (the online API);
+* :func:`stream_fit` — T stacked batches in ONE jitted ``lax.scan`` with the
+  drift test and prior tempering inside the scan body and the
+  ``StreamState`` buffers donated, so the whole stream replay is a single
+  resident device program (no per-batch host round-trip or dispatch).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from functools import partial
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,7 +77,10 @@ class StreamState(NamedTuple):
 
 
 def stream_init(prior: PlateParams, init: PlateParams) -> StreamState:
-    return StreamState(prior=prior, post=init, drift=drift_init(),
+    """Fresh stream state.  The global params are COPIED (they are tiny)
+    so the state owns its buffers — :func:`stream_fit` donates them."""
+    copy = lambda tree: jax.tree_util.tree_map(jnp.array, tree)
+    return StreamState(prior=copy(prior), post=copy(init), drift=drift_init(),
                        n_seen=jnp.asarray(0.0), n_drifts=jnp.asarray(0))
 
 
@@ -85,31 +97,32 @@ def _temper(params: PlateParams, base: PlateParams, rho: float) -> PlateParams:
     return svi.from_natural(mixed)
 
 
-def stream_update(
+def _stream_step(
     cp: CompiledPlate,
     base_prior: PlateParams,
     state: StreamState,
     xc: jnp.ndarray,
     xd: jnp.ndarray,
-    *,
-    sweeps: int = 20,
-    tol: float = 1e-4,
-    drift_threshold: float = 5.0,
-    forget: float = 0.3,
-    mesh=None,
-    data_axes: Tuple[str, ...] = ("data",),
-) -> Tuple[StreamState, dict]:
-    """Process one arriving batch: score -> (maybe) drift -> Bayesian update.
+    mask: jnp.ndarray,
+    drift_threshold: float,
+    forget: float,
+    backend: str,
+    chunk: Optional[int],
+    fit_fn,
+) -> Tuple[StreamState, Dict[str, jnp.ndarray]]:
+    """score -> (maybe) drift -> Bayesian update, as pure traced ops.
 
-    Eq. 3: p(theta | X_1..X_t) ∝ p(X_t | theta) p(theta | X_1..X_{t-1}):
-    the fit below uses ``state.prior`` (yesterday's posterior) as the prior.
+    THE step body, shared by the per-batch :func:`stream_update` API and
+    the :func:`stream_fit` scan — both drivers run exactly this math.
+    ``fit_fn(prior, post) -> (post, elbo)`` supplies the inner VMP fit
+    (jitted ``vmp_fit``, traced ``fit_loop`` or d-VMP sweeps).
     """
-    N = xc.shape[0]
-    mask = jnp.ones(N)
+    n_eff = mask.sum()
 
     # --- score the incoming batch under the CURRENT posterior ---------------
-    stats_pre, _ = V.local_step(cp, state.post, xc, xd, mask)
-    score = stats_pre.local_elbo / N
+    stats_pre, _ = V.local_step(cp, state.post, xc, xd, mask,
+                                backend=backend, chunk=chunk)
+    score = stats_pre.local_elbo / jnp.maximum(n_eff, 1.0)
     dstate, ph = drift_update(state.drift, score)
     drifted = ph > drift_threshold
 
@@ -125,22 +138,134 @@ def stream_update(
     )
 
     # --- streaming VB: VMP sweeps against the chained prior ------------------
-    if mesh is None:
-        fit = V.vmp_fit(cp, prior, state.post, xc, xd, sweeps, tol)
-        post, e = fit.post, fit.elbo
-    else:
-        post, e = state.post, jnp.asarray(-jnp.inf)
-        for _ in range(sweeps):  # bounded sweeps; dvmp_fit also available
-            post, e = dvmp.dvmp_one_sweep(
-                cp, prior, post, xc, xd, mask, mesh, data_axes
-            )
+    post, e = fit_fn(prior, state.post)
 
     new_state = StreamState(
         prior=post,  # Eq. 3: today's posterior is tomorrow's prior
         post=post,
         drift=dstate,
-        n_seen=state.n_seen + N,
+        n_seen=state.n_seen + n_eff,
         n_drifts=state.n_drifts + drifted.astype(jnp.int32),
     )
     info = {"elbo": e, "score": score, "ph": ph, "drifted": drifted}
     return new_state, info
+
+
+def stream_update(
+    cp: CompiledPlate,
+    base_prior: PlateParams,
+    state: StreamState,
+    xc: jnp.ndarray,
+    xd: jnp.ndarray,
+    *,
+    sweeps: int = 20,
+    tol: float = 1e-4,
+    drift_threshold: float = 5.0,
+    forget: float = 0.3,
+    mesh=None,
+    data_axes: Tuple[str, ...] = ("data",),
+    backend: str = "einsum",
+    chunk: Optional[int] = None,
+    mask: Optional[jnp.ndarray] = None,
+) -> Tuple[StreamState, dict]:
+    """Process one arriving batch: score -> (maybe) drift -> Bayesian update.
+
+    Eq. 3: p(theta | X_1..X_t) ∝ p(X_t | theta) p(theta | X_1..X_{t-1}):
+    the fit below uses ``state.prior`` (yesterday's posterior) as the prior.
+
+    One host call per batch with the drift logic dispatched eagerly — the
+    online API.  For a resident replay of many batches use
+    :func:`stream_fit` (same step body, one device program).
+    """
+    if mask is None:
+        mask = jnp.ones(xc.shape[0])
+
+    if mesh is None:
+        def fit_fn(prior, post):
+            fit = V.vmp_fit(cp, prior, post, xc, xd, sweeps, tol,
+                            mask, backend, chunk)
+            return fit.post, fit.elbo
+    else:
+        def fit_fn(prior, post):
+            e = jnp.asarray(-jnp.inf)
+            for _ in range(sweeps):  # bounded sweeps; dvmp_fit also available
+                post, e = dvmp.dvmp_one_sweep(
+                    cp, prior, post, xc, xd, mask, mesh, data_axes,
+                    backend, chunk
+                )
+            return post, e
+
+    return _stream_step(cp, base_prior, state, xc, xd, mask,
+                        drift_threshold, forget, backend, chunk, fit_fn)
+
+
+@partial(
+    jax.jit,
+    static_argnums=(0,),
+    static_argnames=("sweeps", "tol", "drift_threshold", "forget",
+                     "backend", "chunk"),
+    donate_argnums=(2,),
+)
+def _stream_fit_scan(cp, base_prior, state, xcs, xds, masks, *, sweeps, tol,
+                     drift_threshold, forget, backend, chunk):
+    def step(carry: StreamState, inp):
+        xc, xd, mask = inp
+
+        def fit_fn(prior, post):
+            fit = V.fit_loop(cp, prior, post, xc, xd, mask, sweeps, tol,
+                             backend, chunk)
+            return fit.post, fit.elbo
+
+        return _stream_step(cp, base_prior, carry, xc, xd, mask,
+                            drift_threshold, forget, backend, chunk, fit_fn)
+
+    return jax.lax.scan(step, state, (xcs, xds, masks))
+
+
+def stream_fit(
+    cp: CompiledPlate,
+    base_prior: PlateParams,
+    state: StreamState,
+    xcs: jnp.ndarray,
+    xds: jnp.ndarray,
+    masks: Optional[jnp.ndarray] = None,
+    *,
+    sweeps: int = 20,
+    tol: float = 1e-4,
+    drift_threshold: float = 5.0,
+    forget: float = 0.3,
+    backend: str = "einsum",
+    chunk: Optional[int] = None,
+) -> Tuple[StreamState, Dict[str, jnp.ndarray]]:
+    """Replay T stacked batches in ONE jitted ``lax.scan``.
+
+    xcs: [T, B, F]; xds: [T, B, Fd]; masks: [T, B] (None = all real).
+    Equivalent to T calls of :func:`stream_update` (same step body), but the
+    whole stream is a single resident device program: the drift test,
+    tempering and the inner VMP sweep loop all live inside the scan body,
+    and the ``StreamState`` buffers are donated so the posterior is updated
+    in place batch-over-batch.
+
+    Returns the final state and per-batch info arrays
+    ``{"elbo", "score", "ph", "drifted"}`` each of leading dim T.
+    """
+    if masks is None:
+        masks = jnp.ones(xcs.shape[:2])
+    # state is donated, but its leaves routinely alias each other and the
+    # other operands (stream_init reuses the prior's buffers for state.prior
+    # and symmetry_broken shares all-but-m with it); XLA rejects donating an
+    # aliased buffer, so copy exactly the aliased (small, global) leaves
+    seen = {id(leaf) for tree in (base_prior, xcs, xds, masks)
+            for leaf in jax.tree_util.tree_leaves(tree)}
+
+    def unalias(leaf):
+        if id(leaf) in seen:
+            return jnp.array(leaf)
+        seen.add(id(leaf))
+        return leaf
+
+    state = jax.tree_util.tree_map(unalias, state)
+    return _stream_fit_scan(cp, base_prior, state, xcs, xds, masks,
+                            sweeps=sweeps, tol=tol,
+                            drift_threshold=drift_threshold, forget=forget,
+                            backend=backend, chunk=chunk)

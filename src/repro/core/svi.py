@@ -17,7 +17,7 @@ parameterizations the natural coordinates are
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -87,12 +87,19 @@ def svi_step(
     *,
     tau: float = 1.0,
     kappa: float = 0.7,
+    backend: str = "einsum",
+    chunk: Optional[int] = None,
 ) -> SVIState:
     """One natural-gradient step on minibatch (xc, xd); Robbins-Monro rate
-    rho_t = (t + tau)^-kappa, kappa in (0.5, 1]."""
+    rho_t = (t + tau)^-kappa, kappa in (0.5, 1].
+
+    ``backend``/``chunk`` select the suff-stats reduction schedule of the
+    E-step (see :func:`repro.core.vmp.local_step`).
+    """
     B = xc.shape[0]
     post = from_natural(state.nat)
-    stats, _ = V.local_step(cp, post, xc, xd, jnp.ones(B))
+    stats, _ = V.local_step(cp, post, xc, xd, jnp.ones(B),
+                            backend=backend, chunk=chunk)
     scale = n_total / B
     target = jax.tree_util.tree_map(
         lambda p, s: p + scale * s, to_natural(prior), stats_as_natural(stats)

@@ -173,6 +173,27 @@ def symmetry_broken(prior: PlateParams, key: jax.Array, scale: float = 0.5
 # ---------------------------------------------------------------------------
 # Local step — compute q(Z), q(H) and emit expected sufficient statistics
 # ---------------------------------------------------------------------------
+#
+# Two suff-stats backends share one math path:
+#   backend="einsum"  — XLA einsum reductions (the reference; always exact)
+#   backend="pallas"  — kernels.clg_stats tiled-accumulation kernels
+#                       (compiled on TPU, interpret fallback on CPU; oracle:
+#                       kernels.ref.clg_suffstats_ref / clg_disc_counts_ref)
+# and an instance-chunked driver (``chunk=``) scans the body over fixed-size
+# instance blocks so the [N, F, K] / [N, K, L, L] intermediates (quad_oo,
+# e_hh, the sxx reductions) never materialize at full N.
+
+
+BACKENDS = ("einsum", "pallas")
+
+
+def default_backend() -> str:
+    """'pallas' where the kernels compile natively (TPU or forced via
+    REPRO_PALLAS_COMPILE=1), else 'einsum' — interpret-mode Pallas is
+    correctness-grade only."""
+    from repro.kernels import clg_stats
+
+    return "einsum" if clg_stats._resolve_interpret(None) else "pallas"
 
 
 def _observed_design(cp: CompiledPlate, xc: jnp.ndarray) -> jnp.ndarray:
@@ -202,17 +223,61 @@ def _split_moments(cp: CompiledPlate, mom: ef.RegMoments):
     return wo, wh, oo, oh, hh
 
 
-def local_step(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
-               xd: jnp.ndarray, mask: jnp.ndarray,
-               r_fixed: Optional[jnp.ndarray] = None,
-               ) -> Tuple[PlateStats, jnp.ndarray]:
-    """One local VMP step on a batch.
+def _reduce_reg(cp: CompiledPlate, obs: jnp.ndarray, y: jnp.ndarray,
+                h_mean: jnp.ndarray, e_hh: jnp.ndarray, r: jnp.ndarray,
+                backend: str):
+    """Regression suff-stats reduction over instances -> (sxx, sxy, syy).
 
-    xc: [N, F] continuous leaves; xd: [N, Fd] int discrete leaves;
-    mask: [N] 1.0 for real instances (0.0 pads — streaming tail batches);
-    r_fixed: [N, K] — clamp q(Z) (supervised models: observed class labels).
-    Returns the suff-stat message pytree and the responsibilities r: [N, K].
+    ``backend="pallas"`` routes the observed-design blocks (the [N, F, Do]
+    x responsibilities contractions) through the tiled clg_suffstats kernel;
+    the latent blocks (k-dependent designs: E[h|z=k], E[hh^T|z=k]) stay as
+    chunk-local einsums — they cannot ride a k-independent design kernel.
     """
+    lay = cp.layout
+    L = lay.L
+    if backend == "pallas":
+        from repro.kernels import clg_stats
+
+        sxx_oo, sxy_o, syy = clg_stats.clg_suffstats(obs, y, r)
+    else:
+        sxx_oo = jnp.einsum("nfa,nfb,nk->fkab", obs, obs, r)
+        sxy_o = jnp.einsum("nfa,nf,nk->fka", obs, y, r)
+        syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
+    if L == 0:
+        return sxx_oo, sxy_o, syy
+    sxx_oh = jnp.einsum("nfa,nkl,nk->fkal", obs, h_mean, r)
+    sxx_hh = jnp.einsum("nklm,nk->klm", e_hh, r)
+    sxx_hh = jnp.broadcast_to(sxx_hh[None], (max(lay.F, 1),) + sxx_hh.shape)
+    top = jnp.concatenate([sxx_oo, sxx_oh], axis=-1)
+    bot = jnp.concatenate(
+        [jnp.swapaxes(sxx_oh, -1, -2), sxx_hh], axis=-1
+    )
+    sxx = jnp.concatenate([top, bot], axis=-2)               # [F,K,D,D]
+    sxy = jnp.concatenate(
+        [sxy_o, jnp.einsum("nkl,nf,nk->fkl", h_mean, y, r)], axis=-1
+    )
+    return sxx, sxy, syy
+
+
+def _reduce_disc(cp: CompiledPlate, xd: jnp.ndarray, r: jnp.ndarray,
+                 backend: str) -> jnp.ndarray:
+    """Discrete-leaf one-hot count reduction -> [Fd, K, C]."""
+    lay = cp.layout
+    if backend == "pallas":
+        from repro.kernels import clg_stats
+
+        counts = clg_stats.clg_disc_counts(xd, r, lay.C)
+    else:
+        onehot = jax.nn.one_hot(xd.astype(jnp.int32), lay.C)  # [N, Fd, C]
+        counts = jnp.einsum("nfc,nk->fkc", onehot, r)
+    return counts * cp.card_mask[:, None, :]
+
+
+def _local_step_body(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
+                     xd: jnp.ndarray, mask: jnp.ndarray,
+                     r_fixed: Optional[jnp.ndarray], backend: str,
+                     ) -> Tuple[PlateStats, jnp.ndarray]:
+    """Local step on one (chunk of a) batch — see :func:`local_step`."""
     lay = cp.layout
     N = xc.shape[0]
     K, L, Do = lay.K, lay.L, 1 + lay.P
@@ -291,29 +356,7 @@ def local_step(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
 
     # expected design outer products per leaf (masked dims handled by moments;
     # stats are masked below so padded dims keep their prior)
-    d_o = obs                                                    # [N, F, Do]
-    if L > 0:
-        Ey_d_h = h_mean                                          # shared across f
-        sxx_oo = jnp.einsum("nfa,nfb,nk->fkab", d_o, d_o, r)
-        sxx_oh = jnp.einsum("nfa,nkl,nk->fkal", d_o, Ey_d_h, r)
-        sxx_hh = jnp.einsum("nklm,nk->klm", e_hh, r)
-        sxx_hh = jnp.broadcast_to(sxx_hh[None], (max(lay.F, 1),) + sxx_hh.shape)
-        top = jnp.concatenate([sxx_oo, sxx_oh], axis=-1)
-        bot = jnp.concatenate(
-            [jnp.swapaxes(sxx_oh, -1, -2), sxx_hh], axis=-1
-        )
-        sxx = jnp.concatenate([top, bot], axis=-2)               # [F,K,D,D]
-        sxy = jnp.concatenate(
-            [
-                jnp.einsum("nfa,nf,nk->fka", d_o, y, r),
-                jnp.einsum("nkl,nf,nk->fkl", Ey_d_h, y, r),
-            ],
-            axis=-1,
-        )
-    else:
-        sxx = jnp.einsum("nfa,nfb,nk->fkab", d_o, d_o, r)
-        sxy = jnp.einsum("nfa,nf,nk->fka", d_o, y, r)
-    syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
+    sxx, sxy, syy = _reduce_reg(cp, obs, y, h_mean, e_hh, r, backend)
     nw = jnp.broadcast_to(counts[None], syy.shape)
 
     dmask = design_mask(cp)
@@ -323,8 +366,7 @@ def local_step(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
     reg_stats = ef.RegSuffStats(sxx=sxx, sxy=sxy, syy=syy * live, n=nw * live)
 
     if lay.Fd > 0:
-        onehot = jax.nn.one_hot(xd.astype(jnp.int32), lay.C)     # [N, Fd, C]
-        disc_counts = jnp.einsum("nfc,nk->fkc", onehot, r) * cp.card_mask[:, None, :]
+        disc_counts = _reduce_disc(cp, xd, r, backend)
     else:
         disc_counts = jnp.zeros((1, K, lay.C))
 
@@ -337,6 +379,66 @@ def local_step(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
         n=mask.sum(), local_elbo=local_elbo,
     )
     return stats, r
+
+
+def local_step(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
+               xd: jnp.ndarray, mask: jnp.ndarray,
+               r_fixed: Optional[jnp.ndarray] = None, *,
+               backend: str = "einsum", chunk: Optional[int] = None,
+               ) -> Tuple[PlateStats, jnp.ndarray]:
+    """One local VMP step on a batch.
+
+    xc: [N, F] continuous leaves; xd: [N, Fd] int discrete leaves;
+    mask: [N] 1.0 for real instances (0.0 pads — streaming tail batches);
+    r_fixed: [N, K] — clamp q(Z) (supervised models: observed class labels).
+
+    backend: "einsum" (XLA reference) or "pallas" (tiled-accumulation
+    kernels); chunk: when set, instances are processed in blocks of this
+    size by a ``lax.scan`` whose carry is the suff-stat pytree, so no
+    [N, F, K] / [N, K, L, L] intermediate ever materializes at full N.
+    Both knobs only change the reduction schedule, not the math.
+
+    Returns the suff-stat message pytree and the responsibilities r: [N, K].
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    N = xc.shape[0]
+    if chunk is None or chunk >= N:
+        return _local_step_body(cp, params, xc, xd, mask, r_fixed, backend)
+
+    nchunks = -(-N // chunk)
+    pad = nchunks * chunk - N
+    if pad:
+        xc = jnp.pad(xc, ((0, pad), (0, 0)))
+        xd = jnp.pad(xd, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, (0, pad))          # pads masked out -> stats 0
+        if r_fixed is not None:
+            r_fixed = jnp.pad(r_fixed, ((0, pad), (0, 0)))
+    xcs = xc.reshape(nchunks, chunk, xc.shape[1])
+    xds = xd.reshape(nchunks, chunk, xd.shape[1])
+    ms = mask.reshape(nchunks, chunk)
+    rfs = (None if r_fixed is None
+           else r_fixed.reshape(nchunks, chunk, r_fixed.shape[1]))
+
+    def body(acc, inp):
+        if rfs is None:
+            xc_c, xd_c, m_c = inp
+            rf_c = None
+        else:
+            xc_c, xd_c, m_c, rf_c = inp
+        stats_c, r_c = _local_step_body(cp, params, xc_c, xd_c, m_c, rf_c,
+                                        backend)
+        return jax.tree_util.tree_map(jnp.add, acc, stats_c), r_c
+
+    # first chunk seeds the accumulator (no zero-pytree construction);
+    # chunk < N here, so nchunks >= 2 and the scan always has work
+    stats0, r0 = _local_step_body(cp, params, xcs[0], xds[0], ms[0],
+                                  None if rfs is None else rfs[0], backend)
+    xs = ((xcs[1:], xds[1:], ms[1:]) if rfs is None
+          else (xcs[1:], xds[1:], ms[1:], rfs[1:]))
+    stats, rs = jax.lax.scan(body, stats0, xs)
+    r = jnp.concatenate([r0[None], rs], axis=0).reshape(nchunks * chunk, -1)
+    return stats, r[:N]
 
 
 # ---------------------------------------------------------------------------
@@ -388,15 +490,16 @@ class VMPState(NamedTuple):
     sweep: jnp.ndarray
 
 
-@partial(jax.jit, static_argnums=(0, 5, 6))
-def vmp_fit(cp: CompiledPlate, prior: PlateParams, init: PlateParams,
-            xc: jnp.ndarray, xd: jnp.ndarray,
-            max_sweeps: int = 100, tol: float = 1e-4) -> VMPState:
-    """Run VMP sweeps on one (device-local) data set until ELBO converges."""
-    mask = jnp.ones(xc.shape[0])
+def fit_loop(cp: CompiledPlate, prior: PlateParams, init: PlateParams,
+             xc: jnp.ndarray, xd: jnp.ndarray, mask: jnp.ndarray,
+             max_sweeps: int, tol: float, backend: str = "einsum",
+             chunk: Optional[int] = None) -> VMPState:
+    """Trace-level VMP sweep loop (no jit) — embedded by :func:`vmp_fit`,
+    ``dvmp`` shard bodies and the ``streaming.stream_fit`` scan."""
 
     def sweep(state: VMPState) -> VMPState:
-        stats, _ = local_step(cp, state.post, xc, xd, mask)
+        stats, _ = local_step(cp, state.post, xc, xd, mask,
+                              backend=backend, chunk=chunk)
         post = global_update(prior, stats)
         e = elbo(cp, prior, post, stats)
         return VMPState(post=post, elbo=e,
@@ -415,14 +518,34 @@ def vmp_fit(cp: CompiledPlate, prior: PlateParams, init: PlateParams,
     return jax.lax.while_loop(cond, sweep, state1)
 
 
+@partial(jax.jit, static_argnums=(0, 5, 6, 8, 9))
+def vmp_fit(cp: CompiledPlate, prior: PlateParams, init: PlateParams,
+            xc: jnp.ndarray, xd: jnp.ndarray,
+            max_sweeps: int = 100, tol: float = 1e-4,
+            mask: Optional[jnp.ndarray] = None, backend: str = "einsum",
+            chunk: Optional[int] = None) -> VMPState:
+    """Run VMP sweeps on one (device-local) data set until ELBO converges."""
+    if mask is None:
+        mask = jnp.ones(xc.shape[0])
+    return fit_loop(cp, prior, init, xc, xd, mask, max_sweeps, tol,
+                    backend, chunk)
+
+
 # ---------------------------------------------------------------------------
 # Posterior inference in the learnt model (paper §3.4, VMP as inference)
 # ---------------------------------------------------------------------------
 
 
+@partial(jax.jit, static_argnums=(0,), static_argnames=("backend", "chunk"))
 def posterior_z(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
-                xd: jnp.ndarray) -> jnp.ndarray:
-    """q(Z | x) for a batch — the paper's getPosterior(HiddenVar)."""
+                xd: jnp.ndarray, *, backend: str = "einsum",
+                chunk: Optional[int] = None) -> jnp.ndarray:
+    """q(Z | x) for a batch — the paper's getPosterior(HiddenVar).
+
+    Jitted (keyed on the plate + batch shape): repeated serve-path calls
+    dispatch one compiled program instead of retracing ``local_step``.
+    ``chunk`` bounds memory for very large query batches.
+    """
     mask = jnp.ones(xc.shape[0])
-    _, r = local_step(cp, params, xc, xd, mask)
+    _, r = local_step(cp, params, xc, xd, mask, backend=backend, chunk=chunk)
     return r

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the VMP E-step hot loop: CLG expected suff stats.
+"""Pallas TPU kernels for the VMP E-step hot loop: CLG expected suff stats.
 
 This is the paper's own compute kernel (DESIGN.md §6): for every continuous
 leaf f and mixture component k, d-VMP reduces over (potentially millions
@@ -8,21 +8,43 @@ of) instances
     sxy[f,k] = sum_n r[n,k] d[n,f,:] y[n,f]          [D]
     syy[f,k] = sum_n r[n,k] y[n,f]^2                 []
 
+and, for every discrete leaf and component, the one-hot count reduction
+
+    disc[f,k,c] = sum_n r[n,k] [x[n,f] == c]         [C]
+
 TPU mapping: grid (F, K, n_instance_blocks) with the instance dim minor
 (sequential), accumulating the [D, D] tile in VMEM scratch; the inner
 products are [D, bn] x [bn, D] MXU matmuls.  The per-shard result is the
 psum payload of dvmp (one message pytree per sweep).
+
+``interpret=None`` (the default) compiles the kernel natively when the
+default jax backend is a TPU (or ``REPRO_PALLAS_COMPILE=1`` forces it) and
+falls back to interpret mode on CPU — same policy as the factor-algebra
+kernels behind ``repro.kernels.ops.INTERPRET``.
+
+Oracles: ``repro.kernels.ref.{clg_suffstats_ref,clg_disc_counts_ref}``.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Compiled on TPU (or forced via REPRO_PALLAS_COMPILE=1); interpret
+    elsewhere — CPU Pallas has no Mosaic lowering for these kernels."""
+    if interpret is not None:
+        return interpret
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(d_ref, y_ref, r_ref, sxx_ref, sxy_ref, syy_ref,
@@ -54,13 +76,14 @@ def _kernel(d_ref, y_ref, r_ref, sxx_ref, sxy_ref, syy_ref,
 
 
 def clg_suffstats(d: jnp.ndarray, y: jnp.ndarray, r: jnp.ndarray, *,
-                  block: int = 512, interpret: bool = True
+                  block: int = 512, interpret: Optional[bool] = None
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """d: [N, F, D] design vectors; y: [N, F]; r: [N, K] responsibilities.
 
     Returns (sxx [F, K, D, D], sxy [F, K, D], syy [F, K]) — the RegSuffStats
     triple of repro.core.expfam (oracle: kernels.ref.clg_suffstats_ref).
     """
+    interpret = _resolve_interpret(interpret)
     N, F, D = d.shape
     K = r.shape[1]
     block = min(block, N)
@@ -102,3 +125,60 @@ def clg_suffstats(d: jnp.ndarray, y: jnp.ndarray, r: jnp.ndarray, *,
         interpret=interpret,
     )(df, yf, rk)
     return sxx, sxy, syy
+
+
+def _disc_kernel(x_ref, r_ref, out_ref, acc_scr, *, nb: int, C: int):
+    bi = pl.program_id(2)
+
+    @pl.when(bi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0]                              # [bn] int32
+    r = r_ref[0].astype(jnp.float32)          # [bn]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], C), 1)
+    onehot = (cols == x[:, None]).astype(jnp.float32)      # [bn, C]
+    acc_scr[...] += (onehot * r[:, None]).sum(0)           # [C]
+
+    @pl.when(bi == nb - 1)
+    def _final():
+        out_ref[0, 0] = acc_scr[...]
+
+
+def clg_disc_counts(xd: jnp.ndarray, r: jnp.ndarray, C: int, *,
+                    block: int = 512, interpret: Optional[bool] = None
+                    ) -> jnp.ndarray:
+    """xd: [N, Fd] int discrete leaves; r: [N, K] responsibilities.
+
+    Returns disc [Fd, K, C] — the weighted one-hot reduction
+    ``sum_n r[n,k] onehot(xd[n,f], C)`` that completes the d-VMP message
+    pytree (oracle: kernels.ref.clg_disc_counts_ref).  Same tiling scheme as
+    :func:`clg_suffstats`: grid (Fd, K, n_blocks), instance dim sequential,
+    [C] accumulator in VMEM scratch.
+    """
+    interpret = _resolve_interpret(interpret)
+    N, Fd = xd.shape
+    K = r.shape[1]
+    block = min(block, N)
+    nb = pl.cdiv(N, block)
+    pad = nb * block - N
+    if pad:
+        # padded instances get category -1: matches no iota column -> 0 count
+        xd = jnp.pad(xd, ((0, pad), (0, 0)), constant_values=-1)
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+
+    xf = jnp.moveaxis(xd.astype(jnp.int32), 1, 0)          # [Fd, N]
+    rk = jnp.moveaxis(r, 1, 0)                             # [K, N]
+
+    return pl.pallas_call(
+        functools.partial(_disc_kernel, nb=nb, C=C),
+        grid=(Fd, K, nb),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda f, k, bi: (f, bi)),
+            pl.BlockSpec((1, block), lambda f, k, bi: (k, bi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, C), lambda f, k, bi: (f, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((Fd, K, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((C,), jnp.float32)],
+        interpret=interpret,
+    )(xf, rk)

@@ -1,25 +1,27 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-On this CPU container the kernels execute with ``interpret=True`` (python
-semantics of the same kernel body); on TPU set
-``repro.kernels.ops.INTERPRET = False`` (or env REPRO_PALLAS_COMPILE=1).
+``INTERPRET`` follows one policy for every kernel (clg_stats.
+_resolve_interpret): compiled natively when the default jax backend is a
+TPU or ``REPRO_PALLAS_COMPILE=1`` forces it, interpret mode (python
+semantics of the same kernel body) elsewhere — e.g. this CPU container.
 """
 
 from __future__ import annotations
 
-import os
 from functools import partial
 
 import jax
 
-from repro.kernels.clg_stats import clg_suffstats as _clg
+from repro.kernels.clg_stats import (_resolve_interpret,
+                                     clg_disc_counts as _clg_disc,
+                                     clg_suffstats as _clg)
 from repro.kernels.factor_ops import (evidence_select as _evsel,
                                       log_marginalize as _logmarg,
                                       log_product as _logprod)
 from repro.kernels.flash_attn import flash_attention as _flash
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+INTERPRET = _resolve_interpret(None)
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
@@ -36,6 +38,11 @@ def ssd_scan(x, dt, A, B, C, chunk=128):
 @partial(jax.jit, static_argnames=("block",))
 def clg_suffstats(d, y, r, *, block=512):
     return _clg(d, y, r, block=block, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("C", "block"))
+def clg_disc_counts(xd, r, C, *, block=512):
+    return _clg_disc(xd, r, C, block=block, interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("bm",))

@@ -30,6 +30,14 @@ def clg_suffstats_ref(d: jnp.ndarray, y: jnp.ndarray, r: jnp.ndarray
     return sxx, sxy, syy
 
 
+def clg_disc_counts_ref(xd: jnp.ndarray, r: jnp.ndarray, C: int) -> jnp.ndarray:
+    """Oracle for kernels.clg_stats.clg_disc_counts."""
+    import jax.nn
+
+    onehot = jax.nn.one_hot(xd.astype(jnp.int32), C)       # [N, Fd, C]
+    return jnp.einsum("nfc,nk->fkc", onehot, r)
+
+
 def log_product_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Oracle for kernels.factor_ops.log_product."""
     return a + b[:, None, :]

@@ -22,6 +22,7 @@ from repro.data.stream import Attribute, Batch, DataStream, FINITE, REAL
 
 class Model:
     def __init__(self, attributes: Sequence[Attribute], *, seed: int = 0,
+                 backend: Optional[str] = None, chunk: Optional[int] = None,
                  **prior_kwargs) -> None:
         self.attributes = list(attributes)
         spec, latent_mask = self.build_spec()
@@ -31,6 +32,10 @@ class Model:
         self.posterior = vmp.symmetry_broken(self.prior, jax.random.PRNGKey(seed))
         self._chained_prior = self.prior  # Eq. 3 accumulator
         self.n_seen = 0
+        # suff-stats reduction schedule (vmp.local_step): backend None ->
+        # pallas where the kernels compile natively, einsum elsewhere
+        self.backend = backend if backend is not None else vmp.default_backend()
+        self.chunk = chunk
 
     # -- to be overridden ------------------------------------------------------
 
@@ -68,7 +73,8 @@ class Model:
         if r_fixed is not None:
             # conjugate closed form: one local step + global update
             stats, _ = vmp.local_step(
-                self.cp, self.posterior, batch.xc, batch.xd, batch.mask, r_fixed
+                self.cp, self.posterior, batch.xc, batch.xd, batch.mask,
+                r_fixed, backend=self.backend, chunk=self.chunk
             )
             if mesh is not None:
                 stats = jax.tree_util.tree_map(lambda s: s, stats)  # already global
@@ -76,12 +82,14 @@ class Model:
             e = float(vmp.elbo(self.cp, prior, post, stats))
         elif mesh is None:
             st = vmp.vmp_fit(self.cp, prior, self.posterior,
-                             batch.xc, batch.xd, sweeps, tol)
+                             batch.xc, batch.xd, sweeps, tol, batch.mask,
+                             self.backend, self.chunk)
             post, e = st.post, float(st.elbo)
         else:
             st = dvmp.dvmp_fit(self.cp, prior, self.posterior, batch.xc,
                                batch.xd, mesh, data_axes, sweeps, tol,
-                               mask=batch.mask)
+                               mask=batch.mask, backend=self.backend,
+                               chunk=self.chunk)
             post, e = st.post, float(st.elbo)
 
         self.posterior = post
@@ -93,7 +101,10 @@ class Model:
 
     def posterior_z(self, data) -> jnp.ndarray:
         batch = self._as_batch(data)
-        return vmp.posterior_z(self.cp, self.posterior, batch.xc, batch.xd)
+        # vmp.posterior_z is jitted (keyed on the plate): per-query serve
+        # calls dispatch one compiled program instead of retracing
+        return vmp.posterior_z(self.cp, self.posterior, batch.xc, batch.xd,
+                               backend=self.backend, chunk=self.chunk)
 
     def get_model(self) -> vmp.PlateParams:
         return self.posterior

@@ -101,7 +101,8 @@ class NaiveBayesClassifier(NaiveBayes):
         from repro.core import vmp
 
         stats, _ = vmp.local_step(self.cp, self.posterior, stripped.xc,
-                                  stripped.xd, stripped.mask, r)
+                                  stripped.xd, stripped.mask, r,
+                                  backend=self.backend, chunk=self.chunk)
         post = vmp.global_update(self._chained_prior, stats)
         e = float(vmp.elbo(self.cp, self._chained_prior, post, stats))
         self.posterior = post

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.data.stream import Batch
 from repro.nn import transformer as T
 
 
@@ -128,14 +129,23 @@ class PGMQueryEngine:
     with the same evidence schema propagate together in one batched device
     call.  ``mode="importance"`` answers each query with likelihood
     weighting (one sampler run per query) behind the same API.
+    ``mode="vmp"`` serves q(Z | x) from a fitted plate model
+    (``repro.pgm_models``) via the jitted, chunk-bounded
+    ``vmp.posterior_z`` — N fully-observed queries sharing a schema cost
+    one compiled dispatch; evidence must cover every feature ``X{i}``.
     """
 
     def __init__(self, bn, *, mode: str = "exact", n_samples: int = 10_000,
                  use_pallas: Optional[bool] = None, seed: int = 0) -> None:
         from repro.infer_exact import JunctionTreeEngine
 
-        if mode not in ("exact", "importance"):
+        if mode not in ("exact", "importance", "vmp"):
             raise ValueError(f"unknown mode {mode!r}")
+        if mode == "vmp":
+            # ``bn`` is a plate Model with a discrete latent Z
+            if not hasattr(bn, "cp") or bn.cp.layout.K <= 1:
+                raise ValueError("mode='vmp' needs a plate Model with a "
+                                 "discrete latent Z")
         self.bn = bn
         self.mode = mode
         self.n_samples = n_samples
@@ -146,6 +156,17 @@ class PGMQueryEngine:
         self._next = 0
 
     def submit(self, target: str, evidence: Dict[str, float]) -> PGMQuery:
+        if self.mode == "vmp":
+            # reject malformed queries HERE: flush() empties the queue
+            # before dispatch, so a late error would drop queued work
+            if target != "Z":
+                raise ValueError(f"mode='vmp' serves the latent Z, "
+                                 f"got target {target!r}")
+            names = {f"X{i}" for i in range(self.bn.spec.n_features)}
+            missing = names - set(evidence)
+            if missing:
+                raise ValueError(f"mode='vmp' needs fully observed features; "
+                                 f"missing {sorted(missing)}")
         q = PGMQuery(self._next, target, dict(evidence))
         self._next += 1
         self._queue.append(q)
@@ -161,6 +182,8 @@ class PGMQueryEngine:
         for schema, qs in groups.items():
             if self.mode == "exact":
                 self._flush_exact(schema, qs)
+            elif self.mode == "vmp":
+                self._flush_vmp(schema, qs)
             else:
                 self._flush_importance(qs)
             done.extend(qs)
@@ -180,6 +203,30 @@ class PGMQueryEngine:
                     q.result = post[b if post.shape[0] > 1 else 0]
                     q.log_evidence = float(logz[b if logz.size > 1 else 0])
                     q.done = True
+
+    def _flush_vmp(self, schema: tuple, qs: List[PGMQuery]) -> None:
+        """q(Z | x) for a schema group in ONE jitted posterior_z dispatch.
+
+        Queries were validated at submit time (full evidence, target Z)."""
+        model = self.bn
+        spec = model.spec
+        dm = spec.discrete_map
+        cont_ids = [i for i in range(spec.n_features) if i not in dm]
+        B = len(qs)
+        # pad to the next power of two so arbitrary group sizes reuse a
+        # handful of compiled posterior_z programs instead of one per size
+        cap = 1 << max(B - 1, 0).bit_length()
+        xc = np.zeros((cap, len(cont_ids)), np.float32)
+        xd = np.zeros((cap, len(dm)), np.int32)
+        for b, q in enumerate(qs):
+            xc[b] = [q.evidence[f"X{i}"] for i in cont_ids]
+            xd[b] = [q.evidence[f"X{i}"] for i in sorted(dm)]
+        post = np.asarray(model.posterior_z(Batch(
+            jnp.asarray(xc), jnp.asarray(xd),
+            jnp.ones(cap, jnp.float32))))
+        for b, q in enumerate(qs):
+            q.result = post[b]
+            q.done = True
 
     def _flush_importance(self, qs: List[PGMQuery]) -> None:
         from repro.core.importance_sampling import ImportanceSampling

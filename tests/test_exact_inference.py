@@ -296,6 +296,35 @@ def test_pgm_query_engine_schema_batching(clg_net):
     assert q1.log_evidence is not None and q3.log_evidence is not None
 
 
+def test_pgm_query_engine_vmp_mode():
+    """mode='vmp' serves q(Z | x) from a fitted plate model through the
+    jitted posterior_z path — one compiled dispatch per schema group."""
+    from repro.data.synthetic import gmm_stream
+    from repro.pgm_models import GaussianMixture
+    from repro.serve.engine import PGMQueryEngine
+
+    s, _, _ = gmm_stream(600, 3, 4, seed=1)
+    m = GaussianMixture(s.attributes, n_states=3)
+    m.update_model(s)
+    batch = s.collect()
+    eng = PGMQueryEngine(m, mode="vmp")
+    qs = [eng.submit("Z", {f"X{i}": float(batch.xc[b, i]) for i in range(4)})
+          for b in range(5)]
+    done = eng.flush()
+    assert len(done) == 5 and all(q.done for q in done)
+    expect = np.asarray(m.posterior_z(batch))[:5]
+    got = np.stack([q.result for q in qs])
+    np.testing.assert_allclose(got, expect, atol=1e-5)
+
+    # malformed queries are rejected at submit — the queue is untouched,
+    # so a later flush() cannot drop valid queued work
+    with pytest.raises(ValueError, match="missing"):
+        eng.submit("Z", {"X0": 0.0})
+    with pytest.raises(ValueError, match="latent Z"):
+        eng.submit("X0", {f"X{i}": 0.0 for i in range(4)})
+    assert not eng._queue
+
+
 # -- DAG.add_parent hardening -------------------------------------------------
 
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.clg_stats import clg_suffstats
+from repro.kernels.clg_stats import clg_disc_counts, clg_suffstats
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -103,6 +103,25 @@ def test_clg_suffstats_sweep(N, F, D, K, block):
                                atol=1e-3, rtol=1e-4)
     np.testing.assert_allclose(np.asarray(syy), np.asarray(ryy),
                                atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("N,Fd,C,K,block", [
+    (1000, 2, 3, 2, 256),
+    (513, 1, 5, 4, 128),     # ragged N vs block
+    (128, 3, 2, 7, 64),
+])
+def test_clg_disc_counts_sweep(N, Fd, C, K, block):
+    """The one-hot count reduction that completes the message pytree."""
+    xd = jax.random.randint(KEYS[0], (N, Fd), 0, C)
+    r = jax.nn.softmax(jax.random.normal(KEYS[1], (N, K)), -1)
+    out = clg_disc_counts(xd, r, C, block=block)
+    exp = ref.clg_disc_counts_ref(xd, r, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-5)
+    # column sums recover the responsibilities' mass per leaf
+    np.testing.assert_allclose(np.asarray(out.sum(-1)),
+                               np.tile(np.asarray(r.sum(0)), (Fd, 1)),
+                               atol=1e-3)
 
 
 def test_clg_kernel_feeds_conjugate_update():
