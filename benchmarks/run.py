@@ -35,6 +35,15 @@ BENCH_STREAMING_SCHEMA = {
     "config": dict, "results": list, "speedup_inst_per_s": float,
 }
 
+# --json --dvmp mode: the distributed mesh path (shard_map + psum) vs the
+# single-device fit on identical data — the d-VMP claim (ii) as a JSON
+# artifact (ROADMAP open item "a JSON mode for the d-VMP mesh path").
+BENCH_DVMP_SCHEMA = {
+    "bench": str, "schema_version": int, "created": str, "backend": str,
+    "config": dict, "results": list, "speedup_inst_per_s": float,
+    "posterior_max_abs_diff": float,
+}
+
 
 def _t(fn, *args, reps=3, warmup=1, **kw):
     import jax
@@ -226,6 +235,116 @@ def validate_bench_streaming(payload: dict) -> None:
                 raise ValueError(f"result {r['driver']} missing {field!r}")
         if not r["inst_per_s"] > 0:
             raise ValueError("inst_per_s must be positive")
+
+
+def bench_dvmp_json(n: int = 50_000, sweeps: int = 5, k: int = 3, f: int = 8,
+                    backend: str = None, n_devices: int = 0,
+                    out: str = "BENCH_dvmp.json") -> dict:
+    """(ii, JSON mode) d-VMP over the device mesh vs single-device VMP.
+
+    Same data, same sweep count; the mesh driver is the `shard_map` body
+    with one ``lax.psum`` of the suff-stats pytree per sweep.  Writes
+    ``out`` with inst/s, us/fit and the replicated-posterior max-abs-diff
+    (shard invariance — must stay at float-reduction-order noise).
+    """
+    import datetime
+
+    import jax
+
+    from repro.core import dvmp, vmp
+    from repro.core.compat import make_mesh
+    from repro.core.dag import PlateSpec
+    from repro.data.synthetic import gmm_stream
+
+    backend = backend or vmp.default_backend()
+    ndev = n_devices or len(jax.devices())
+    if n < ndev:
+        raise ValueError(f"--n {n} must be >= the mesh size {ndev}")
+    n = (n // ndev) * ndev                      # shardable leading dim
+    spec = PlateSpec(n_features=f, latent_card=k)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    init = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+    stream, _, _ = gmm_stream(n, k, f, seed=0)
+    batch = stream.collect()
+    xc, xd = batch.xc, batch.xd
+    mesh = make_mesh((ndev,), ("data",))
+
+    def run_single():
+        st = vmp.vmp_fit(cp, prior, init, xc, xd, sweeps, 0.0,
+                         None, backend, None)
+        jax.block_until_ready(st.post.reg.m)
+        return st
+
+    def run_mesh():
+        st = dvmp.dvmp_fit(cp, prior, init, xc, xd, mesh, ("data",),
+                           sweeps, 0.0, backend=backend)
+        jax.block_until_ready(st.post.reg.m)
+        return st
+
+    results = []
+    finals = {}
+    for name, fn in (("vmp_single_device", run_single),
+                     ("dvmp_mesh", run_mesh)):
+        fn()                                    # warm the jit caches
+        t0 = time.perf_counter()
+        finals[name] = fn()
+        dt = time.perf_counter() - t0
+        results.append({
+            "driver": name,
+            "backend": backend,
+            "n_devices": 1 if name == "vmp_single_device" else ndev,
+            "us_per_fit": dt * 1e6,
+            "inst_per_s": n * sweeps / dt,
+        })
+
+    diff = float(np.abs(
+        np.asarray(finals["vmp_single_device"].post.reg.m)
+        - np.asarray(finals["dvmp_mesh"].post.reg.m)).max())
+    payload = {
+        "bench": "dvmp",
+        "schema_version": 1,
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "backend": backend,
+        "config": {"n": n, "sweeps": sweeps, "features": f, "components": k,
+                   "mesh_shape": [ndev],
+                   "device": str(jax.devices()[0]).split(":")[0]},
+        "results": results,
+        "speedup_inst_per_s": results[1]["inst_per_s"]
+        / results[0]["inst_per_s"],
+        "posterior_max_abs_diff": diff,
+    }
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {out}: dvmp_mesh x{ndev} {payload['speedup_inst_per_s']:.2f}x"
+          f" inst/s vs single device (posterior diff {diff:.2e})")
+    return payload
+
+
+def validate_bench_dvmp(payload: dict) -> None:
+    """Schema gate for BENCH_dvmp.json — used by scripts/ci.sh."""
+    for key, typ in BENCH_DVMP_SCHEMA.items():
+        if key not in payload:
+            raise ValueError(f"BENCH_dvmp.json missing key {key!r}")
+        if typ is float and isinstance(payload[key], int):
+            continue
+        if not isinstance(payload[key], typ):
+            raise ValueError(f"{key!r} must be {typ.__name__}, "
+                             f"got {type(payload[key]).__name__}")
+    drivers = {r["driver"] for r in payload["results"]}
+    if drivers != {"vmp_single_device", "dvmp_mesh"}:
+        raise ValueError(f"unexpected drivers {drivers}")
+    for r in payload["results"]:
+        for field in ("backend", "n_devices", "us_per_fit", "inst_per_s"):
+            if field not in r:
+                raise ValueError(f"result {r['driver']} missing {field!r}")
+        if not r["inst_per_s"] > 0:
+            raise ValueError("inst_per_s must be positive")
+    if not payload["posterior_max_abs_diff"] < 1e-2:
+        raise ValueError(
+            "d-VMP shard invariance violated: posterior_max_abs_diff="
+            f"{payload['posterior_max_abs_diff']}")
 
 
 def bench_drift():
@@ -459,19 +578,32 @@ def main(argv=None) -> None:
     ap.add_argument("--json", action="store_true",
                     help="run the streaming before/after comparison and "
                          "write BENCH_streaming.json instead of CSV rows")
-    ap.add_argument("--out", default="BENCH_streaming.json")
+    ap.add_argument("--dvmp", action="store_true",
+                    help="with --json: run the d-VMP mesh-path driver and "
+                         "write BENCH_dvmp.json instead")
+    ap.add_argument("--out", default=None)
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--batch", type=int, default=2_000)
     ap.add_argument("--sweeps", type=int, default=5)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="mesh size for --dvmp (default: all jax devices)")
     ap.add_argument("--backend", default=None,
                     help="suff-stats backend for stream_fit "
                          "(einsum|pallas; default: auto)")
     args = ap.parse_args(argv)
 
+    if args.dvmp and not args.json:
+        ap.error("--dvmp requires --json (it writes BENCH_dvmp.json)")
+    if args.json and args.dvmp:
+        payload = bench_dvmp_json(
+            n=args.n, sweeps=args.sweeps, backend=args.backend,
+            n_devices=args.devices, out=args.out or "BENCH_dvmp.json")
+        validate_bench_dvmp(payload)
+        return
     if args.json:
         payload = bench_streaming_json(
             n=args.n, batch=args.batch, sweeps=args.sweeps,
-            backend=args.backend, out=args.out)
+            backend=args.backend, out=args.out or "BENCH_streaming.json")
         validate_bench_streaming(payload)
         return
 

@@ -1,12 +1,22 @@
 #!/usr/bin/env bash
-# Tier-1 smoke runner.  Three gates:
+# Tier-1 CI runner (run by .github/workflows/ci.yml on every push/PR, and by
+# hand via `bash scripts/ci.sh`).  Gates:
 #   1. the full pytest suite with -x (any collection error — e.g. a jax
 #      import that moved between versions — fails fast instead of landing),
-#   2. an end-to-end 2-variable junction-tree query through the public API,
-#      so the exact-inference path is exercised even under pytest -k filters,
+#   2. kernel interpret-vs-policy parity: tests/test_kernels.py runs once
+#      with REPRO_PALLAS_INTERPRET=1 forced and once under the default
+#      policy, so on a TPU runner the compiled Mosaic path is checked
+#      against the same oracles the CPU container verifies in interpret
+#      mode (they may not silently diverge),
 #   3. the streaming perf harness in --json mode on tiny sizes with schema
 #      validation, so perf-trajectory breakage (BENCH_streaming.json) fails
-#      tier-1 instead of silently rotting.
+#      tier-1 instead of silently rotting,
+#   4. the d-VMP mesh-path harness (--json --dvmp) on a forced 4-device
+#      host mesh with schema + shard-invariance validation,
+#   5. end-to-end junction-tree queries through the public API: a discrete
+#      2-variable query AND a strong-junction-tree query on a CLG network
+#      with an unobserved continuous INTERNAL node, so both exact-inference
+#      pipelines are exercised even under pytest -k filters.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,8 +24,28 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q "$@"
 
+# Kernel parity: the tier-1 run above already executes tests/test_kernels.py
+# under the DEFAULT interpret policy (compiled on TPU runners, interpret on
+# CPU); when that default resolves to COMPILED, force interpret mode once
+# more so the two paths cannot silently diverge.  On runners whose default
+# is already interpret (this CPU container, the GitHub runner) the forced
+# leg would be byte-identical to the tier-1 run, so it is skipped.  If the
+# tier-1 run was filtered via "$@", re-run the default-policy leg so the
+# pair stays complete.
+if [ "$#" -gt 0 ]; then
+    python -m pytest -x -q tests/test_kernels.py
+fi
+DEFAULT_INTERPRET="$(python -c 'from repro.kernels import ops; print(int(ops.INTERPRET))')"
+if [ "$DEFAULT_INTERPRET" = "0" ]; then
+    echo "ci: kernel parity leg (default policy compiles — forcing interpret)"
+    REPRO_PALLAS_INTERPRET=1 python -m pytest -x -q tests/test_kernels.py
+else
+    echo "ci: kernel parity leg skipped (default policy is already interpret)"
+fi
+
 BENCH_OUT="$(mktemp -t bench_streaming_smoke.XXXXXX.json)"
-trap 'rm -f "$BENCH_OUT"' EXIT
+DVMP_OUT="$(mktemp -t bench_dvmp_smoke.XXXXXX.json)"
+trap 'rm -f "$BENCH_OUT" "$DVMP_OUT"' EXIT
 python benchmarks/run.py --json --n 1000 --batch 250 --sweeps 2 \
     --out "$BENCH_OUT"
 python - "$BENCH_OUT" <<'EOF'
@@ -28,6 +58,21 @@ with open(sys.argv[1]) as fh:
 validate_bench_streaming(payload)
 print("ci smoke: BENCH_streaming schema OK "
       f"(speedup {payload['speedup_inst_per_s']:.2f}x)")
+EOF
+
+XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+python benchmarks/run.py --json --dvmp --n 2000 --sweeps 3 --out "$DVMP_OUT"
+python - "$DVMP_OUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from run import validate_bench_dvmp
+
+with open(sys.argv[1]) as fh:
+    payload = json.load(fh)
+validate_bench_dvmp(payload)
+print("ci smoke: BENCH_dvmp schema OK (mesh "
+      f"{payload['config']['mesh_shape']}, posterior diff "
+      f"{payload['posterior_max_abs_diff']:.2e})")
 EOF
 
 python - <<'EOF'
@@ -52,4 +97,42 @@ expect = jnp.array([0.6 * 0.1, 0.4 * 0.8])
 expect = expect / expect.sum()
 assert jnp.allclose(post, expect, atol=1e-6), (post, expect)
 print(f"ci smoke: P(A | B=1) = {post} OK")
+EOF
+
+python - <<'EOF'
+import numpy as np
+import jax.numpy as jnp
+from repro.core.dag import (BayesianNetwork, CLGCPD, DAG, MultinomialCPD,
+                            Variables)
+from repro.infer_exact import (JunctionTreeEngine, brute_posterior,
+                               brute_posterior_mean_var)
+
+# strong junction tree: Z -> X1 -> X2 -> X3 with X2 an unobserved
+# continuous INTERNAL node (evidence on X1 and X3 only)
+vs = Variables()
+Z = vs.new_multinomial("Z", 2)
+X1, X2, X3 = (vs.new_gaussian(n) for n in ("X1", "X2", "X3"))
+dag = DAG(vs)
+dag.add_parent(X1, Z)
+dag.add_parent(X2, X1)
+dag.add_parent(X3, X2)
+bn = BayesianNetwork(dag, {
+    "Z": MultinomialCPD(jnp.array([0.4, 0.6])),
+    "X1": CLGCPD(jnp.array([0.0, 3.0]), jnp.zeros((2, 0)),
+                 jnp.array([1.0, 0.5])),
+    "X2": CLGCPD(jnp.asarray(1.0), jnp.asarray([0.8]), jnp.asarray(0.7)),
+    "X3": CLGCPD(jnp.asarray(-0.5), jnp.asarray([1.2]), jnp.asarray(0.4)),
+})
+eng = JunctionTreeEngine(bn)
+assert eng.strong
+ev = {"X1": 0.9, "X3": 0.2}
+eng.set_evidence(ev)
+eng.run_inference()
+pz = np.asarray(eng.posterior_discrete(Z))
+assert np.allclose(pz, np.asarray(brute_posterior(bn, Z, ev)), atol=1e-5)
+m, v = eng.posterior_mean_var(X2)
+mb, vb = brute_posterior_mean_var(bn, X2, ev)
+assert abs(float(m) - float(mb)) < 1e-5 and abs(float(v) - float(vb)) < 1e-5
+print(f"ci smoke: strong JT P(Z | X1, X3) = {pz}, "
+      f"E[X2 | e] = {float(m):.4f} OK")
 EOF

@@ -83,6 +83,12 @@ class DataStream:
 
     # -- iteration --------------------------------------------------------------
 
+    def chunks(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """The stream's native (xc, xd) chunks, as the source yields them —
+        the batching ``Model.update_model`` routes through the streaming
+        drivers.  One pass over the source; no re-batching or padding."""
+        yield from self._source()
+
     def batches(self, batch_size: int) -> Iterator[Batch]:
         """Fixed-shape batches; the ragged tail is zero-padded and masked."""
         buf_c: List[np.ndarray] = []

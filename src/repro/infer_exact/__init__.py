@@ -7,25 +7,41 @@ whose factor algebra is batched over evidence instances and backed by Pallas
 kernels (``repro.kernels.factor_ops``).
 
 Modules:
-  graph      moralization, min-fill triangulation, junction-tree construction
-             with running-intersection verification (static Python over DAG)
-  factors    batched log-space discrete factor algebra (product, marginalize,
-             evidence reduction) with a Pallas fast path
-  engine     JunctionTreeEngine — two-pass (collect/distribute) belief
-             propagation; continuous CLG leaves by analytic conditioning
-  brute      brute-force enumeration oracle for tests and tiny networks
+  graph         moralization, min-fill triangulation, junction-tree
+                construction with running-intersection verification; strong
+                triangulation + strong-root directed trees for CLG networks
+                with continuous-continuous edges (static Python over DAG)
+  factors       batched log-space discrete factor algebra (product,
+                marginalize, evidence reduction) with a Pallas fast path
+  cg_potentials batched conditional-Gaussian potential algebra — canonical
+                (g, h, K) and moment (p, mu, Sigma) forms with combine /
+                strong-marginalize / weak-marginalize (moment matching) ops
+  engine        JunctionTreeEngine — two-pass (collect/distribute) belief
+                propagation; discrete pipeline for mixture-style networks,
+                Lauritzen's strong junction tree for the full CLG class
+                (unobserved continuous internal nodes included)
+  brute         brute-force enumeration oracle for tests and tiny networks
+                (full CLG: per-configuration joint Gaussians)
 """
 
-from repro.infer_exact.brute import brute_posterior, enumerate_log_joint
+from repro.infer_exact.brute import (brute_posterior,
+                                     brute_posterior_mean_var,
+                                     enumerate_log_joint)
+from repro.infer_exact.cg_potentials import CGPotential, MomentPotential
 from repro.infer_exact.engine import JunctionTreeEngine
 from repro.infer_exact.factors import Factor
-from repro.infer_exact.graph import JunctionTree, compile_junction_tree
+from repro.infer_exact.graph import (JunctionTree, compile_junction_tree,
+                                     compile_strong_junction_tree)
 
 __all__ = [
     "JunctionTreeEngine",
     "JunctionTree",
     "compile_junction_tree",
+    "compile_strong_junction_tree",
     "Factor",
+    "CGPotential",
+    "MomentPotential",
     "brute_posterior",
+    "brute_posterior_mean_var",
     "enumerate_log_joint",
 ]

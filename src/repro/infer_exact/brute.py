@@ -1,19 +1,76 @@
 """Brute-force enumeration oracle for exact inference on tiny networks.
 
 Independent of the factor algebra and junction tree: enumerates every joint
-discrete configuration and scores it with ``BayesianNetwork._node_logp``
-(the same density code the samplers use), so it cross-checks the whole
-``infer_exact`` stack, not just the message passing.
+discrete configuration and, per configuration, composes the EXACT joint
+Gaussian over the continuous variables (the linear-Gaussian system
+``x = A x + b + e`` solved in closed form), so it covers the full CLG class
+— including unobserved continuous *internal* nodes with observed continuous
+descendants, the case the strong junction tree exists for.  Discrete-only
+scoring still goes through ``BayesianNetwork._node_logp`` (the same density
+code the samplers use), so this cross-checks the whole ``infer_exact``
+stack, not just the message passing.
 """
 
 from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
 
+import numpy as np
 import jax.numpy as jnp
 import jax.scipy.special as jsp
+import jax.scipy.stats as jst
 
 from repro.core.dag import BayesianNetwork, Variable
+
+
+def _discrete_grid(bn: BayesianNetwork):
+    dvars = [v for v in bn.order if v.is_discrete]
+    names = tuple(v.name for v in dvars)
+    cards = tuple(v.card for v in dvars)
+    grids = jnp.meshgrid(*[jnp.arange(c) for c in cards], indexing="ij")
+    asg = {v.name: g.reshape(-1) for v, g in zip(dvars, grids)}
+    n_cfg = asg[names[0]].shape[0] if names else 1
+    return names, cards, asg, n_cfg
+
+
+def _cont_joint(bn: BayesianNetwork, asg: Dict[str, jnp.ndarray],
+                n_cfg: int) -> Tuple[Tuple[str, ...], jnp.ndarray,
+                                     jnp.ndarray]:
+    """Per-configuration joint Gaussian over ALL continuous variables.
+
+    The CLG system is ``x = A(d) x + b(d) + e``, ``e ~ N(0, diag(s2(d)))``
+    with A strictly lower-triangular in topological order, so
+    ``mean = (I - A)^-1 b`` and ``cov = (I - A)^-1 diag(s2) (I - A)^-T``.
+    Returns (names, mean [n_cfg, C], cov [n_cfg, C, C]).
+    """
+    cvars = [v for v in bn.order if not v.is_discrete]
+    names = tuple(v.name for v in cvars)
+    C = len(cvars)
+    idx = {n: i for i, n in enumerate(names)}
+    A = jnp.zeros((n_cfg, C, C))
+    b = jnp.zeros((n_cfg, C))
+    s2 = jnp.zeros((n_cfg, C))
+    for v in cvars:
+        i = idx[v.name]
+        parents = bn.dag.get_parents(v)
+        dpa = [p for p in parents if p.is_discrete]
+        cpa = [p for p in parents if not p.is_discrete]
+        didx = tuple(asg[p.name].astype(jnp.int32) for p in dpa)
+        cpd = bn.cpds[v.name]
+        alpha = jnp.broadcast_to(jnp.asarray(cpd.alpha)[didx], (n_cfg,))
+        sig = jnp.broadcast_to(jnp.asarray(cpd.sigma2)[didx], (n_cfg,))
+        b = b.at[:, i].set(alpha)
+        s2 = s2.at[:, i].set(sig)
+        if cpa:
+            beta = jnp.broadcast_to(jnp.asarray(cpd.beta)[didx],
+                                    (n_cfg, len(cpa)))
+            for ci, p in enumerate(cpa):
+                A = A.at[:, i, idx[p.name]].set(beta[:, ci])
+    I_A = jnp.broadcast_to(jnp.eye(C), (n_cfg, C, C)) - A
+    mean = jnp.linalg.solve(I_A, b[..., None])[..., 0]
+    M = jnp.linalg.inv(I_A)
+    cov = M @ (s2[..., None] * jnp.swapaxes(M, -1, -2))
+    return names, mean, cov
 
 
 def enumerate_log_joint(
@@ -23,35 +80,29 @@ def enumerate_log_joint(
     """Unnormalized log p(x_discrete, e) over the full discrete grid.
 
     Returns (names, cards, table [*cards]).  Observed continuous nodes
-    contribute their CLG likelihood; unobserved continuous nodes integrate
-    to one (their continuous parents, if any, must be observed).
+    contribute the density of the per-configuration joint-Gaussian marginal
+    over the observed set; unobserved continuous nodes (internal or leaf)
+    integrate out exactly.
     """
-    evidence = {k: jnp.asarray(v) for k, v in (evidence or {}).items()}
-    dvars = [v for v in bn.order if v.is_discrete]
-    names = tuple(v.name for v in dvars)
-    cards = tuple(v.card for v in dvars)
-    grids = jnp.meshgrid(*[jnp.arange(c) for c in cards], indexing="ij")
-    asg: Dict[str, jnp.ndarray] = {
-        v.name: g.reshape(-1) for v, g in zip(dvars, grids)}
-    n_cfg = asg[names[0]].shape[0] if names else 1
-
+    evidence = {k: jnp.asarray(v, jnp.float32) for k, v
+                in (evidence or {}).items()}
+    names, cards, asg, n_cfg = _discrete_grid(bn)
     total = jnp.zeros(n_cfg)
     for v in bn.order:
         if not v.is_discrete:
-            if v.name not in evidence:
-                continue  # integrates to 1
-            for p in bn.dag.get_parents(v):
-                if not p.is_discrete and p.name not in evidence:
-                    raise NotImplementedError(
-                        f"unobserved continuous parent {p.name!r} of "
-                        f"observed {v.name!r}")
-            asg[v.name] = jnp.broadcast_to(evidence[v.name], (n_cfg,))
-            total = total + bn._node_logp(v, asg)
-        else:
-            total = total + bn._node_logp(v, asg)
-            if v.name in evidence:
-                hit = asg[v.name] == evidence[v.name].astype(jnp.int32)
-                total = jnp.where(hit, total, -jnp.inf)
+            continue
+        total = total + bn._node_logp(v, asg)
+        if v.name in evidence:
+            hit = asg[v.name] == evidence[v.name].astype(jnp.int32)
+            total = jnp.where(hit, total, -jnp.inf)
+    cnames = [v.name for v in bn.order
+              if not v.is_discrete and v.name in evidence]
+    if cnames:
+        all_names, mean, cov = _cont_joint(bn, asg, n_cfg)
+        oi = np.asarray([all_names.index(n) for n in cnames], np.int32)
+        x = jnp.stack([evidence[n].reshape(()) for n in cnames])
+        total = total + jst.multivariate_normal.logpdf(
+            x, mean[:, oi], cov[:, oi[:, None], oi[None, :]])
     return names, cards, total.reshape(cards)
 
 
@@ -74,3 +125,43 @@ def brute_log_evidence(
     """log p(e) by full enumeration."""
     _, _, table = enumerate_log_joint(bn, evidence)
     return jsp.logsumexp(table)
+
+
+def brute_posterior_mean_var(
+    bn: BayesianNetwork,
+    var: Variable,
+    evidence: Optional[Dict[str, float]] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact posterior mean and variance of an unobserved continuous node.
+
+    Per discrete configuration, conditions the joint Gaussian on the
+    observed continuous values, then mixes the conditional moments with the
+    configuration posterior — the ground truth the strong junction tree's
+    weak marginals must reproduce exactly.
+    """
+    evidence = {k: jnp.asarray(v, jnp.float32) for k, v
+                in (evidence or {}).items()}
+    name = var.name if isinstance(var, Variable) else str(var)
+    if name in evidence:
+        raise ValueError(f"{name!r} is observed")
+    _, _, table = enumerate_log_joint(bn, evidence)
+    logw = table.reshape(-1)
+    w = jnp.exp(logw - jsp.logsumexp(logw))
+    _, _, asg, n_cfg = _discrete_grid(bn)
+    all_names, mean, cov = _cont_joint(bn, asg, n_cfg)
+    vi = all_names.index(name)
+    onames = [n for n in all_names if n in evidence]
+    if onames:
+        oi = np.asarray([all_names.index(n) for n in onames], np.int32)
+        x = jnp.stack([evidence[n].reshape(()) for n in onames])
+        coo = cov[:, oi[:, None], oi[None, :]]
+        cvo = cov[:, vi, oi]                             # [n_cfg, o]
+        sol = jnp.linalg.solve(coo, (x - mean[:, oi])[..., None])[..., 0]
+        mu_c = mean[:, vi] + (cvo * sol).sum(-1)
+        gain = jnp.linalg.solve(coo, cvo[..., None])[..., 0]
+        s2_c = cov[:, vi, vi] - (cvo * gain).sum(-1)
+    else:
+        mu_c, s2_c = mean[:, vi], cov[:, vi, vi]
+    m = (w * mu_c).sum()
+    second = (w * (s2_c + mu_c ** 2)).sum()
+    return m, second - m ** 2

@@ -1,0 +1,446 @@
+"""Batched conditional-Gaussian (CG) potential algebra — the strong
+junction tree's factor layer (Lauritzen 1992).
+
+A CG potential has a *discrete* scope (named variables with cardinalities)
+and a *continuous* scope (named heads).  Two dual representations:
+
+* :class:`CGPotential` — **canonical** characteristics ``(g, h, K)``:
+  ``phi(d, x) = exp(g(d) + h(d)^T x - x^T K(d) x / 2)``.  Closed under
+  combination (add), division (subtract), continuous-evidence reduction and
+  EXACT integration of continuous variables — everything the collect pass
+  toward the strong root needs.  Crucially it represents CLG *conditionals*
+  ``p(x | d, z)`` (K merely PSD), which moment form cannot.
+
+* :class:`MomentPotential` — **moment** characteristics ``(p, mu, Sigma)``
+  per discrete configuration: the weight table (log p), the mean vector and
+  the covariance.  Marginalizing continuous variables is projection;
+  marginalizing discrete variables is the *weak marginal* — the moment-
+  matched single Gaussian per remaining configuration, which preserves the
+  mixture's first and second moments exactly (Lauritzen's theorem: after a
+  strong collect and a weak distribute, every clique holds the true weak
+  marginal of the posterior, so queried means/variances are exact).
+
+All tables carry a leading evidence-batch axis ``B``: one slice per
+evidence instance, so the whole strong junction tree propagates B queries
+in one jitted device call.  Scopes/cards are static Python; tables are jnp.
+
+The moment-matching hot loop can dispatch to the Pallas kernel
+``repro.kernels.factor_ops.cg_weak_marg`` (oracle:
+``repro.kernels.ref.cg_weak_marg_ref``) via ``use_pallas=True``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+import jax.scipy.special as jsp
+
+LOG_2PI = math.log(2.0 * math.pi)
+NEG_INF = float("-inf")
+
+
+class CGPotential(NamedTuple):
+    """Canonical-form CG potential.  Shapes (B = evidence batch):
+
+    g: [B, *cards]; h: [B, *cards, n]; K: [B, *cards, n, n], n = |cscope|.
+    """
+
+    dscope: Tuple[str, ...]
+    cards: Tuple[int, ...]
+    cscope: Tuple[str, ...]
+    g: jnp.ndarray
+    h: jnp.ndarray
+    K: jnp.ndarray
+
+
+class MomentPotential(NamedTuple):
+    """Moment-form CG potential: logp [B, *cards]; mu [B, *cards, n];
+    sigma [B, *cards, n, n]."""
+
+    dscope: Tuple[str, ...]
+    cards: Tuple[int, ...]
+    cscope: Tuple[str, ...]
+    logp: jnp.ndarray
+    mu: jnp.ndarray
+    sigma: jnp.ndarray
+
+
+# -- constructors -------------------------------------------------------------
+
+
+def zeros(dscope: Tuple[str, ...], cards: Tuple[int, ...],
+          cscope: Tuple[str, ...], B: int) -> CGPotential:
+    """Multiplicative-identity potential (g = 0, no Gaussian info)."""
+    n = len(cscope)
+    return CGPotential(dscope, cards, cscope,
+                       jnp.zeros((B,) + cards),
+                       jnp.zeros((B,) + cards + (n,)),
+                       jnp.zeros((B,) + cards + (n, n)))
+
+
+def from_discrete_table(dscope: Tuple[str, ...], cards: Tuple[int, ...],
+                        logp: jnp.ndarray) -> CGPotential:
+    """Purely discrete potential from a log table [*cards] (B=1 slice)."""
+    return CGPotential(dscope, cards, (),
+                       logp[None], jnp.zeros((1,) + cards + (0,)),
+                       jnp.zeros((1,) + cards + (0, 0)))
+
+
+def from_clg(alpha: jnp.ndarray, beta: jnp.ndarray, sigma2: jnp.ndarray,
+             dscope: Tuple[str, ...], cards: Tuple[int, ...],
+             cscope: Tuple[str, ...]) -> CGPotential:
+    """Canonical form of a CLG CPD ``N(x; alpha(d) + beta(d)^T z, sigma2(d))``.
+
+    ``cscope`` = (x, *z): the child variable first, then its continuous
+    parents.  alpha/sigma2: [*cards]; beta: [*cards, C].
+    """
+    alpha = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), cards)
+    sigma2 = jnp.broadcast_to(jnp.asarray(sigma2, jnp.float32), cards)
+    C = len(cscope) - 1
+    beta = jnp.broadcast_to(jnp.asarray(beta, jnp.float32), cards + (C,))
+    prec = 1.0 / sigma2
+    # w^T [x, z] = x - beta^T z;  exponent = -(w^T u - alpha)^2 / (2 s2) + c
+    w = jnp.concatenate([jnp.ones(cards + (1,)), -beta], axis=-1)
+    K = prec[..., None, None] * (w[..., :, None] * w[..., None, :])
+    h = (alpha * prec)[..., None] * w
+    g = -0.5 * (alpha ** 2 * prec + jnp.log(2.0 * jnp.pi * sigma2))
+    return CGPotential(dscope, cards, cscope, g[None], h[None], K[None])
+
+
+# -- scope plumbing -----------------------------------------------------------
+
+
+def _expand_discrete(t: jnp.ndarray, old: Tuple[str, ...],
+                     new: Tuple[str, ...], new_cards: Tuple[int, ...],
+                     trailing: int) -> jnp.ndarray:
+    """Broadcast a [B, *old_cards, *trail] table onto the discrete superset
+    ``new`` (old ⊆ new), keeping ``trailing`` minor axes in place."""
+    order = sorted(range(len(old)), key=lambda i: new.index(old[i]))
+    nt = t.ndim - trailing
+    perm = ((0,) + tuple(1 + i for i in order)
+            + tuple(range(nt, t.ndim)))
+    t = jnp.transpose(t, perm)
+    for axis, v in enumerate(new):
+        if v not in old:
+            t = jnp.expand_dims(t, 1 + axis)
+    target = (t.shape[0],) + tuple(new_cards) + t.shape[1 + len(new_cards):]
+    return jnp.broadcast_to(t, target)
+
+
+def _extend(p: CGPotential, dscope: Tuple[str, ...], cards: Tuple[int, ...],
+            cscope: Tuple[str, ...]) -> CGPotential:
+    """Embed ``p`` into the superset scopes (zero-pad the Gaussian part)."""
+    g = _expand_discrete(p.g, p.dscope, dscope, cards, 0)
+    n_new = len(cscope)
+    cols = np.asarray([cscope.index(v) for v in p.cscope], np.int32)
+    h_old = _expand_discrete(p.h, p.dscope, dscope, cards, 1)
+    K_old = _expand_discrete(p.K, p.dscope, dscope, cards, 2)
+    h = jnp.zeros(g.shape + (n_new,))
+    K = jnp.zeros(g.shape + (n_new, n_new))
+    if len(cols):
+        h = h.at[..., cols].set(h_old)
+        K = K.at[..., cols[:, None], cols[None, :]].set(K_old)
+    return CGPotential(dscope, cards, cscope, g, h, K)
+
+
+def _union_scopes(pots: Sequence[CGPotential]
+                  ) -> Tuple[Tuple[str, ...], Tuple[int, ...],
+                             Tuple[str, ...]]:
+    card_of: Dict[str, int] = {}
+    cvars: list = []
+    for p in pots:
+        for v, c in zip(p.dscope, p.cards):
+            if v in card_of:
+                if card_of[v] != c:
+                    raise ValueError(f"cardinality clash for {v}")
+            else:
+                card_of[v] = c
+        for v in p.cscope:
+            if v not in cvars:
+                cvars.append(v)
+    dscope = tuple(sorted(card_of))
+    return dscope, tuple(card_of[v] for v in dscope), tuple(sorted(cvars))
+
+
+def combine(*pots: CGPotential) -> CGPotential:
+    """Product of CG potentials: union scopes, add (g, h, K)."""
+    dscope, cards, cscope = _union_scopes(pots)
+    out = None
+    for p in pots:
+        q = _extend(p, dscope, cards, cscope)
+        out = q if out is None else CGPotential(
+            dscope, cards, cscope, out.g + q.g, out.h + q.h, out.K + q.K)
+    return out
+
+
+def divide(a: CGPotential, msg: CGPotential) -> CGPotential:
+    """``a / msg`` (canonical subtraction); msg scopes ⊆ a scopes.
+
+    Configurations dead in ``a`` (g = -inf) stay dead: -inf - (-inf) would
+    be NaN, and a divisor can only be -inf where the dividend already is
+    (the dividend belief carries strictly more evidence).
+    """
+    q = _extend(msg, a.dscope, a.cards, a.cscope)
+    dead = jnp.isneginf(a.g)
+    g = jnp.where(dead, NEG_INF, a.g - q.g)
+    h = jnp.where(dead[..., None], 0.0, a.h - q.h)
+    K = jnp.where(dead[..., None, None], 0.0, a.K - q.K)
+    return CGPotential(a.dscope, a.cards, a.cscope, g, h, K)
+
+
+# -- evidence -----------------------------------------------------------------
+
+
+def reduce_evidence(p: CGPotential, values: Dict[str, jnp.ndarray]
+                    ) -> CGPotential:
+    """Instantiate observed continuous heads to per-instance values [B].
+
+    Exact in canonical form; the observed axes disappear from the scope.
+    """
+    obs = tuple(v for v in p.cscope if v in values)
+    if not obs:
+        return p
+    keep = tuple(v for v in p.cscope if v not in obs)
+    oi = np.asarray([p.cscope.index(v) for v in obs], np.int32)
+    ki = np.asarray([p.cscope.index(v) for v in keep], np.int32)
+    nb = len(p.cards)
+    x = jnp.stack([jnp.asarray(values[v], jnp.float32).reshape(-1)
+                   for v in obs], axis=-1)                      # [B, do]
+    x = x.reshape((x.shape[0],) + (1,) * nb + (len(obs),))
+    h_o = p.h[..., oi]
+    K_oo = p.K[..., oi[:, None], oi[None, :]]
+    g = (p.g + (h_o * x).sum(-1)
+         - 0.5 * (x[..., :, None] * K_oo * x[..., None, :]).sum((-2, -1)))
+    if not keep:
+        B = max(g.shape[0], x.shape[0])
+        g = jnp.broadcast_to(g, (B,) + g.shape[1:])
+        return CGPotential(p.dscope, p.cards, (), g,
+                           jnp.zeros(g.shape + (0,)),
+                           jnp.zeros(g.shape + (0, 0)))
+    K_uo = p.K[..., ki[:, None], oi[None, :]]
+    h = p.h[..., ki] - (K_uo * x[..., None, :]).sum(-1)
+    K = p.K[..., ki[:, None], ki[None, :]]
+    B = max(g.shape[0], h.shape[0])
+    g = jnp.broadcast_to(g, (B,) + g.shape[1:])
+    h = jnp.broadcast_to(h, (B,) + h.shape[1:])
+    K = jnp.broadcast_to(K, (B,) + K.shape[1:])
+    return CGPotential(p.dscope, p.cards, keep, g, h, K)
+
+
+def add_discrete_log(p: CGPotential, dscope: Tuple[str, ...],
+                     cards: Tuple[int, ...], logp: jnp.ndarray) -> CGPotential:
+    """Multiply in a purely discrete (batched) log table [B, *cards]."""
+    q = CGPotential(dscope, cards, (), logp,
+                    jnp.zeros(logp.shape + (0,)),
+                    jnp.zeros(logp.shape + (0, 0)))
+    return combine(p, q)
+
+
+# -- marginalization ----------------------------------------------------------
+
+
+def marginalize_cont(p: CGPotential, drop: Sequence[str]) -> CGPotential:
+    """EXACT Gaussian integral over ``drop`` ⊆ cscope (strong operation).
+
+    Valid when K restricted to ``drop`` is positive definite — guaranteed
+    during collect by the strong elimination order (each continuous
+    variable is integrated at the topmost clique containing it, after its
+    CPD's precision has been absorbed).
+    """
+    drop = tuple(v for v in p.cscope if v in set(drop))
+    if not drop:
+        return p
+    keep = tuple(v for v in p.cscope if v not in drop)
+    di = np.asarray([p.cscope.index(v) for v in drop], np.int32)
+    ki = np.asarray([p.cscope.index(v) for v in keep], np.int32)
+    # dead configurations (g = -inf, from discrete-evidence indicators) can
+    # carry arbitrary (even singular) K blocks after distribute-pass
+    # division — mask them so slogdet/solve garbage cannot leak out as NaN
+    dead = jnp.isneginf(p.g)
+    K_ii = p.K[..., di[:, None], di[None, :]]
+    K_ii = jnp.where(dead[..., None, None], jnp.eye(len(drop)), K_ii)
+    h_i = p.h[..., di]
+    sign, logdet = jnp.linalg.slogdet(K_ii)
+    del sign                                     # PD by construction
+    sol_h = jnp.linalg.solve(K_ii, h_i[..., None])[..., 0]
+    g = (p.g + 0.5 * (len(drop) * LOG_2PI - logdet)
+         + 0.5 * (h_i * sol_h).sum(-1))
+    g = jnp.where(dead, NEG_INF, g)
+    if not keep:
+        return CGPotential(p.dscope, p.cards, (), g,
+                           jnp.zeros(g.shape + (0,)),
+                           jnp.zeros(g.shape + (0, 0)))
+    K_ji = p.K[..., ki[:, None], di[None, :]]
+    sol_K = jnp.linalg.solve(K_ii, jnp.swapaxes(K_ji, -1, -2))  # K_ii^-1 K_ij
+    h = p.h[..., ki] - (K_ji * sol_h[..., None, :]).sum(-1)
+    K = p.K[..., ki[:, None], ki[None, :]] - K_ji @ sol_K
+    K = 0.5 * (K + jnp.swapaxes(K, -1, -2))
+    h = jnp.where(dead[..., None], 0.0, h)
+    K = jnp.where(dead[..., None, None], jnp.eye(len(keep)), K)
+    return CGPotential(p.dscope, p.cards, keep, g, h, K)
+
+
+def marginalize_disc(p: CGPotential, drop: Sequence[str]) -> CGPotential:
+    """logsumexp out discrete variables — STRONG only when the continuous
+    scope is empty (guaranteed on the collect pass by strongness)."""
+    drop = tuple(v for v in p.dscope if v in set(drop))
+    if not drop:
+        return p
+    if p.cscope:
+        raise ValueError(
+            "strong discrete marginalization with live continuous scope "
+            f"{p.cscope} — use weak_marginalize")
+    keep = tuple(v for v in p.dscope if v not in drop)
+    axes = tuple(1 + p.dscope.index(v) for v in drop)
+    cards = tuple(p.cards[p.dscope.index(v)] for v in keep)
+    # surviving axes keep their relative order == sorted scope order
+    g = jsp.logsumexp(p.g, axis=axes)
+    return CGPotential(keep, cards, (), g,
+                       jnp.zeros(g.shape + (0,)), jnp.zeros(g.shape + (0, 0)))
+
+
+# -- moment form --------------------------------------------------------------
+
+
+def to_moment(p: CGPotential) -> MomentPotential:
+    """Canonical -> moment.  Needs K positive definite per configuration
+    (true for clique/sepset *beliefs*)."""
+    n = len(p.cscope)
+    if n == 0:
+        return MomentPotential(p.dscope, p.cards, (), p.g,
+                               p.h, p.K)
+    dead = jnp.isneginf(p.g)
+    K = jnp.where(dead[..., None, None], jnp.eye(n), p.K)
+    sign, logdet = jnp.linalg.slogdet(K)
+    del sign
+    mu = jnp.linalg.solve(K, p.h[..., None])[..., 0]
+    sigma = jnp.linalg.inv(K)
+    sigma = 0.5 * (sigma + jnp.swapaxes(sigma, -1, -2))
+    logp = p.g + 0.5 * (n * LOG_2PI - logdet + (p.h * mu).sum(-1))
+    logp = jnp.where(dead, NEG_INF, logp)
+    mu = jnp.where(dead[..., None], 0.0, mu)
+    sigma = jnp.where(dead[..., None, None], jnp.eye(n), sigma)
+    return MomentPotential(p.dscope, p.cards, p.cscope, logp, mu, sigma)
+
+
+def to_canonical(m: MomentPotential) -> CGPotential:
+    """Moment -> canonical.  Configurations with logp = -inf get an
+    identity covariance stand-in (their weight keeps them inert)."""
+    n = len(m.cscope)
+    if n == 0:
+        return CGPotential(m.dscope, m.cards, (), m.logp, m.mu, m.sigma)
+    dead = jnp.isneginf(m.logp)[..., None, None]
+    sigma = jnp.where(dead, jnp.eye(n), m.sigma)
+    K = jnp.linalg.inv(sigma)
+    K = 0.5 * (K + jnp.swapaxes(K, -1, -2))
+    h = (K @ m.mu[..., None])[..., 0]
+    sign, logdet_s = jnp.linalg.slogdet(sigma)
+    del sign
+    g = m.logp - 0.5 * (n * LOG_2PI + logdet_s + (h * m.mu).sum(-1))
+    g = jnp.where(jnp.isneginf(m.logp), NEG_INF, g)
+    return CGPotential(m.dscope, m.cards, m.cscope, g, h, K)
+
+
+def moment_marginalize_cont(m: MomentPotential, drop: Sequence[str]
+                            ) -> MomentPotential:
+    """Drop continuous heads in moment form (exact: Gaussian projection)."""
+    drop = tuple(v for v in m.cscope if v in set(drop))
+    if not drop:
+        return m
+    keep = tuple(v for v in m.cscope if v not in drop)
+    ki = np.asarray([m.cscope.index(v) for v in keep], np.int32)
+    return MomentPotential(m.dscope, m.cards, keep, m.logp,
+                           m.mu[..., ki],
+                           m.sigma[..., ki[:, None], ki[None, :]])
+
+
+def moment_match(logp: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray,
+                 axes: Tuple[int, ...]
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Collapse mixture axes to a single Gaussian with the same first and
+    second moments (the weak marginal).  -inf weights contribute nothing;
+    all-dead mixtures yield (logp=-inf, mu=0, sigma=I)."""
+    n = mu.shape[-1]
+    lse = jsp.logsumexp(logp, axis=axes, keepdims=True)
+    safe = jnp.where(jnp.isneginf(lse), 0.0, lse)
+    w = jnp.where(jnp.isneginf(logp), 0.0, jnp.exp(logp - safe))
+    mu_hat = (w[..., None] * mu).sum(axes)
+    second = (w[..., None, None]
+              * (sigma + mu[..., :, None] * mu[..., None, :])).sum(axes)
+    sigma_hat = second - mu_hat[..., :, None] * mu_hat[..., None, :]
+    logp_hat = lse.squeeze(axes)
+    dead = jnp.isneginf(logp_hat)
+    sigma_hat = jnp.where(dead[..., None, None], jnp.eye(n), sigma_hat)
+    mu_hat = jnp.where(dead[..., None], 0.0, mu_hat)
+    return logp_hat, mu_hat, sigma_hat
+
+
+def weak_marginalize(p: CGPotential, keep_disc: Sequence[str],
+                     keep_cont: Sequence[str], *,
+                     use_pallas: bool = False) -> CGPotential:
+    """Weak (moment-matched) marginal of a *belief* onto a sepset.
+
+    Continuous drops are exact projections; discrete drops moment-match.
+    Returns canonical form (ready for division / combination).
+    """
+    keep_d = set(keep_disc)
+    keep_c = set(keep_cont)
+    drop_d = tuple(v for v in p.dscope if v not in keep_d)
+    drop_c = tuple(v for v in p.cscope if v not in keep_c)
+    if not drop_d:
+        out = marginalize_cont(p, drop_c) if drop_c else p
+        return out
+    if not p.cscope:
+        return marginalize_disc(p, drop_d)
+    m = to_moment(p)
+    m = moment_marginalize_cont(m, drop_c)
+    if not m.cscope:
+        can = CGPotential(m.dscope, m.cards, (), m.logp, m.mu, m.sigma)
+        return marginalize_disc(can, drop_d)
+    # permute kept discrete axes ahead of dropped ones, then moment-match
+    keep_ds = tuple(v for v in m.dscope if v in keep_d)
+    perm_scope = keep_ds + drop_d
+    perm = (0,) + tuple(1 + m.dscope.index(v) for v in perm_scope)
+    nb = 1 + len(m.dscope)
+    logp = jnp.transpose(m.logp, perm)
+    mu = jnp.transpose(m.mu, perm + (nb,))
+    sigma = jnp.transpose(m.sigma, perm + (nb, nb + 1))
+    axes = tuple(range(1 + len(keep_ds), 1 + len(m.dscope)))
+    n = len(m.cscope)
+    kcards = tuple(m.cards[m.dscope.index(v)] for v in keep_ds)
+    if use_pallas and axes:
+        from repro.kernels import ops
+
+        B = logp.shape[0]
+        M = int(np.prod(kcards)) if kcards else 1
+        N = int(np.prod(logp.shape[1 + len(kcards):]))
+        lp, muh, sigh = ops.cg_weak_marg(
+            logp.reshape(B, M, N), mu.reshape(B, M, N, n),
+            sigma.reshape(B, M, N, n, n))
+        lp = lp.reshape((B,) + kcards)
+        muh = muh.reshape((B,) + kcards + (n,))
+        sigh = sigh.reshape((B,) + kcards + (n, n))
+    else:
+        lp, muh, sigh = moment_match(logp, mu, sigma, axes)
+    out = MomentPotential(keep_ds, kcards, m.cscope, lp, muh, sigh)
+    return to_canonical(out)
+
+
+# -- queries ------------------------------------------------------------------
+
+
+def discrete_table(p: CGPotential) -> jnp.ndarray:
+    """Exact discrete log-marginal table [B, *cards] of a belief: integrate
+    every continuous head, keep the full discrete scope."""
+    out = marginalize_cont(p, p.cscope)
+    return out.g
+
+
+def log_norm(p: CGPotential) -> jnp.ndarray:
+    """log of the potential's total mass: integrate continuous, sum
+    discrete -> [B]."""
+    out = marginalize_cont(p, p.cscope)
+    return jsp.logsumexp(out.g, axis=tuple(range(1, out.g.ndim)))

@@ -10,18 +10,27 @@ with ``[B]``-shaped value arrays propagates B query instances through the
 tree in ONE jitted device call — the serving path batches requests that
 share an evidence *schema* (set of observed names) onto this axis.
 
-Continuous CLG nodes are handled by analytic conditioning on their discrete
-parents:
+Two compilation pipelines, chosen statically from the network:
 
-  * observed   — its likelihood lambda(d_pa) = N(x; alpha(d)+beta(d)^T c,
-                 sigma2(d)) enters the clique holding its (married) discrete
-                 parents; continuous co-parents must be observed too.
-  * unobserved — contributes nothing during propagation (integrates to 1);
-                 queried posteriors are the analytic mixture of its per-
-                 configuration Gaussians under the joint of its discrete
-                 parents.  Unobserved continuous *internal* nodes with
-                 observed continuous children need the strong junction tree
-                 (ROADMAP open item) and raise ``NotImplementedError``.
+  * **discrete pipeline** — networks whose continuous nodes have no
+    continuous parents (mixtures, naive Bayes, ...).  Continuous CLG nodes
+    are handled by analytic conditioning on their discrete parents: an
+    observed node's likelihood lambda(d_pa) enters the clique holding its
+    (married) discrete parents; an unobserved one integrates to 1 during
+    propagation and is queried as the analytic mixture of its per-
+    configuration Gaussians.  Tables are plain discrete factors
+    (``factors.py``) with Pallas fast paths.
+
+  * **strong pipeline** (Lauritzen 1992) — any network with a continuous-
+    continuous edge, including unobserved continuous INTERNAL nodes with
+    observed continuous descendants (FA/PPCA-style structures).  The clique
+    tree is strongly triangulated and rooted (``graph.py``); potentials are
+    conditional-Gaussian ``(g, h, K)`` / ``(p, mu, Sigma)`` tables
+    (``cg_potentials.py``).  The collect pass toward the strong root uses
+    EXACT strong marginalization (Gaussian integrals, then table sums); the
+    distribute pass uses weak (moment-matched) marginals, so every clique
+    ends up holding the true weak marginal of the posterior — queried
+    discrete marginals, means and variances are exact.
 """
 
 from __future__ import annotations
@@ -33,8 +42,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dag import BayesianNetwork, Variable
+from repro.infer_exact import cg_potentials as CG
 from repro.infer_exact import factors as F
-from repro.infer_exact.graph import JunctionTree, compile_junction_tree
+from repro.infer_exact.graph import (JunctionTree, compile_junction_tree,
+                                     compile_strong_junction_tree)
+
+
+def _needs_strong(bn: BayesianNetwork) -> bool:
+    """Strong pipeline iff some continuous node has a continuous parent."""
+    for v in bn.order:
+        if v.is_discrete:
+            continue
+        if any(not p.is_discrete for p in bn.dag.get_parents(v)):
+            return True
+    return False
 
 
 class JunctionTreeEngine:
@@ -46,7 +67,7 @@ class JunctionTreeEngine:
         self.bn: Optional[BayesianNetwork] = None
         self.jt: Optional[JunctionTree] = None
         self.evidence: Dict[str, jnp.ndarray] = {}
-        self._beliefs: Optional[Tuple[jnp.ndarray, ...]] = None
+        self._beliefs: Optional[Tuple] = None
         self._logz: Optional[jnp.ndarray] = None
         self._batched = False
         self._compiled: Dict[Tuple[str, ...], object] = {}
@@ -57,32 +78,41 @@ class JunctionTreeEngine:
 
     def set_model(self, bn: BayesianNetwork) -> None:
         self.bn = bn
-        self.jt = compile_junction_tree(bn)
+        self.strong = _needs_strong(bn)
+        self.jt = (compile_strong_junction_tree(bn) if self.strong
+                   else compile_junction_tree(bn))
         self._card = {v.name: v.card for v in bn.order if v.is_discrete}
-        # canonical (sorted) scope per clique — the jitted propagation's
+        self._cont = {v.name for v in bn.order if not v.is_discrete}
+        # canonical (sorted) scopes per clique — the jitted propagation's
         # static output layout
         self._scopes: Tuple[Tuple[str, ...], ...] = tuple(
-            tuple(sorted(c)) for c in self.jt.cliques)
+            tuple(sorted(c - self._cont)) for c in self.jt.cliques)
+        self._cscopes: Tuple[Tuple[str, ...], ...] = tuple(
+            tuple(sorted(c & self._cont)) for c in self.jt.cliques)
         # home clique of every CPD / lambda factor
         self._home: Dict[str, Optional[int]] = {}
         for v in bn.order:
+            if self.strong:
+                fam = {v.name} | {p.name for p in bn.dag.get_parents(v)}
+                self._home[v.name] = self.jt.smallest_containing(fam)
+                continue
             dpa = {p.name for p in bn.dag.get_parents(v) if p.is_discrete}
             if v.is_discrete:
                 self._home[v.name] = self.jt.smallest_containing({v.name} | dpa)
             else:
                 self._home[v.name] = (
                     self.jt.smallest_containing(dpa) if dpa else 0)
-        # message schedule: DFS from clique 0, children -> root then back
+        # message schedule: DFS from the root, children -> root then back
+        root = self.jt.root
         adj: Dict[int, List[Tuple[int, Tuple[str, ...]]]] = {
             i: [] for i in range(len(self.jt.cliques))}
         for (a, b), s in zip(self.jt.edges, self.jt.sepsets):
             sep = tuple(sorted(s))
             adj[a].append((b, sep))
             adj[b].append((a, sep))
-        schedule: List[Tuple[int, int, Tuple[str, ...]]] = []  # (child, parent)
-        seen = {0}
+        seen = {root}
         stack: List[Tuple[int, int, Tuple[str, ...]]] = [
-            (c, 0, s) for c, s in adj[0]]
+            (c, root, s) for c, s in adj[root]]
         pre: List[Tuple[int, int, Tuple[str, ...]]] = []
         while stack:
             u, p, s = stack.pop()
@@ -93,8 +123,7 @@ class JunctionTreeEngine:
             for w, sw in adj[u]:
                 if w not in seen:
                     stack.append((w, u, sw))
-        schedule = list(reversed(pre))           # post-order: leaves first
-        self._collect = tuple(schedule)          # (child, parent, sepset)
+        self._collect = tuple(reversed(pre))     # post-order: leaves first
         self._distribute = tuple(pre)            # root outward
         self._compiled = {}
         self._beliefs = None
@@ -140,9 +169,13 @@ class JunctionTreeEngine:
         vals = tuple(jnp.broadcast_to(v, (B,)) for v in vals)
         fn = self._compiled.get(names)
         if fn is None:
-            fn = jax.jit(partial(self._propagate, names))
+            prop = self._propagate_strong if self.strong else self._propagate
+            fn = jax.jit(partial(prop, names))
             self._compiled[names] = fn
+        self._run_names = names
         self._beliefs, self._logz = fn(vals)
+
+    # ======================= discrete pipeline ==============================
 
     def _cpd_factor(self, v: Variable) -> F.Factor:
         """log CPD table of a discrete node as a Factor (parents-major)."""
@@ -156,25 +189,14 @@ class JunctionTreeEngine:
     def _lambda_factor(self, v: Variable, ev: Dict[str, jnp.ndarray],
                        B: int) -> F.Factor:
         """Evidence likelihood of an observed continuous node over its
-        discrete parents (analytic CLG conditioning)."""
+        discrete parents (analytic CLG conditioning).  Continuous parents
+        cannot occur here — those networks compile the strong pipeline."""
         parents = self.bn.dag.get_parents(v)
         dpa = [p for p in parents if p.is_discrete]
-        cpa = [p for p in parents if not p.is_discrete]
-        for p in cpa:
-            if p.name not in ev:
-                raise NotImplementedError(
-                    f"unobserved continuous parent {p.name!r} of observed "
-                    f"{v.name!r}: needs the strong junction tree "
-                    "(ROADMAP open item)")
         cpd = self.bn.cpds[v.name]
         alpha = jnp.asarray(cpd.alpha)                 # [*dcards]
         sigma2 = jnp.asarray(cpd.sigma2)
         mean = jnp.broadcast_to(alpha, (B,) + alpha.shape)
-        if cpa:
-            beta = jnp.asarray(cpd.beta)               # [*dcards, C]
-            for ci, p in enumerate(cpa):
-                val = ev[p.name].reshape((B,) + (1,) * alpha.ndim)
-                mean = mean + beta[..., ci] * val
         x = ev[v.name].reshape((B,) + (1,) * alpha.ndim)
         ll = -0.5 * (jnp.log(2 * jnp.pi * sigma2) + (x - mean) ** 2 / sigma2)
         scope = tuple(p.name for p in dpa)
@@ -235,10 +257,124 @@ class JunctionTreeEngine:
                     f = F.absorb(f, m, use_pallas=up)
             table = F._permute(f, scope)
             beliefs.append(table)
-            if i == 0:
+            if i == self.jt.root:
                 logz = F.marginalize(F.Factor(scope, f.cards, table), (),
                                      use_pallas=False).logp
         return tuple(beliefs), logz
+
+    # ======================= strong pipeline ================================
+
+    def _run_cscopes(self, names: Tuple[str, ...]
+                     ) -> Tuple[Tuple[str, ...], ...]:
+        """Per-clique continuous scope once observed heads are instantiated
+        (static per evidence schema)."""
+        obs = set(names)
+        return tuple(tuple(v for v in cs if v not in obs)
+                     for cs in self._cscopes)
+
+    def _strong_potentials(self, names: Tuple[str, ...],
+                           values: Tuple[jnp.ndarray, ...]
+                           ) -> List[CG.CGPotential]:
+        B = values[0].shape[0] if values else 1
+        ev = dict(zip(names, values))
+        cscopes = self._run_cscopes(names)
+        pots = [CG.zeros(scope, tuple(self._card[n] for n in scope), cs, B)
+                for scope, cs in zip(self._scopes, cscopes)]
+
+        def add(ci: int, q: CG.CGPotential) -> None:
+            pots[ci] = CG.combine(pots[ci], q)
+
+        for v in self.bn.order:
+            parents = self.bn.dag.get_parents(v)
+            raw_dpa = tuple(p.name for p in parents if p.is_discrete)
+            dpa = tuple(sorted(raw_dpa))
+            dcards = tuple(self._card[n] for n in dpa)
+            cpd = self.bn.cpds[v.name]
+            if v.is_discrete:
+                # CPD tables are laid out in RAW get_parents order; label the
+                # factor accordingly and let _permute reorder to sorted scope
+                raw_cards = tuple(self._card[n] for n in raw_dpa)
+                f = F.Factor(raw_dpa + (v.name,), raw_cards + (v.card,),
+                             jnp.log(jnp.asarray(cpd.table)))
+                scope = tuple(sorted(f.scope))
+                q = CG.from_discrete_table(
+                    scope, tuple(self._card[n] for n in scope),
+                    F._permute(f, scope))
+                add(self._home[v.name], q)
+                if v.name in ev:
+                    ind = F.indicator(v.name, v.card, ev[v.name])
+                    ci = self.jt.smallest_containing({v.name})
+                    pots[ci] = CG.add_discrete_log(
+                        pots[ci], (v.name,), (v.card,), ind.logp)
+                continue
+            # continuous CLG node: canonical CPD over (v, *cont parents),
+            # permuted so discrete-parent axes follow the sorted convention
+            cpa = [p.name for p in parents if not p.is_discrete]
+            alpha = jnp.asarray(cpd.alpha, jnp.float32)
+            beta = jnp.asarray(cpd.beta, jnp.float32)
+            sigma2 = jnp.asarray(cpd.sigma2, jnp.float32)
+            if raw_dpa != dpa:                   # permute table axes
+                perm = tuple(raw_dpa.index(n) for n in dpa)
+                alpha = jnp.transpose(alpha, perm)
+                sigma2 = jnp.transpose(sigma2, perm)
+                beta = jnp.transpose(beta, perm + (len(raw_dpa),))
+            q = CG.from_clg(alpha, beta, sigma2, dpa, dcards,
+                            (v.name,) + tuple(cpa))
+            q = CG.reduce_evidence(q, {k: ev[k] for k in (v.name, *cpa)
+                                       if k in ev})
+            add(self._home[v.name], q)
+        return pots
+
+    def _propagate_strong(self, names: Tuple[str, ...],
+                          values: Tuple[jnp.ndarray, ...]):
+        pots = self._strong_potentials(names, values)
+        cscopes = self._run_cscopes(names)
+        up = self.use_pallas
+        root = self.jt.root
+        children: Dict[int, List[int]] = {}
+        for u, p, _ in self._collect:
+            children.setdefault(p, []).append(u)
+        nmsg: Dict[Tuple[int, int], CG.CGPotential] = {}
+        absorbed: List[CG.CGPotential] = list(pots)
+        # collect: leaves -> strong root, EXACT strong marginals: integrate
+        # the continuous residual, then sum the (now table-only) discrete one
+        for u, p, sep in self._collect:
+            f = absorbed[u]
+            for w in children.get(u, ()):
+                f = CG.combine(f, nmsg[(w, u)])
+            absorbed[u] = f
+            sep_c = tuple(v for v in cscopes[u] if v in set(sep))
+            sep_d = tuple(v for v in self._scopes[u] if v in set(sep))
+            m = CG.marginalize_cont(
+                f, tuple(v for v in f.cscope if v not in set(sep_c)))
+            m = CG.marginalize_disc(
+                m, tuple(v for v in m.dscope if v not in set(sep_d)))
+            nmsg[(u, p)] = m
+        beliefs: List[Optional[CG.CGPotential]] = [None] * len(pots)
+        f = absorbed[root]
+        for w in children.get(root, ()):
+            f = CG.combine(f, nmsg[(w, root)])
+        beliefs[root] = f
+        logz = CG.log_norm(f)
+        # distribute: root -> leaves, WEAK (moment-matched) marginals
+        for u, p, sep in self._distribute:
+            sep_set = set(sep)
+            sep_d = tuple(v for v in self._scopes[p] if v in sep_set)
+            sep_c = tuple(v for v in cscopes[p] if v in sep_set)
+            star = CG.weak_marginalize(beliefs[p], sep_d, sep_c,
+                                       use_pallas=up)
+            down = CG.divide(star, nmsg[(u, p)])
+            f = absorbed[u]
+            beliefs[u] = CG.combine(f, down)
+        flat = tuple((b.g, b.h, b.K) for b in beliefs)
+        return flat, logz
+
+    def _strong_belief(self, ci: int) -> CG.CGPotential:
+        g, h, K = self._beliefs[ci]
+        return CG.CGPotential(
+            self._scopes[ci],
+            tuple(self._card[n] for n in self._scopes[ci]),
+            self._run_cscopes(self._run_names)[ci], g, h, K)
 
     # -- queries -------------------------------------------------------------
 
@@ -247,11 +383,15 @@ class JunctionTreeEngine:
             raise RuntimeError("call run_inference() first")
 
     def _joint(self, names: Tuple[str, ...]) -> jnp.ndarray:
-        """Normalized joint log-posterior over ``names`` (one clique)."""
+        """Normalized joint log-posterior over discrete ``names``."""
         ci = self.jt.smallest_containing(set(names))
         scope = self._scopes[ci]
         cards = tuple(self._card[n] for n in scope)
-        f = F.Factor(scope, cards, self._beliefs[ci])
+        if self.strong:
+            table = CG.discrete_table(self._strong_belief(ci))
+        else:
+            table = self._beliefs[ci]
+        f = F.Factor(scope, cards, table)
         f = F.normalize(F.marginalize(f, names))
         return F._permute(f, names)
 
@@ -266,18 +406,15 @@ class JunctionTreeEngine:
 
     def posterior_mean_var(self, var: Variable
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Mixture mean/variance of an unobserved continuous CLG node."""
+        """Posterior mean/variance of an unobserved continuous node — the
+        exact moments of its posterior mixture."""
         self._require_run()
         if var.name in self.evidence:
             raise ValueError(f"{var.name!r} is observed")
+        if self.strong:
+            return self._strong_mean_var(var)
         parents = self.bn.dag.get_parents(var)
         dpa = [p for p in parents if p.is_discrete]
-        cpa = [p for p in parents if not p.is_discrete]
-        for p in cpa:
-            if p.name not in self.evidence:
-                raise NotImplementedError(
-                    f"unobserved continuous parent {p.name!r}: needs the "
-                    "strong junction tree (ROADMAP open item)")
         cpd = self.bn.cpds[var.name]
         alpha = jnp.asarray(cpd.alpha)
         sigma2 = jnp.asarray(cpd.sigma2)
@@ -287,17 +424,36 @@ class JunctionTreeEngine:
         else:
             w = jnp.ones((B,) + (1,) * alpha.ndim)
         mu = jnp.broadcast_to(alpha, (B,) + alpha.shape)
-        if cpa:
-            beta = jnp.asarray(cpd.beta)
-            for ci, p in enumerate(cpa):
-                val = jnp.broadcast_to(
-                    self.evidence[p.name].reshape(-1), (B,))
-                mu = mu + beta[..., ci] * val.reshape((B,) + (1,) * alpha.ndim)
         axes = tuple(range(1, mu.ndim))
         mean = (w * mu).sum(axes)
         second = (w * (sigma2 + mu ** 2)).sum(axes)
         return (self._maybe_squeeze(mean),
                 self._maybe_squeeze(second - mean ** 2))
+
+    def _strong_mean_var(self, var: Variable
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Exact mixture moments from the clique belief holding ``var``."""
+        cscopes = self._run_cscopes(self._run_names)
+        ci = None
+        for i, cs in enumerate(cscopes):
+            if var.name in cs:
+                if ci is None or len(cs) + len(self._scopes[i]) < (
+                        len(cscopes[ci]) + len(self._scopes[ci])):
+                    ci = i
+        if ci is None:
+            raise ValueError(f"{var.name!r} not in any clique "
+                             "(is it observed?)")
+        m = CG.to_moment(self._strong_belief(ci))
+        iv = m.cscope.index(var.name)
+        axes = tuple(range(1, m.logp.ndim))
+        # collapse the whole mixture onto the single head: one shared
+        # moment-matching implementation (same -inf/dead-config semantics
+        # as the distribute pass)
+        _, mu, sg = CG.moment_match(
+            m.logp, m.mu[..., iv:iv + 1],
+            m.sigma[..., iv:iv + 1, iv:iv + 1], axes)
+        return (self._maybe_squeeze(mu[..., 0]),
+                self._maybe_squeeze(sg[..., 0, 0]))
 
     def log_evidence(self) -> jnp.ndarray:
         """log p(e) — exact model evidence of the observed values."""

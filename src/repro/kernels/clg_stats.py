@@ -39,9 +39,15 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _resolve_interpret(interpret: Optional[bool]) -> bool:
     """Compiled on TPU (or forced via REPRO_PALLAS_COMPILE=1); interpret
-    elsewhere — CPU Pallas has no Mosaic lowering for these kernels."""
+    elsewhere — CPU Pallas has no Mosaic lowering for these kernels.
+    ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode everywhere (wins
+    over COMPILE): the CI parity leg runs the kernel suite once under each
+    policy so the TPU-compiled path cannot silently diverge from the
+    interpret semantics the CPU container tests."""
     if interpret is not None:
         return interpret
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return True
     if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
         return False
     return jax.default_backend() != "tpu"

@@ -15,7 +15,8 @@ import jax
 from repro.kernels.clg_stats import (_resolve_interpret,
                                      clg_disc_counts as _clg_disc,
                                      clg_suffstats as _clg)
-from repro.kernels.factor_ops import (evidence_select as _evsel,
+from repro.kernels.factor_ops import (cg_weak_marg as _cgweak,
+                                      evidence_select as _evsel,
                                       log_marginalize as _logmarg,
                                       log_product as _logprod)
 from repro.kernels.flash_attn import flash_attention as _flash
@@ -58,3 +59,8 @@ def log_marginalize(x, *, bm=256, bn=256):
 @partial(jax.jit, static_argnames=("bm",))
 def evidence_select(x, idx, *, bm=256):
     return _evsel(x, idx, bm=bm, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("bm",))
+def cg_weak_marg(logw, mu, sigma, *, bm=64):
+    return _cgweak(logw, mu, sigma, bm=bm, interpret=INTERPRET)

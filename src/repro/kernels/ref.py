@@ -54,3 +54,27 @@ def evidence_select_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """Oracle for kernels.factor_ops.evidence_select."""
     return jnp.take_along_axis(
         x, idx.astype(jnp.int32)[:, None, None], axis=-1)[..., 0]
+
+
+def cg_weak_marg_ref(logw: jnp.ndarray, mu: jnp.ndarray, sigma: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels.factor_ops.cg_weak_marg (moment-matched weak
+    marginal): collapse the N mixture axis of ``logw [B,M,N]``,
+    ``mu [B,M,N,n]``, ``sigma [B,M,N,n,n]`` to a single Gaussian per (B, M)
+    preserving total mass and the first two moments.  -inf weights are
+    inert; all-dead mixtures return (-inf, 0, I)."""
+    import jax.scipy.special as jsp
+
+    n = mu.shape[-1]
+    lse = jsp.logsumexp(logw, axis=-1, keepdims=True)
+    safe = jnp.where(jnp.isneginf(lse), 0.0, lse)
+    w = jnp.where(jnp.isneginf(logw), 0.0, jnp.exp(logw - safe))
+    mu_hat = (w[..., None] * mu).sum(-2)
+    second = (w[..., None, None]
+              * (sigma + mu[..., :, None] * mu[..., None, :])).sum(-3)
+    sigma_hat = second - mu_hat[..., :, None] * mu_hat[..., None, :]
+    logp = lse[..., 0]
+    dead = jnp.isneginf(logp)
+    mu_hat = jnp.where(dead[..., None], 0.0, mu_hat)
+    sigma_hat = jnp.where(dead[..., None, None], jnp.eye(n), sigma_hat)
+    return logp, mu_hat, sigma_hat

@@ -65,7 +65,29 @@ class Model:
 
         Repeated calls implement Bayesian updating (Eq. 3): the previous
         posterior becomes the prior for the new data.  Returns the ELBO.
+
+        A multi-batch ``DataStream`` (a source yielding several chunks)
+        routes through ``streaming``: equal-shape chunks are stacked and
+        replayed by ``stream_fit`` in ONE jitted ``lax.scan`` (drift test +
+        tempering resident on device); ragged chunk shapes fall back to the
+        per-batch ``stream_update`` loop.  Single-chunk streams, raw arrays
+        and ``Batch``es keep the one-shot VMP fit below.  Note the stacked
+        replay is whole-stream-resident by design (the scan consumes
+        [T, B, F] on device) — for streams larger than memory, drive
+        ``streaming.stream_update`` directly, one batch at a time.
         """
+        if (mesh is None and isinstance(data, DataStream)
+                and type(self).supervised_r is Model.supervised_r):
+            chunks = [(jnp.asarray(xc, jnp.float32), jnp.asarray(xd))
+                      for xc, xd in data.chunks()]
+            if len(chunks) > 1:
+                return self._update_model_stream(chunks, sweeps=sweeps,
+                                                 tol=tol)
+            if chunks:
+                # single chunk: reuse it instead of re-running the source
+                # (sources need not be restartable)
+                xc, xd = chunks[0]
+                data = Batch(xc, xd, jnp.ones(xc.shape[0], jnp.float32))
         batch = self._as_batch(data)
         prior = self._chained_prior
         r_fixed = self.supervised_r(batch)
@@ -95,6 +117,34 @@ class Model:
         self.posterior = post
         self._chained_prior = post      # Eq. 3: posterior -> next prior
         self.n_seen += int(batch.mask.sum())
+        return e
+
+    def _update_model_stream(self, chunks, *, sweeps: int, tol: float
+                             ) -> float:
+        """Streaming Bayesian updating over pre-chunked data (ROADMAP item:
+        ``stream_fit`` underneath ``update_model``)."""
+        from repro.core import streaming
+
+        state = streaming.stream_init(self._chained_prior, self.posterior)
+        stacked = len({(xc.shape, xd.shape) for xc, xd in chunks}) == 1
+        if stacked:
+            xcs = jnp.stack([xc for xc, _ in chunks])
+            xds = jnp.stack([xd for _, xd in chunks])
+            state, info = streaming.stream_fit(
+                self.cp, self.prior, state, xcs, xds,
+                sweeps=sweeps, tol=tol, backend=self.backend,
+                chunk=self.chunk)
+            e = float(info["elbo"][-1])
+        else:
+            for xc, xd in chunks:
+                state, info = streaming.stream_update(
+                    self.cp, self.prior, state, xc, xd,
+                    sweeps=sweeps, tol=tol, backend=self.backend,
+                    chunk=self.chunk)
+            e = float(info["elbo"])
+        self.posterior = state.post
+        self._chained_prior = state.post
+        self.n_seen += int(state.n_seen)
         return e
 
     # -- queries -----------------------------------------------------------------

@@ -194,11 +194,20 @@ def test_jt_regression_parent_conditioning():
     exact = np.array([l0, l1]) / (l0 + l1)
     np.testing.assert_allclose(np.asarray(eng.posterior_discrete(Z)), exact,
                                atol=1e-6)
-    # unobserved continuous parent of an observed node -> strong JT needed
+    # unobserved continuous parent of an observed node: the strong junction
+    # tree integrates X1 out exactly (this used to raise NotImplementedError)
     eng2 = JunctionTreeEngine(bn)
     eng2.set_evidence({"X2": 1.5})
-    with pytest.raises(NotImplementedError):
-        eng2.run_inference()
+    eng2.run_inference()
+    np.testing.assert_allclose(
+        np.asarray(eng2.posterior_discrete(Z)),
+        np.asarray(brute_posterior(bn, Z, {"X2": 1.5})), atol=1e-5)
+    m, v = eng2.posterior_mean_var(X1)
+    from repro.infer_exact import brute_posterior_mean_var
+
+    mb, vb = brute_posterior_mean_var(bn, X1, {"X2": 1.5})
+    np.testing.assert_allclose(float(m), float(mb), atol=1e-5)
+    np.testing.assert_allclose(float(v), float(vb), atol=1e-5)
 
 
 # -- batching: many evidence instances in one device call --------------------

@@ -1,11 +1,17 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps.
+
+The factor-algebra and CG kernels run through ``repro.kernels.ops`` so they
+follow the session's interpret policy: scripts/ci.sh runs this file once
+with ``REPRO_PALLAS_INTERPRET=1`` and once under the default policy, so a
+TPU runner exercises the compiled path against the same oracles the CPU
+container checks in interpret mode."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.clg_stats import clg_disc_counts, clg_suffstats
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
@@ -161,11 +167,9 @@ def _factor_table(key, shape, p_neg_inf=0.25):
     (3, 1, 1),
 ])
 def test_factor_log_product(B, M, N):
-    from repro.kernels.factor_ops import log_product
-
     a = _factor_table(KEYS[3], (B, M, N))
     b = jax.random.normal(KEYS[4], (B, N))
-    out = log_product(a, b, bm=64, interpret=True)
+    out = ops.log_product(a, b, bm=64)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.log_product_ref(a, b)),
                                atol=1e-6)
@@ -178,10 +182,8 @@ def test_factor_log_product(B, M, N):
     (3, 1, 1),
 ])
 def test_factor_log_marginalize(B, M, N):
-    from repro.kernels.factor_ops import log_marginalize
-
     x = _factor_table(KEYS[5], (B, M, N))
-    out = log_marginalize(x, bm=64, bn=64, interpret=True)
+    out = ops.log_marginalize(x, bm=64, bn=64)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.log_marginalize_ref(x)),
                                atol=1e-5)
@@ -189,20 +191,68 @@ def test_factor_log_marginalize(B, M, N):
 
 def test_factor_log_marginalize_all_neg_inf():
     """Fully impossible rows must stay -inf, not NaN."""
-    from repro.kernels.factor_ops import log_marginalize
-
     x = jnp.full((2, 4, 300), -jnp.inf)
-    out = np.asarray(log_marginalize(x, bn=64, interpret=True))
+    out = np.asarray(ops.log_marginalize(x, bn=64))
     assert np.all(np.isneginf(out))
 
 
 @pytest.mark.parametrize("B,M,N", [(1, 8, 8), (4, 300, 13), (2, 64, 700)])
 def test_factor_evidence_select(B, M, N):
-    from repro.kernels.factor_ops import evidence_select
-
     x = _factor_table(KEYS[6], (B, M, N))
     idx = jax.random.randint(KEYS[7], (B,), 0, N)
-    out = evidence_select(x, idx, bm=64, interpret=True)
+    out = ops.evidence_select(x, idx, bm=64)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.evidence_select_ref(x, idx)),
                                atol=1e-6)
+
+
+# -- cg_weak_marg: the strong junction tree's moment-matching hot loop --------
+
+
+@pytest.mark.parametrize("B,M,N,n", [
+    (1, 4, 3, 1),
+    (3, 130, 6, 2),     # ragged M vs block
+    (2, 8, 12, 3),
+])
+def test_cg_weak_marg_matches_ref(B, M, N, n):
+    lw = _factor_table(KEYS[0], (B, M, N))
+    mu = jax.random.normal(KEYS[1], (B, M, N, n))
+    a = jax.random.normal(KEYS[2], (B, M, N, n, n))
+    sigma = a @ jnp.swapaxes(a, -1, -2) + 0.5 * jnp.eye(n)
+    got = ops.cg_weak_marg(lw, mu, sigma, bm=64)
+    exp = ref.cg_weak_marg_ref(lw, mu, sigma)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_cg_weak_marg_dead_rows():
+    """All -inf mixtures collapse to (-inf, 0, I) — no NaNs."""
+    B, M, N, n = 2, 5, 4, 2
+    lw = jnp.full((B, M, N), -jnp.inf)
+    mu = jax.random.normal(KEYS[3], (B, M, N, n))
+    sigma = jnp.broadcast_to(jnp.eye(n), (B, M, N, n, n))
+    p, mh, sh = ops.cg_weak_marg(lw, mu, sigma)
+    assert np.all(np.isneginf(np.asarray(p)))
+    np.testing.assert_allclose(np.asarray(mh), 0.0)
+    np.testing.assert_allclose(np.asarray(sh),
+                               np.broadcast_to(np.eye(n), (B, M, n, n)))
+
+
+def test_cg_weak_marg_preserves_moments():
+    """The weak marginal keeps the mixture's exact mean and covariance."""
+    B, M, N, n = 1, 1, 5, 2
+    lw = jnp.log(jax.nn.softmax(jax.random.normal(KEYS[4], (B, M, N))))
+    mu = jax.random.normal(KEYS[5], (B, M, N, n))
+    a = jax.random.normal(KEYS[6], (B, M, N, n, n)) * 0.3
+    sigma = a @ jnp.swapaxes(a, -1, -2) + jnp.eye(n)
+    p, mh, sh = ops.cg_weak_marg(lw, mu, sigma)
+    w = np.exp(np.asarray(lw))[0, 0]
+    mu_np = np.asarray(mu)[0, 0]
+    mix_mean = (w[:, None] * mu_np).sum(0)
+    mix_cov = (w[:, None, None] * (np.asarray(sigma)[0, 0]
+               + mu_np[:, :, None] * mu_np[:, None, :])).sum(0) \
+        - mix_mean[:, None] * mix_mean[None, :]
+    np.testing.assert_allclose(float(p[0, 0]), np.log(w.sum()), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mh)[0, 0], mix_mean, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sh)[0, 0], mix_cov, atol=1e-5)

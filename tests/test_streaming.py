@@ -74,3 +74,62 @@ def test_natural_coordinate_roundtrip():
                     jax.tree_util.tree_leaves(back)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-4, atol=1e-5)
+
+
+# -- Model.update_model streaming wiring (stream_fit underneath) --------------
+
+
+def test_update_model_multibatch_stream_uses_stream_fit():
+    """A multi-chunk DataStream routes through the resident stream_fit scan
+    and matches the explicit per-batch stream_update loop."""
+    from repro.data.stream import DataStream
+    from repro.pgm_models import GaussianMixture
+
+    full, _, _ = gmm_stream(1200, 2, 3, seed=11)
+    batch = full.collect()
+    xc = np.asarray(batch.xc)
+    parts = [DataStream.from_arrays(full.attributes, xc[i:i + 300])
+             for i in range(0, 1200, 300)]
+    multi = DataStream.concat(parts)          # source yields 4 equal chunks
+
+    m = GaussianMixture(full.attributes, n_states=2, seed=0)
+    e = m.update_model(multi, sweeps=8)
+    assert np.isfinite(e)
+    assert m.n_seen == 1200
+
+    # reference: the explicit per-batch streaming loop (same step body)
+    ref = GaussianMixture(full.attributes, n_states=2, seed=0)
+    ss = streaming.stream_init(ref._chained_prior, ref.posterior)
+    for i in range(0, 1200, 300):
+        ss, info = streaming.stream_update(
+            ref.cp, ref.prior, ss, jnp.asarray(xc[i:i + 300]),
+            jnp.zeros((300, 0), jnp.int32), sweeps=8)
+    np.testing.assert_allclose(np.asarray(m.posterior.reg.m),
+                               np.asarray(ss.post.reg.m), atol=2e-3)
+    np.testing.assert_allclose(e, float(info["elbo"]), atol=2.0)
+
+
+def test_update_model_ragged_stream_falls_back_to_per_batch():
+    from repro.data.stream import DataStream
+    from repro.pgm_models import GaussianMixture
+
+    full, _, _ = gmm_stream(900, 2, 3, seed=12)
+    xc = np.asarray(full.collect().xc)
+    parts = [DataStream.from_arrays(full.attributes, xc[:500]),
+             DataStream.from_arrays(full.attributes, xc[500:])]  # 500 + 400
+    multi = DataStream.concat(parts)
+    m = GaussianMixture(full.attributes, n_states=2, seed=0)
+    e = m.update_model(multi, sweeps=8)
+    assert np.isfinite(e)
+    assert m.n_seen == 900
+
+
+def test_update_model_single_chunk_stream_keeps_batch_path():
+    """from_arrays streams yield one chunk -> the one-shot VMP fit."""
+    from repro.pgm_models import GaussianMixture
+
+    s, _, _ = gmm_stream(600, 2, 3, seed=13)
+    m = GaussianMixture(s.attributes, n_states=2, seed=0)
+    e = m.update_model(s, sweeps=30)
+    assert np.isfinite(e)
+    assert m.n_seen == 600

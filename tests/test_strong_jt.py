@@ -1,0 +1,335 @@
+"""Strong junction tree (Lauritzen 1992): CLG networks with unobserved
+continuous INTERNAL nodes, verified against the full-CLG brute oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dag import (BayesianNetwork, CLGCPD, DAG, MultinomialCPD,
+                            Variables)
+from repro.infer_exact import (JunctionTreeEngine, brute_posterior,
+                               brute_posterior_mean_var,
+                               compile_strong_junction_tree)
+from repro.infer_exact.brute import brute_log_evidence
+from repro.infer_exact.graph import (verify_running_intersection,
+                                     verify_strong)
+
+
+def chain_net():
+    """Z -> X1 -> X2 -> X3: X2 is an unobserved continuous INTERNAL node
+    once evidence lands on X1/X3 only."""
+    vs = Variables()
+    Z = vs.new_multinomial("Z", 3)
+    X1, X2, X3 = (vs.new_gaussian(n) for n in ("X1", "X2", "X3"))
+    dag = DAG(vs)
+    dag.add_parent(X1, Z)
+    dag.add_parent(X2, X1)
+    dag.add_parent(X2, Z)
+    dag.add_parent(X3, X2)
+    bn = BayesianNetwork(dag, {
+        "Z": MultinomialCPD(jnp.array([0.5, 0.3, 0.2])),
+        "X1": CLGCPD(jnp.array([0., 2., -1.]), jnp.zeros((3, 0)),
+                     jnp.array([1.0, 0.5, 2.0])),
+        "X2": CLGCPD(jnp.array([1., -1., 0.]),
+                     jnp.array([[0.5], [1.5], [-0.7]]),
+                     jnp.array([0.8, 1.2, 0.3])),
+        "X3": CLGCPD(jnp.asarray(0.5), jnp.asarray([1.1]),
+                     jnp.asarray(0.6)),
+    })
+    return bn, Z, X1, X2, X3
+
+
+def vstruct_net():
+    """H1 -> X <- H2 with latent continuous parents (v-structure)."""
+    vs = Variables()
+    Z = vs.new_multinomial("Z", 2)
+    H1, H2, X = (vs.new_gaussian(n) for n in ("H1", "H2", "X"))
+    dag = DAG(vs)
+    dag.add_parent(H1, Z)
+    dag.add_parent(X, H1)
+    dag.add_parent(X, H2)
+    bn = BayesianNetwork(dag, {
+        "Z": MultinomialCPD(jnp.array([0.6, 0.4])),
+        "H1": CLGCPD(jnp.array([0., 3.]), jnp.zeros((2, 0)),
+                     jnp.array([1.0, 0.5])),
+        "H2": CLGCPD(jnp.asarray(-1.0), jnp.zeros((0,)), jnp.asarray(2.0)),
+        "X": CLGCPD(jnp.asarray(0.2), jnp.asarray([0.8, -1.2]),
+                    jnp.asarray(0.4)),
+    })
+    return bn, Z, H1, H2, X
+
+
+def fa_net(seed=0, F=3):
+    """2-layer FA-style: Z mixes the 2-d latent (H1, H2); X_i = b_i^T H."""
+    rng = np.random.RandomState(seed)
+    vs = Variables()
+    Z = vs.new_multinomial("Z", 3)
+    H1, H2 = vs.new_gaussian("H1"), vs.new_gaussian("H2")
+    xs = [vs.new_gaussian(f"X{i}") for i in range(F)]
+    dag = DAG(vs)
+    dag.add_parent(H1, Z)
+    dag.add_parent(H2, Z)
+    cpds = {
+        "Z": MultinomialCPD(jnp.asarray(rng.dirichlet(np.ones(3)))),
+        "H1": CLGCPD(jnp.asarray(rng.randn(3)), jnp.zeros((3, 0)),
+                     jnp.ones(3)),
+        "H2": CLGCPD(jnp.asarray(rng.randn(3)), jnp.zeros((3, 0)),
+                     jnp.asarray([0.5, 1.5, 1.0])),
+    }
+    for x in xs:
+        dag.add_parent(x, H1)
+        dag.add_parent(x, H2)
+        cpds[x.name] = CLGCPD(jnp.asarray(rng.randn()),
+                              jnp.asarray(rng.randn(2)),
+                              jnp.asarray(0.3 + rng.rand()))
+    return BayesianNetwork(dag, cpds), Z, H1, H2, xs
+
+
+# -- acceptance criterion: strong JT == brute on unobserved cont internals ---
+
+
+def test_strong_chain_matches_brute():
+    bn, Z, X1, X2, X3 = chain_net()
+    eng = JunctionTreeEngine(bn)
+    assert eng.strong
+    ev = {"X1": 0.7, "X3": -0.4}
+    eng.set_evidence(ev)
+    eng.run_inference()
+    np.testing.assert_allclose(np.asarray(eng.posterior_discrete(Z)),
+                               np.asarray(brute_posterior(bn, Z, ev)),
+                               atol=1e-5)
+    m, v = eng.posterior_mean_var(X2)
+    mb, vb = brute_posterior_mean_var(bn, X2, ev)
+    np.testing.assert_allclose(float(m), float(mb), atol=1e-5)
+    np.testing.assert_allclose(float(v), float(vb), atol=1e-5)
+    np.testing.assert_allclose(float(eng.log_evidence()),
+                               float(brute_log_evidence(bn, ev)), atol=1e-5)
+
+
+def test_strong_vstructure_matches_brute():
+    bn, Z, H1, H2, X = vstruct_net()
+    eng = JunctionTreeEngine(bn)
+    ev = {"X": 1.3}
+    eng.set_evidence(ev)
+    eng.run_inference()
+    np.testing.assert_allclose(np.asarray(eng.posterior_discrete(Z)),
+                               np.asarray(brute_posterior(bn, Z, ev)),
+                               atol=1e-5)
+    for q in (H1, H2):
+        m, v = eng.posterior_mean_var(q)
+        mb, vb = brute_posterior_mean_var(bn, q, ev)
+        np.testing.assert_allclose(float(m), float(mb), atol=1e-5)
+        np.testing.assert_allclose(float(v), float(vb), atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_strong_fa_style_matches_brute(seed):
+    bn, Z, H1, H2, xs = fa_net(seed)
+    rng = np.random.RandomState(100 + seed)
+    ev = {x.name: float(rng.randn() * 1.5) for x in xs}
+    eng = JunctionTreeEngine(bn)
+    eng.set_evidence(ev)
+    eng.run_inference()
+    np.testing.assert_allclose(np.asarray(eng.posterior_discrete(Z)),
+                               np.asarray(brute_posterior(bn, Z, ev)),
+                               atol=1e-5)
+    for q in (H1, H2):
+        m, v = eng.posterior_mean_var(q)
+        mb, vb = brute_posterior_mean_var(bn, q, ev)
+        np.testing.assert_allclose(float(m), float(mb), atol=1e-5)
+        np.testing.assert_allclose(float(v), float(vb), atol=1e-5)
+    np.testing.assert_allclose(float(eng.log_evidence()),
+                               float(brute_log_evidence(bn, ev)), atol=1e-4)
+
+
+def test_strong_partial_evidence_and_discrete_evidence():
+    """Mixed schema: some leaves observed, discrete evidence clamped."""
+    vs = Variables()
+    Z = vs.new_multinomial("Z", 2)
+    W = vs.new_multinomial("W", 3)
+    H = vs.new_gaussian("H")
+    X1, X2 = vs.new_gaussian("X1"), vs.new_gaussian("X2")
+    dag = DAG(vs)
+    dag.add_parent(H, Z)
+    dag.add_parent(X1, H)
+    dag.add_parent(X1, W)
+    dag.add_parent(X2, H)
+    rng = np.random.RandomState(1)
+    bn = BayesianNetwork(dag, {
+        "Z": MultinomialCPD(jnp.array([0.3, 0.7])),
+        "W": MultinomialCPD(jnp.asarray(rng.dirichlet(np.ones(3)))),
+        "H": CLGCPD(jnp.array([0., 2.5]), jnp.zeros((2, 0)),
+                    jnp.array([1.0, 0.6])),
+        "X1": CLGCPD(jnp.asarray(rng.randn(3)), jnp.asarray(rng.randn(3, 1)),
+                     jnp.asarray(0.5 + rng.rand(3))),
+        "X2": CLGCPD(jnp.asarray(0.1), jnp.asarray([1.3]), jnp.asarray(0.7)),
+    })
+    ev = {"X1": 0.5, "W": 2}
+    eng = JunctionTreeEngine(bn)
+    eng.set_evidence(ev)
+    eng.run_inference()
+    np.testing.assert_allclose(np.asarray(eng.posterior_discrete(Z)),
+                               np.asarray(brute_posterior(bn, Z, ev)),
+                               atol=1e-5)
+    for q in (H, X2):
+        m, v = eng.posterior_mean_var(q)
+        mb, vb = brute_posterior_mean_var(bn, q, ev)
+        np.testing.assert_allclose(float(m), float(mb), atol=1e-5)
+        np.testing.assert_allclose(float(v), float(vb), atol=1e-5)
+
+
+# -- batched evidence: shapes and per-instance agreement ----------------------
+
+
+def test_strong_batched_evidence_shapes_and_values():
+    bn, Z, H1, H2, xs = fa_net(3)
+    B = 6
+    rng = np.random.RandomState(7)
+    ev = {x.name: rng.randn(B).astype(np.float32) for x in xs}
+    eng = JunctionTreeEngine(bn)
+    eng.set_evidence(ev)
+    eng.run_inference()
+    pz = np.asarray(eng.posterior_discrete(Z))
+    m, v = eng.posterior_mean_var(H1)
+    lz = np.asarray(eng.log_evidence())
+    assert pz.shape == (B, 3)
+    assert np.shape(m) == (B,) and np.shape(v) == (B,)
+    assert lz.shape == (B,)
+    np.testing.assert_allclose(pz.sum(-1), 1.0, atol=1e-5)
+    for b in range(B):
+        ev1 = {k: float(a[b]) for k, a in ev.items()}
+        np.testing.assert_allclose(pz[b],
+                                   np.asarray(brute_posterior(bn, Z, ev1)),
+                                   atol=1e-5)
+        mb, vb = brute_posterior_mean_var(bn, H1, ev1)
+        np.testing.assert_allclose(float(m[b]), float(mb), atol=1e-5)
+        np.testing.assert_allclose(float(v[b]), float(vb), atol=1e-5)
+
+
+def test_strong_pallas_weak_marginal_matches_jnp():
+    bn, Z, H1, H2, xs = fa_net(4)
+    rng = np.random.RandomState(9)
+    ev = {x.name: rng.randn(4).astype(np.float32) for x in xs[:2]}
+    ref = JunctionTreeEngine(bn, use_pallas=False)
+    ref.set_evidence(ev)
+    ref.run_inference()
+    pal = JunctionTreeEngine(bn, use_pallas=True)
+    pal.set_evidence(ev)
+    pal.run_inference()
+    np.testing.assert_allclose(np.asarray(pal.posterior_discrete(Z)),
+                               np.asarray(ref.posterior_discrete(Z)),
+                               atol=1e-5)
+    for q in (H1, H2, xs[2]):
+        mr, vr = ref.posterior_mean_var(q)
+        mp, vp = pal.posterior_mean_var(q)
+        np.testing.assert_allclose(np.asarray(mp), np.asarray(mr), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(vp), np.asarray(vr), atol=1e-5)
+
+
+def test_strong_multi_discrete_parents_nonsorted_order():
+    """Discrete CPD tables are laid out in RAW get_parents order; the strong
+    pipeline must permute them onto its sorted scopes (regression: a node
+    with parents added as (B, A) silently mislabeled its table axes)."""
+    vs = Variables()
+    B_ = vs.new_multinomial("B", 2)
+    A_ = vs.new_multinomial("A", 2)
+    D_ = vs.new_multinomial("D", 2)
+    H = vs.new_gaussian("H")
+    X = vs.new_gaussian("X")
+    dag = DAG(vs)
+    dag.add_parent(D_, B_)          # raw parent order (B, A) != sorted (A, B)
+    dag.add_parent(D_, A_)
+    dag.add_parent(H, D_)
+    dag.add_parent(X, H)            # cont-cont edge -> strong pipeline
+    rng = np.random.RandomState(5)
+    table = rng.dirichlet(np.ones(2), size=(2, 2))     # [card(B), card(A), 2]
+    bn = BayesianNetwork(dag, {
+        "B": MultinomialCPD(jnp.array([0.7, 0.3])),
+        "A": MultinomialCPD(jnp.array([0.2, 0.8])),
+        "D": MultinomialCPD(jnp.asarray(table)),
+        "H": CLGCPD(jnp.array([-2.0, 2.0]), jnp.zeros((2, 0)),
+                    jnp.array([1.0, 0.5])),
+        "X": CLGCPD(jnp.asarray(0.3), jnp.asarray([1.5]), jnp.asarray(0.4)),
+    })
+    eng = JunctionTreeEngine(bn)
+    assert eng.strong
+    ev = {"X": 1.0}
+    eng.set_evidence(ev)
+    eng.run_inference()
+    for var in (D_, A_, B_):
+        np.testing.assert_allclose(
+            np.asarray(eng.posterior_discrete(var)),
+            np.asarray(brute_posterior(bn, var, ev)), atol=1e-5)
+    m, v = eng.posterior_mean_var(H)
+    mb, vb = brute_posterior_mean_var(bn, H, ev)
+    np.testing.assert_allclose(float(m), float(mb), atol=1e-5)
+    np.testing.assert_allclose(float(v), float(vb), atol=1e-5)
+
+
+# -- compilation structure ---------------------------------------------------
+
+
+def test_strong_tree_structure():
+    bn, *_ = chain_net()
+    jt = compile_strong_junction_tree(bn)
+    assert len(jt.edges) == len(jt.cliques) - 1
+    verify_running_intersection(jt.cliques, jt.edges)
+    verify_strong(jt.cliques, jt.edges, jt.sepsets, set(jt.continuous))
+    # strong elimination: every continuous variable before any discrete one
+    order = jt.elimination_order
+    cont = set(jt.continuous)
+    last_cont = max(i for i, v in enumerate(order) if v in cont)
+    first_disc = min(i for i, v in enumerate(order) if v not in cont)
+    assert last_cont < first_disc
+    # every family lives inside one clique
+    for v in bn.order:
+        fam = {v.name} | {p.name for p in bn.dag.get_parents(v)}
+        assert any(fam <= c for c in jt.cliques)
+
+
+def test_strong_verifier_catches_violation():
+    cliques = [frozenset({"d1", "x"}), frozenset({"x", "d2"})]
+    with pytest.raises(AssertionError, match="strong-root"):
+        verify_strong(cliques, [(0, 1)], [frozenset({"x"})], {"x"})
+
+
+def test_discrete_networks_keep_discrete_pipeline():
+    """Mixture-style networks (no cont-cont edges) stay on the fast
+    discrete pipeline."""
+    vs = Variables()
+    Z = vs.new_multinomial("Z", 2)
+    X = vs.new_gaussian("X")
+    dag = DAG(vs)
+    dag.add_parent(X, Z)
+    bn = BayesianNetwork(dag, {
+        "Z": MultinomialCPD(jnp.array([0.4, 0.6])),
+        "X": CLGCPD(jnp.array([0., 1.]), jnp.zeros((2, 0)),
+                    jnp.array([1., 1.]))})
+    eng = JunctionTreeEngine(bn)
+    assert not eng.strong
+
+
+# -- serve-layer wiring: strong networks behind PGMQueryEngine ----------------
+
+
+def test_pgm_query_engine_on_strong_network():
+    from repro.serve.engine import PGMQueryEngine
+
+    bn, Z, X1, X2, X3 = chain_net()
+    eng = PGMQueryEngine(bn, mode="exact")
+    q1 = eng.submit("Z", {"X1": 0.7, "X3": -0.4})
+    q2 = eng.submit("Z", {"X1": -1.2, "X3": 0.9})
+    q3 = eng.submit("Z", {"X3": 0.1})             # different schema
+    done = eng.flush()
+    assert len(done) == 3 and all(q.done for q in done)
+    for q in (q1, q2):
+        ev = {k: float(v) for k, v in q.evidence.items()}
+        np.testing.assert_allclose(q.result,
+                                   np.asarray(brute_posterior(bn, Z, ev)),
+                                   atol=1e-5)
+        np.testing.assert_allclose(q.log_evidence,
+                                   float(brute_log_evidence(bn, ev)),
+                                   atol=1e-4)
+    np.testing.assert_allclose(
+        q3.result, np.asarray(brute_posterior(bn, Z, {"X3": 0.1})),
+        atol=1e-5)
