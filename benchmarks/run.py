@@ -44,6 +44,32 @@ BENCH_DVMP_SCHEMA = {
     "posterior_max_abs_diff": float,
 }
 
+# --json --latent mode: the latent-plate (FA/PPCA) E-step einsum vs the fused
+# component-major Pallas kernel, plus strong-junction-tree query throughput
+# with and without shape-bucketed clique propagation.
+BENCH_LATENT_SCHEMA = {
+    "bench": str, "schema_version": int, "created": str,
+    "config": dict, "results": list,
+    "latent_backend_max_rel_diff": float,
+    "jt_posterior_max_abs_diff": float,
+    "jt_bucketed_speedup": float,
+}
+
+
+def _bench_env_config() -> dict:
+    """Environment fields stamped into every BENCH_*.json config block so
+    the perf trajectory is comparable across jax versions / kernel policies."""
+    import jax
+
+    from repro.kernels import clg_stats
+
+    return {
+        "device": str(jax.devices()[0]).split(":")[0],
+        "jax_version": jax.__version__,
+        "pallas_policy": ("interpret" if clg_stats._resolve_interpret(None)
+                          else "compiled"),
+    }
+
 
 def _t(fn, *args, reps=3, warmup=1, **kw):
     import jax
@@ -116,13 +142,15 @@ def _peak_mem_proxy(lowered):
 def bench_streaming_json(n: int = 50_000, batch: int = 2_000,
                          sweeps: int = 5, k: int = 3, f: int = 8,
                          backend: str = None, out: str = "BENCH_streaming.json",
-                         ) -> dict:
+                         window: int = 5) -> dict:
     """(iii, JSON mode) seed per-batch ``stream_update`` loop vs the fused,
-    resident ``stream_fit`` scan on the benchmark GMM stream.
+    resident ``stream_fit`` scan (whole stream on device) vs the windowed
+    scan (host-resident stream, ``window`` batches on device at a time) on
+    the benchmark GMM stream.
 
     Writes ``out`` with inst/s, us/batch, a peak-memory proxy and the
-    suff-stats backend for both drivers — the perf-trajectory artifact this
-    and every future PR updates.
+    suff-stats backend for all three drivers — the perf-trajectory artifact
+    this and every future PR updates.
     """
     import datetime
 
@@ -141,6 +169,7 @@ def bench_streaming_json(n: int = 50_000, batch: int = 2_000,
     stream, _, _ = gmm_stream(n, k, f, seed=0)
     batches = list(stream.batches(batch))
     nb = len(batches)
+    window = max(1, min(window, nb))
 
     def run_loop():
         ss = streaming.stream_init(prior, init)
@@ -153,6 +182,9 @@ def bench_streaming_json(n: int = 50_000, batch: int = 2_000,
     xcs = jnp.stack([b.xc for b in batches])
     xds = jnp.stack([b.xd for b in batches])
     masks = jnp.stack([b.mask for b in batches])
+    # the windowed driver's stream stays host-resident (numpy)
+    xcs_h, xds_h, masks_h = (np.asarray(xcs), np.asarray(xds),
+                             np.asarray(masks))
 
     def run_scan():
         ss = streaming.stream_init(prior, init)
@@ -161,47 +193,64 @@ def bench_streaming_json(n: int = 50_000, batch: int = 2_000,
         jax.block_until_ready(ss.post.reg.m)
         return ss
 
+    def run_windowed():
+        ss = streaming.stream_init(prior, init)
+        ss, infos = streaming.stream_fit(cp, prior, ss, xcs_h, xds_h,
+                                         masks_h, sweeps=sweeps,
+                                         backend=backend, window=window)
+        jax.block_until_ready(ss.post.reg.m)
+        return ss
+
     results = []
     finals = {}
     for name, fn in (("stream_update_loop", run_loop),
-                     ("stream_fit_scan", run_scan)):
+                     ("stream_fit_scan", run_scan),
+                     ("stream_fit_windowed", run_windowed)):
         fn()                          # warm the jit caches
         t0 = time.perf_counter()
         finals[name] = fn()
         dt = time.perf_counter() - t0
         results.append({
             "driver": name,
-            "backend": backend if name == "stream_fit_scan" else "einsum",
+            "backend": backend if name != "stream_update_loop" else "einsum",
             "n_batches": nb,
+            "window": window if name == "stream_fit_windowed" else None,
             "us_per_batch": dt / nb * 1e6,
             "inst_per_s": n / dt,
             "peak_mem_bytes": None,
         })
 
-    # peak-mem proxy from the scan driver's compiled program; the loop driver
-    # has no single program — proxy with its per-batch fit program
+    # peak-mem proxies from the compiled scan programs; the loop driver has
+    # no single program — proxy with its per-batch fit program
     ss0 = streaming.stream_init(prior, init)
     results[1]["peak_mem_bytes"] = _peak_mem_proxy(
         streaming._stream_fit_scan.lower(
             cp, prior, ss0, xcs, xds, masks, sweeps=sweeps, tol=1e-4,
             drift_threshold=5.0, forget=0.3, backend=backend, chunk=None))
+    ss0 = streaming.stream_init(prior, init)
+    results[2]["peak_mem_bytes"] = _peak_mem_proxy(
+        streaming._stream_fit_scan.lower(
+            cp, prior, ss0, xcs[:window], xds[:window], masks[:window],
+            sweeps=sweeps, tol=1e-4, drift_threshold=5.0, forget=0.3,
+            backend=backend, chunk=None))
     results[0]["peak_mem_bytes"] = _peak_mem_proxy(
         vmp.vmp_fit.lower(cp, prior, init, batches[0].xc, batches[0].xd,
                           sweeps, 1e-4, batches[0].mask, "einsum", None))
 
-    # same posterior from both drivers (parity is also unit-tested)
-    drift = float(np.abs(
+    # same posterior from all drivers (parity is also unit-tested)
+    drift = max(float(np.abs(
         np.asarray(finals["stream_update_loop"].post.reg.m)
-        - np.asarray(finals["stream_fit_scan"].post.reg.m)).max())
+        - np.asarray(finals[d].post.reg.m)).max())
+        for d in ("stream_fit_scan", "stream_fit_windowed"))
 
     payload = {
         "bench": "streaming",
-        "schema_version": 1,
+        "schema_version": 2,
         "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
         "backend": backend,
         "config": {"n": n, "batch": batch, "sweeps": sweeps,
-                   "features": f, "components": k,
-                   "device": str(jax.devices()[0]).split(":")[0]},
+                   "features": f, "components": k, "window": window,
+                   **_bench_env_config()},
         "results": results,
         "speedup_inst_per_s": results[1]["inst_per_s"] / results[0]["inst_per_s"],
         "driver_posterior_max_abs_diff": drift,
@@ -226,11 +275,15 @@ def validate_bench_streaming(payload: dict) -> None:
             raise ValueError(f"{key!r} must be {typ.__name__}, "
                              f"got {type(payload[key]).__name__}")
     drivers = {r["driver"] for r in payload["results"]}
-    if drivers != {"stream_update_loop", "stream_fit_scan"}:
+    if drivers != {"stream_update_loop", "stream_fit_scan",
+                   "stream_fit_windowed"}:
         raise ValueError(f"unexpected drivers {drivers}")
+    for key in ("jax_version", "pallas_policy"):
+        if key not in payload["config"]:
+            raise ValueError(f"config missing {key!r}")
     for r in payload["results"]:
-        for field in ("backend", "n_batches", "us_per_batch", "inst_per_s",
-                      "peak_mem_bytes"):
+        for field in ("backend", "n_batches", "window", "us_per_batch",
+                      "inst_per_s", "peak_mem_bytes"):
             if field not in r:
                 raise ValueError(f"result {r['driver']} missing {field!r}")
         if not r["inst_per_s"] > 0:
@@ -307,8 +360,7 @@ def bench_dvmp_json(n: int = 50_000, sweeps: int = 5, k: int = 3, f: int = 8,
         "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
         "backend": backend,
         "config": {"n": n, "sweeps": sweeps, "features": f, "components": k,
-                   "mesh_shape": [ndev],
-                   "device": str(jax.devices()[0]).split(":")[0]},
+                   "mesh_shape": [ndev], **_bench_env_config()},
         "results": results,
         "speedup_inst_per_s": results[1]["inst_per_s"]
         / results[0]["inst_per_s"],
@@ -335,6 +387,9 @@ def validate_bench_dvmp(payload: dict) -> None:
     drivers = {r["driver"] for r in payload["results"]}
     if drivers != {"vmp_single_device", "dvmp_mesh"}:
         raise ValueError(f"unexpected drivers {drivers}")
+    for key in ("jax_version", "pallas_policy"):
+        if key not in payload["config"]:
+            raise ValueError(f"config missing {key!r}")
     for r in payload["results"]:
         for field in ("backend", "n_devices", "us_per_fit", "inst_per_s"):
             if field not in r:
@@ -345,6 +400,157 @@ def validate_bench_dvmp(payload: dict) -> None:
         raise ValueError(
             "d-VMP shard invariance violated: posterior_max_abs_diff="
             f"{payload['posterior_max_abs_diff']}")
+
+
+def bench_latent_json(n: int = 8_192, f: int = 4, k: int = 3,
+                      latent_dims: tuple = (2, 8), depth: int = 12,
+                      b: int = 32, reps: int = 5,
+                      out: str = "BENCH_latent.json") -> dict:
+    """(i/ix, JSON mode) the latent-plate perf trail.
+
+    Part 1 — FA/PPCA-mixture E-step (``local_step`` with L > 0): the einsum
+    reference vs the fused component-major ``clg_suffstats_latent`` Pallas
+    kernel, per latent dimension in ``latent_dims``; records inst/s for
+    both backends and their max relative suff-stat difference (the fused
+    path must match the reference wherever it runs).
+
+    Part 2 — strong-junction-tree queries on a depth-``depth`` CLG chain
+    (Z -> X0 -> ... -> X_{depth-1}, batched evidence on the last node):
+    per-clique propagation vs shape-bucketed propagation, queries/s both
+    ways plus the posterior max-abs-diff (must be ~0).
+    """
+    import datetime
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import expfam as ef
+    from repro.core import vmp
+    from repro.core.dag import (BayesianNetwork, CLGCPD, DAG, MultinomialCPD,
+                                PlateSpec, Variables)
+    from repro.infer_exact import JunctionTreeEngine
+
+    results = []
+
+    # -- part 1: latent-plate E-step backends --------------------------------
+    rel_diff = 0.0
+    for L in latent_dims:
+        spec = PlateSpec(n_features=f, latent_card=k, latent_dim=L)
+        cp = vmp.compile_plate(spec)
+        prior = vmp.default_prior(cp)
+        post = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+        xc = jax.random.normal(jax.random.PRNGKey(1), (n, f))
+        xd = jnp.zeros((n, 0), jnp.int32)
+        mask = jnp.ones(n)
+        stats = {}
+        for backend in ("einsum", "pallas"):
+            step = jax.jit(lambda x, d, m, be=backend: vmp.local_step(
+                cp, post, x, d, m, backend=be))
+            us = _t(step, xc, xd, mask, reps=reps)
+            results.append({
+                "driver": f"local_step_L{L}", "backend": backend, "L": L,
+                "n": n, "us_per_call": us, "inst_per_s": n / us * 1e6,
+            })
+            stats[backend] = step(xc, xd, mask)[0]
+        de = np.asarray(ef.reg_dense(stats["einsum"].reg).sxx)
+        dp = np.asarray(ef.reg_dense(stats["pallas"].reg).sxx)
+        rel_diff = max(rel_diff,
+                       float((np.abs(de - dp) / (1.0 + np.abs(de))).max()))
+
+    # -- part 2: strong JT on a deep chain, bucketed vs per-clique -----------
+    vs = Variables()
+    Z = vs.new_multinomial("Z", 3)
+    xs = [vs.new_gaussian(f"X{i:02d}") for i in range(depth)]
+    dag = DAG(vs)
+    dag.add_parent(xs[0], Z)
+    for a_, b_ in zip(xs, xs[1:]):
+        dag.add_parent(b_, a_)
+    rng = np.random.RandomState(0)
+    cpds = {"Z": MultinomialCPD(jnp.asarray(rng.dirichlet(np.ones(3)))),
+            xs[0].name: CLGCPD(jnp.asarray(rng.randn(3)),
+                               jnp.zeros((3, 0)), jnp.ones(3))}
+    for a_, b_ in zip(xs, xs[1:]):
+        cpds[b_.name] = CLGCPD(jnp.asarray(rng.randn()),
+                               jnp.asarray(rng.randn(1) * 0.8),
+                               jnp.asarray(0.3 + rng.rand()))
+    bn = BayesianNetwork(dag, cpds)
+    ev = {xs[-1].name: rng.randn(b).astype(np.float32)}
+    post_z = {}
+    for name, bucketed in (("strong_jt_per_clique", False),
+                           ("strong_jt_bucketed", True)):
+        eng = JunctionTreeEngine(bn, bucketed=bucketed)
+        eng.set_evidence(ev)
+        eng.run_inference()                   # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            eng.run_inference()
+            pz = eng.posterior_discrete(Z)
+        jax.block_until_ready(pz)
+        dt = (time.perf_counter() - t0) / reps
+        post_z[name] = np.asarray(pz)
+        results.append({
+            "driver": name, "depth": depth, "batch": b,
+            "us_per_batch": dt * 1e6, "queries_per_s": b / dt,
+        })
+    jt_diff = float(np.abs(post_z["strong_jt_bucketed"]
+                           - post_z["strong_jt_per_clique"]).max())
+    jt_speedup = (results[-1]["queries_per_s"]
+                  / results[-2]["queries_per_s"])
+
+    payload = {
+        "bench": "latent",
+        "schema_version": 1,
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "config": {"n": n, "features": f, "components": k,
+                   "latent_dims": list(latent_dims), "jt_depth": depth,
+                   "jt_batch": b, **_bench_env_config()},
+        "results": results,
+        "latent_backend_max_rel_diff": rel_diff,
+        "jt_posterior_max_abs_diff": jt_diff,
+        "jt_bucketed_speedup": jt_speedup,
+    }
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {out}: latent backends rel diff {rel_diff:.2e}; "
+          f"strong JT bucketed {jt_speedup:.2f}x "
+          f"({results[-1]['queries_per_s']:.0f} vs "
+          f"{results[-2]['queries_per_s']:.0f} q/s, diff {jt_diff:.2e})")
+    return payload
+
+
+def validate_bench_latent(payload: dict) -> None:
+    """Schema gate for BENCH_latent.json — used by scripts/ci.sh."""
+    for key, typ in BENCH_LATENT_SCHEMA.items():
+        if key not in payload:
+            raise ValueError(f"BENCH_latent.json missing key {key!r}")
+        if typ is float and isinstance(payload[key], int):
+            continue
+        if not isinstance(payload[key], typ):
+            raise ValueError(f"{key!r} must be {typ.__name__}, "
+                             f"got {type(payload[key]).__name__}")
+    for key in ("jax_version", "pallas_policy"):
+        if key not in payload["config"]:
+            raise ValueError(f"config missing {key!r}")
+    drivers = {r["driver"] for r in payload["results"]}
+    for need in ("strong_jt_per_clique", "strong_jt_bucketed"):
+        if need not in drivers:
+            raise ValueError(f"missing driver {need!r}")
+    if not any(d.startswith("local_step_L") for d in drivers):
+        raise ValueError("missing local_step latent drivers")
+    backends = {r.get("backend") for r in payload["results"]
+                if r["driver"].startswith("local_step_L")}
+    if backends != {"einsum", "pallas"}:
+        raise ValueError(f"latent drivers must cover both backends, "
+                         f"got {backends}")
+    if not payload["latent_backend_max_rel_diff"] < 1e-4:
+        raise ValueError(
+            "fused latent path diverged from the einsum reference: "
+            f"rel diff {payload['latent_backend_max_rel_diff']}")
+    if not payload["jt_posterior_max_abs_diff"] < 1e-5:
+        raise ValueError(
+            "bucketed strong JT diverged from per-clique propagation: "
+            f"{payload['jt_posterior_max_abs_diff']}")
 
 
 def bench_drift():
@@ -581,29 +787,47 @@ def main(argv=None) -> None:
     ap.add_argument("--dvmp", action="store_true",
                     help="with --json: run the d-VMP mesh-path driver and "
                          "write BENCH_dvmp.json instead")
+    ap.add_argument("--latent", action="store_true",
+                    help="with --json: run the latent-plate E-step + "
+                         "bucketed strong-JT drivers and write "
+                         "BENCH_latent.json instead")
     ap.add_argument("--out", default=None)
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--batch", type=int, default=2_000)
     ap.add_argument("--sweeps", type=int, default=5)
+    ap.add_argument("--window", type=int, default=5,
+                    help="stream_fit_windowed driver's device-resident "
+                         "window (batches)")
     ap.add_argument("--devices", type=int, default=0,
                     help="mesh size for --dvmp (default: all jax devices)")
     ap.add_argument("--backend", default=None,
                     help="suff-stats backend for stream_fit "
                          "(einsum|pallas; default: auto)")
+    ap.add_argument("--latent-n", type=int, default=8_192,
+                    help="instances for the --latent E-step drivers")
+    ap.add_argument("--depth", type=int, default=12,
+                    help="CLG chain depth for the --latent strong-JT driver")
     args = ap.parse_args(argv)
 
-    if args.dvmp and not args.json:
-        ap.error("--dvmp requires --json (it writes BENCH_dvmp.json)")
+    if (args.dvmp or args.latent) and not args.json:
+        ap.error("--dvmp/--latent require --json (they write BENCH_*.json)")
     if args.json and args.dvmp:
         payload = bench_dvmp_json(
             n=args.n, sweeps=args.sweeps, backend=args.backend,
             n_devices=args.devices, out=args.out or "BENCH_dvmp.json")
         validate_bench_dvmp(payload)
         return
+    if args.json and args.latent:
+        payload = bench_latent_json(
+            n=args.latent_n, depth=args.depth,
+            out=args.out or "BENCH_latent.json")
+        validate_bench_latent(payload)
+        return
     if args.json:
         payload = bench_streaming_json(
             n=args.n, batch=args.batch, sweeps=args.sweeps,
-            backend=args.backend, out=args.out or "BENCH_streaming.json")
+            backend=args.backend, window=args.window,
+            out=args.out or "BENCH_streaming.json")
         validate_bench_streaming(payload)
         return
 

@@ -13,6 +13,10 @@
 #      tier-1 instead of silently rotting,
 #   4. the d-VMP mesh-path harness (--json --dvmp) on a forced 4-device
 #      host mesh with schema + shard-invariance validation,
+#   4b. the latent-path harness (--json --latent) on tiny sizes: schema
+#      validation PLUS the fused-kernel-vs-einsum and bucketed-vs-per-clique
+#      parity gates baked into the validator (the latent-kernel interpret-
+#      vs-policy parity itself rides the test_kernels legs of step 2),
 #   5. end-to-end junction-tree queries through the public API: a discrete
 #      2-variable query AND a strong-junction-tree query on a CLG network
 #      with an unobserved continuous INTERNAL node, so both exact-inference
@@ -45,9 +49,10 @@ fi
 
 BENCH_OUT="$(mktemp -t bench_streaming_smoke.XXXXXX.json)"
 DVMP_OUT="$(mktemp -t bench_dvmp_smoke.XXXXXX.json)"
-trap 'rm -f "$BENCH_OUT" "$DVMP_OUT"' EXIT
+LATENT_OUT="$(mktemp -t bench_latent_smoke.XXXXXX.json)"
+trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT"' EXIT
 python benchmarks/run.py --json --n 1000 --batch 250 --sweeps 2 \
-    --out "$BENCH_OUT"
+    --window 2 --out "$BENCH_OUT"
 python - "$BENCH_OUT" <<'EOF'
 import json, sys
 sys.path.insert(0, "benchmarks")
@@ -73,6 +78,22 @@ validate_bench_dvmp(payload)
 print("ci smoke: BENCH_dvmp schema OK (mesh "
       f"{payload['config']['mesh_shape']}, posterior diff "
       f"{payload['posterior_max_abs_diff']:.2e})")
+EOF
+
+python benchmarks/run.py --json --latent --latent-n 512 --depth 6 \
+    --out "$LATENT_OUT"
+python - "$LATENT_OUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from run import validate_bench_latent
+
+with open(sys.argv[1]) as fh:
+    payload = json.load(fh)
+validate_bench_latent(payload)
+print("ci smoke: BENCH_latent schema OK (kernel rel diff "
+      f"{payload['latent_backend_max_rel_diff']:.2e}, strong-JT bucketed "
+      f"{payload['jt_bucketed_speedup']:.2f}x, "
+      f"diff {payload['jt_posterior_max_abs_diff']:.2e})")
 EOF
 
 python - <<'EOF'

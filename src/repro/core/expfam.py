@@ -18,7 +18,7 @@ Everything is pure-functional jnp; no Python objects cross jit boundaries.
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 from jax.scipy.special import digamma, gammaln
@@ -184,12 +184,35 @@ class MVNormalGamma(NamedTuple):
 
 
 class RegSuffStats(NamedTuple):
-    """Weighted regression suff stats: the d-VMP message of a CLG node."""
+    """Weighted regression suff stats: the d-VMP message of a CLG node.
 
-    sxx: jnp.ndarray  # [..., D, D] sum w x x^T
+    ``sxx_hh`` is the lazy latent-block form used by the FA/PPCA plates:
+    when set, ``sxx`` carries only the top [..., Do, D] block (observed rows;
+    the observed-latent cross block sits in its last L columns) and
+    ``sxx_hh`` holds the leaf-shared [K, L, L] latent-latent block ONCE
+    instead of broadcast per leaf.  :func:`reg_dense` reassembles the full
+    symmetric [..., D, D] matrix; every consumer of ``sxx`` densifies first.
+    """
+
+    sxx: jnp.ndarray  # [..., D, D] sum w x x^T  ([..., Do, D] when lazy)
     sxy: jnp.ndarray  # [..., D]    sum w x y
     syy: jnp.ndarray  # [...]       sum w y^2
     n: jnp.ndarray    # [...]       sum w
+    sxx_hh: Optional[jnp.ndarray] = None  # [K, L, L] shared latent block
+
+
+def reg_dense(s: RegSuffStats) -> RegSuffStats:
+    """Expand the lazy latent-block form to the full [..., D, D] sxx."""
+    if s.sxx_hh is None:
+        return s
+    D = s.sxx.shape[-1]
+    Do = s.sxx.shape[-2]
+    L = D - Do
+    oh = s.sxx[..., :, Do:]                               # [..., Do, L]
+    hh = jnp.broadcast_to(s.sxx_hh, s.sxx.shape[:-2] + (L, L))
+    bot = jnp.concatenate([jnp.swapaxes(oh, -1, -2), hh], axis=-1)
+    return RegSuffStats(jnp.concatenate([s.sxx, bot], axis=-2),
+                        s.sxy, s.syy, s.n, None)
 
 
 def reg_suffstats(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray) -> RegSuffStats:
@@ -206,6 +229,7 @@ def reg_suffstats(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray) -> RegSuffStat
 
 
 def mvnormalgamma_update(prior: MVNormalGamma, s: RegSuffStats) -> MVNormalGamma:
+    s = reg_dense(s)                     # lazy latent block expands HERE, once
     K_n = prior.K + s.sxx
     km = jnp.einsum("...de,...e->...d", prior.K, prior.m)
     rhs = km + s.sxy

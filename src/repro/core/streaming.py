@@ -236,6 +236,7 @@ def stream_fit(
     forget: float = 0.3,
     backend: str = "einsum",
     chunk: Optional[int] = None,
+    window: Optional[int] = None,
 ) -> Tuple[StreamState, Dict[str, jnp.ndarray]]:
     """Replay T stacked batches in ONE jitted ``lax.scan``.
 
@@ -246,11 +247,16 @@ def stream_fit(
     and the ``StreamState`` buffers are donated so the posterior is updated
     in place batch-over-batch.
 
+    ``window=w`` bounds DEVICE memory for long streams: the stacked batches
+    stay on the host (pass numpy arrays) and the scan replays them one
+    device-sliced window of w batches at a time — ceil(T/w) dispatches
+    instead of T, with only O(w * B) of the stream resident on device.
+    ``window=None`` keeps the whole stream in one scan (fastest, largest
+    footprint).  The tail window may retrace once if ``T % w != 0``.
+
     Returns the final state and per-batch info arrays
     ``{"elbo", "score", "ph", "drifted"}`` each of leading dim T.
     """
-    if masks is None:
-        masks = jnp.ones(xcs.shape[:2])
     # state is donated, but its leaves routinely alias each other and the
     # other operands (stream_init reuses the prior's buffers for state.prior
     # and symmetry_broken shares all-but-m with it); XLA rejects donating an
@@ -264,8 +270,28 @@ def stream_fit(
         seen.add(id(leaf))
         return leaf
 
+    if window is not None and window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
     state = jax.tree_util.tree_map(unalias, state)
-    return _stream_fit_scan(cp, base_prior, state, xcs, xds, masks,
-                            sweeps=sweeps, tol=tol,
-                            drift_threshold=drift_threshold, forget=forget,
-                            backend=backend, chunk=chunk)
+    T = xcs.shape[0]
+    if window is None or window >= T:
+        if masks is None:
+            masks = jnp.ones(xcs.shape[:2])
+        return _stream_fit_scan(cp, base_prior, state, xcs, xds, masks,
+                                sweeps=sweeps, tol=tol,
+                                drift_threshold=drift_threshold,
+                                forget=forget, backend=backend, chunk=chunk)
+    infos = []
+    for t0 in range(0, T, window):
+        xc_w = jnp.asarray(xcs[t0:t0 + window])
+        xd_w = jnp.asarray(xds[t0:t0 + window])
+        m_w = (jnp.ones(xc_w.shape[:2]) if masks is None
+               else jnp.asarray(masks[t0:t0 + window]))
+        state, info = _stream_fit_scan(cp, base_prior, state, xc_w, xd_w,
+                                       m_w, sweeps=sweeps, tol=tol,
+                                       drift_threshold=drift_threshold,
+                                       forget=forget, backend=backend,
+                                       chunk=chunk)
+        infos.append(info)
+    info = {k: jnp.concatenate([i[k] for i in infos]) for k in infos[0]}
+    return state, info

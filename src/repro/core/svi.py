@@ -58,10 +58,11 @@ def from_natural(n: NatParams) -> PlateParams:
 
 def stats_as_natural(stats: PlateStats) -> NatParams:
     """Suff stats expressed as a natural-coordinate increment."""
+    reg = ef.reg_dense(stats.reg)        # expand the lazy latent block
     return NatParams(
         mix=stats.counts,
-        reg_K=stats.reg.sxx,
-        reg_Km=stats.reg.sxy,
+        reg_K=reg.sxx,
+        reg_Km=reg.sxy,
         reg_a=0.5 * stats.reg.n,
         reg_bq=0.5 * stats.reg.syy,
         disc=stats.disc,

@@ -175,13 +175,20 @@ def symmetry_broken(prior: PlateParams, key: jax.Array, scale: float = 0.5
 # ---------------------------------------------------------------------------
 #
 # Two suff-stats backends share one math path:
-#   backend="einsum"  — XLA einsum reductions (the reference; always exact)
-#   backend="pallas"  — kernels.clg_stats tiled-accumulation kernels
-#                       (compiled on TPU, interpret fallback on CPU; oracle:
-#                       kernels.ref.clg_suffstats_ref / clg_disc_counts_ref)
+#   backend="einsum"  — XLA einsum reductions (the reference; always exact);
+#                       the leaf-shared latent-latent block is stored lazily
+#                       as [K, L, L] (RegSuffStats.sxx_hh) and expanded once
+#                       at the conjugate update
+#   backend="pallas"  — kernels.clg_stats tiled-accumulation kernels; L > 0
+#                       plates run the fused component-major
+#                       clg_suffstats_latent kernel (design [obs, E[h|z=k]])
+#                       (compiled on TPU, interpret fallback on CPU; oracles:
+#                       kernels.ref.clg_suffstats_ref /
+#                       clg_suffstats_latent_ref / clg_disc_counts_ref)
 # and an instance-chunked driver (``chunk=``) scans the body over fixed-size
-# instance blocks so the [N, F, K] / [N, K, L, L] intermediates (quad_oo,
-# e_hh, the sxx reductions) never materialize at full N.
+# instance blocks so the [N, F, K] intermediates (quad_oo, the sxx
+# reductions) never materialize at full N; nothing [N, K, L, L]-shaped is
+# formed on either backend.
 
 
 BACKENDS = ("einsum", "pallas")
@@ -223,40 +230,71 @@ def _split_moments(cp: CompiledPlate, mom: ef.RegMoments):
     return wo, wh, oo, oh, hh
 
 
-def _reduce_reg(cp: CompiledPlate, obs: jnp.ndarray, y: jnp.ndarray,
-                h_mean: jnp.ndarray, e_hh: jnp.ndarray, r: jnp.ndarray,
-                backend: str):
-    """Regression suff-stats reduction over instances -> (sxx, sxy, syy).
+def _latent_hh_shared(cp: CompiledPlate) -> bool:
+    """True when every leaf sees the same latent dims (uniform latent mask):
+    the latent-latent suff-stat block is then leaf-independent and the
+    einsum backend stores it ONCE as a lazy [K, L, L] (``RegSuffStats.
+    sxx_hh``) instead of broadcast per leaf.  Static: ``cp`` is concrete."""
+    import numpy as np
 
-    ``backend="pallas"`` routes the observed-design blocks (the [N, F, Do]
-    x responsibilities contractions) through the tiled clg_suffstats kernel;
-    the latent blocks (k-dependent designs: E[h|z=k], E[hh^T|z=k]) stay as
-    chunk-local einsums — they cannot ride a k-independent design kernel.
+    lm = np.asarray(cp.latent_mask)[:, : max(cp.layout.L, 1)]
+    return bool((lm == lm[:1]).all())
+
+
+def _reduce_reg(cp: CompiledPlate, obs: jnp.ndarray, y: jnp.ndarray,
+                h_mean: jnp.ndarray, s_hh: jnp.ndarray, r: jnp.ndarray,
+                backend: str):
+    """Regression suff-stats reduction over instances.
+
+    Returns ``(sxx, sxx_hh, sxy, syy)``; ``sxx_hh`` is None when ``sxx`` is
+    the dense [F, K, D, D] matrix, or the lazy leaf-shared [K, L, L]
+    latent-latent block (then ``sxx`` carries only the top [F, K, Do, D]
+    observed rows — see :func:`repro.core.expfam.reg_dense`).
+
+    ``backend="pallas"``: L == 0 routes through the k-independent
+    ``clg_suffstats`` kernel; L > 0 routes the WHOLE reduction — observed,
+    cross and latent blocks — through the fused component-major
+    ``clg_suffstats_latent`` kernel (design [obs, E[h|z=k]] with the
+    E[hh^T|z=k] covariance correction folded in), one pass over instances.
+    ``backend="einsum"`` is the XLA reference; its latent-latent block is
+    reduced once as [K, L, L] and never broadcast per leaf.
     """
     lay = cp.layout
     L = lay.L
+    if L == 0:
+        if backend == "pallas":
+            from repro.kernels import clg_stats
+
+            sxx, sxy, syy = clg_stats.clg_suffstats(obs, y, r)
+        else:
+            sxx = jnp.einsum("nfa,nfb,nk->fkab", obs, obs, r)
+            sxy = jnp.einsum("nfa,nf,nk->fka", obs, y, r)
+            syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
+        return sxx, None, sxy, syy
     if backend == "pallas":
         from repro.kernels import clg_stats
 
-        sxx_oo, sxy_o, syy = clg_stats.clg_suffstats(obs, y, r)
-    else:
-        sxx_oo = jnp.einsum("nfa,nfb,nk->fkab", obs, obs, r)
-        sxy_o = jnp.einsum("nfa,nf,nk->fka", obs, y, r)
-        syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
-    if L == 0:
-        return sxx_oo, sxy_o, syy
+        sxx, sxy, syy = clg_stats.clg_suffstats_latent(obs, h_mean, y, r,
+                                                       s_hh)
+        return sxx, None, sxy, syy
+    sxx_oo = jnp.einsum("nfa,nfb,nk->fkab", obs, obs, r)
+    sxy_o = jnp.einsum("nfa,nf,nk->fka", obs, y, r)
+    syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
     sxx_oh = jnp.einsum("nfa,nkl,nk->fkal", obs, h_mean, r)
-    sxx_hh = jnp.einsum("nklm,nk->klm", e_hh, r)
-    sxx_hh = jnp.broadcast_to(sxx_hh[None], (max(lay.F, 1),) + sxx_hh.shape)
-    top = jnp.concatenate([sxx_oo, sxx_oh], axis=-1)
-    bot = jnp.concatenate(
-        [jnp.swapaxes(sxx_oh, -1, -2), sxx_hh], axis=-1
-    )
-    sxx = jnp.concatenate([top, bot], axis=-2)               # [F,K,D,D]
+    sxx_top = jnp.concatenate([sxx_oo, sxx_oh], axis=-1)     # [F,K,Do,D]
+    sxx_hh = (jnp.einsum("nkl,nkm,nk->klm", h_mean, h_mean, r)
+              + r.sum(0)[:, None, None] * s_hh)              # [K,L,L]
     sxy = jnp.concatenate(
         [sxy_o, jnp.einsum("nkl,nf,nk->fkl", h_mean, y, r)], axis=-1
     )
-    return sxx, sxy, syy
+    if not _latent_hh_shared(cp):
+        # per-leaf latent masks (CustomGlobalLocalModel): the hh block is
+        # leaf-dependent after masking — fall back to the dense matrix
+        hh = jnp.broadcast_to(sxx_hh[None],
+                              (max(lay.F, 1),) + sxx_hh.shape)
+        bot = jnp.concatenate([jnp.swapaxes(sxx_oh, -1, -2), hh], axis=-1)
+        return jnp.concatenate([sxx_top, bot], axis=-2), None, sxy, syy
+    return sxx_top, sxx_hh, sxy, syy
 
 
 def _reduce_disc(cp: CompiledPlate, xd: jnp.ndarray, r: jnp.ndarray,
@@ -305,19 +343,25 @@ def _local_step_body(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
             "fkal,nfa->nkl", oh, obs
         )
         h_mean = jnp.einsum("klm,nkm->nkl", S, b)              # [N, K, L]
-        e_hh = S[None] + h_mean[..., :, None] * h_mean[..., None, :]  # [N,K,L,L]
-        quad_h = jnp.einsum("fklm,nklm->nfk", hh, e_hh)
+        # E[hh^T | z=k] = S_k + E[h]E[h]^T splits every quadratic into an
+        # instance-independent [K] piece plus a mean-outer-product piece, so
+        # nothing [N, K, L, L]-shaped is ever materialized.
+        quad_h = (jnp.einsum("fklm,klm->fk", hh, S)[None]
+                  + jnp.einsum("fklm,nkl,nkm->nfk", hh, h_mean, h_mean))
         cross = 2.0 * jnp.einsum("nfa,fkal,nkl->nfk", obs, oh, h_mean)
         lin_h = jnp.einsum("nf,fkl,nkl->nfk", y, wh, h_mean) * 2.0
-        kl_h = ef.gaussian_kl_standard(h_mean, jnp.broadcast_to(
-            S[None], (N, K, L, L)))                            # [N, K]
+        # KL(q(H|z=k) || N(0, I)): covariance terms depend only on k
+        _, logdet_s = jnp.linalg.slogdet(S)                    # [K]
+        tr_s = jnp.trace(S, axis1=-2, axis2=-1)                # [K]
+        kl_h = 0.5 * ((h_mean * h_mean).sum(-1)
+                      + (tr_s - L - logdet_s)[None])           # [N, K]
     else:
         quad_h = jnp.zeros((N, max(lay.F, 1), K))
         cross = jnp.zeros_like(quad_h)
         lin_h = jnp.zeros_like(quad_h)
         kl_h = jnp.zeros((N, K))
         h_mean = jnp.zeros((N, K, 1))
-        e_hh = jnp.zeros((N, K, 1, 1))
+        S = jnp.zeros((K, 1, 1))
 
     # E_q[log N(y_f | w^T d, lam^-1)] per leaf/component
     ll = 0.5 * (
@@ -356,14 +400,21 @@ def _local_step_body(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
 
     # expected design outer products per leaf (masked dims handled by moments;
     # stats are masked below so padded dims keep their prior)
-    sxx, sxy, syy = _reduce_reg(cp, obs, y, h_mean, e_hh, r, backend)
+    sxx, sxx_hh, sxy, syy = _reduce_reg(cp, obs, y, h_mean, S, r, backend)
     nw = jnp.broadcast_to(counts[None], syy.shape)
 
     dmask = design_mask(cp)
     live = 1.0 if lay.F > 0 else 0.0  # inert regression block for pure-discrete
-    sxx = sxx * dmask[:, None, :, None] * dmask[:, None, None, :] * live
+    Do = sxx.shape[-2]                # = D dense, 1 + P lazy (static)
+    sxx = (sxx * dmask[:, None, :Do, None] * dmask[:, None, None, :] * live)
+    if sxx_hh is not None:
+        # lazy leaf-shared latent block; mask row is uniform across leaves
+        # (guaranteed by _latent_hh_shared in _reduce_reg)
+        lmask = dmask[0, Do:]
+        sxx_hh = sxx_hh * lmask[None, :, None] * lmask[None, None, :] * live
     sxy = sxy * dmask[:, None, :] * live
-    reg_stats = ef.RegSuffStats(sxx=sxx, sxy=sxy, syy=syy * live, n=nw * live)
+    reg_stats = ef.RegSuffStats(sxx=sxx, sxy=sxy, syy=syy * live, n=nw * live,
+                                sxx_hh=sxx_hh)
 
     if lay.Fd > 0:
         disc_counts = _reduce_disc(cp, xd, r, backend)

@@ -429,6 +429,156 @@ def weak_marginalize(p: CGPotential, keep_disc: Sequence[str],
     return to_canonical(out)
 
 
+# -- shape-bucketed batching --------------------------------------------------
+#
+# Junction-tree propagation issues one solve/slogdet (marginalize_cont) or one
+# moment-match chain (weak_marginalize) PER CLIQUE.  Cliques at the same tree
+# level are independent, and cliques of equal shape signature —
+# (n_cont, n_discrete_configs, batch) — can ride the SAME stacked linalg call:
+# each member's tables are permuted to a canonical layout (kept continuous
+# heads first, kept discrete axes major), flattened, stacked along a pseudo
+# batch axis and pushed through the ordinary scalar operation once, then
+# unstacked and relabeled.  Per-clique work becomes cheap gathers/transposes;
+# the dispatch-heavy solve/slogdet/inv ops drop to one per bucket per level.
+
+
+def _cfg(p: CGPotential) -> int:
+    return int(np.prod(p.cards)) if p.cards else 1
+
+
+def marginalize_cont_many(
+    items: Sequence[Tuple[CGPotential, Sequence[str]]]
+) -> list:
+    """Batched :func:`marginalize_cont` over same-shaped potentials.
+
+    ``items``: (potential, continuous names to drop) pairs.  Potentials
+    bucketed by (|cscope|, |drop|, n_configs, B) run ONE stacked
+    solve/slogdet; singletons fall through to the scalar op.  Output order
+    matches input order and every entry equals its scalar counterpart.
+    """
+    out: list = [None] * len(items)
+    buckets: Dict[Tuple[int, int, int, int], list] = {}
+    for i, (p, drop) in enumerate(items):
+        dropt = tuple(v for v in p.cscope if v in set(drop))
+        if not dropt:
+            out[i] = p
+            continue
+        key = (len(p.cscope), len(dropt), _cfg(p), p.g.shape[0])
+        buckets.setdefault(key, []).append((i, p, dropt))
+    for (n, nd, cfg, B), members in buckets.items():
+        if len(members) == 1:
+            i, p, dropt = members[0]
+            out[i] = marginalize_cont(p, dropt)
+            continue
+        nk = n - nd
+        gs, hs, Ks, keeps = [], [], [], []
+        for i, p, dropt in members:
+            keep = tuple(v for v in p.cscope if v not in dropt)
+            keeps.append(keep)
+            order = np.asarray([p.cscope.index(v) for v in keep + dropt],
+                               np.int32)
+            gs.append(p.g.reshape(B * cfg))
+            hs.append(p.h[..., order].reshape(B * cfg, n))
+            Ks.append(p.K[..., order[:, None], order[None, :]]
+                      .reshape(B * cfg, n, n))
+        names = tuple(f"_c{j}" for j in range(n))
+        q = CGPotential((), (), names,
+                        jnp.concatenate(gs), jnp.concatenate(hs),
+                        jnp.concatenate(Ks))
+        m = marginalize_cont(q, names[nk:])
+        g = m.g.reshape(len(members), B * cfg)
+        h = m.h.reshape(len(members), B * cfg, nk)
+        K = m.K.reshape(len(members), B * cfg, nk, nk)
+        for j, (i, p, dropt) in enumerate(members):
+            shp = (B,) + p.cards
+            out[i] = CGPotential(
+                p.dscope, p.cards, keeps[j], g[j].reshape(shp),
+                h[j].reshape(shp + (nk,)), K[j].reshape(shp + (nk, nk)))
+    return out
+
+
+def weak_marginalize_many(
+    items: Sequence[Tuple[CGPotential, Sequence[str], Sequence[str]]], *,
+    use_pallas: bool = False,
+) -> list:
+    """Batched :func:`weak_marginalize` over same-shaped beliefs.
+
+    ``items``: (belief, keep_disc, keep_cont) triples.  Pure-continuous
+    drops route through :func:`marginalize_cont_many`; table-only beliefs
+    logsumexp per item (already one cheap op); the general moment-matching
+    path buckets by (|cscope|, kept heads, kept configs M, dropped configs
+    N, B) and runs the to_moment / moment_match / to_canonical chain ONCE
+    per bucket on stacked [S*B, M, N, ...] tables.
+    """
+    out: list = [None] * len(items)
+    cont_idx: list = []
+    cont_items: list = []
+    buckets: Dict[Tuple[int, int, int, int, int], list] = {}
+    for i, (p, keep_disc, keep_cont) in enumerate(items):
+        keep_d, keep_c = set(keep_disc), set(keep_cont)
+        drop_d = tuple(v for v in p.dscope if v not in keep_d)
+        drop_c = tuple(v for v in p.cscope if v not in keep_c)
+        if not drop_d:
+            cont_idx.append(i)
+            cont_items.append((p, drop_c))
+            continue
+        if not p.cscope:
+            out[i] = marginalize_disc(p, drop_d)
+            continue
+        keep_ds = tuple(v for v in p.dscope if v in keep_d)
+        kcards = tuple(p.cards[p.dscope.index(v)] for v in keep_ds)
+        M = int(np.prod(kcards)) if kcards else 1
+        N = _cfg(p) // M
+        n = len(p.cscope)
+        nkc = n - len(drop_c)
+        key = (n, nkc, M, N, p.g.shape[0])
+        buckets.setdefault(key, []).append((i, p, keep_ds, drop_d, drop_c))
+    for i, r in zip(cont_idx, marginalize_cont_many(cont_items)):
+        out[i] = r
+    for (n, nkc, M, N, B), members in buckets.items():
+        if len(members) == 1:
+            i, p, keep_ds, drop_d, drop_c = members[0]
+            out[i] = weak_marginalize(p, keep_ds,
+                                      tuple(v for v in p.cscope
+                                            if v not in set(drop_c)),
+                                      use_pallas=use_pallas)
+            continue
+        gs, hs, Ks, metas = [], [], [], []
+        for i, p, keep_ds, drop_d, drop_c in members:
+            keep_cs = tuple(v for v in p.cscope if v not in set(drop_c))
+            nb = 1 + len(p.dscope)
+            perm = (0,) + tuple(1 + p.dscope.index(v)
+                                for v in keep_ds + drop_d)
+            corder = np.asarray(
+                [p.cscope.index(v)
+                 for v in keep_cs + tuple(v for v in p.cscope
+                                          if v in set(drop_c))], np.int32)
+            gs.append(jnp.transpose(p.g, perm).reshape(B, M, N))
+            hs.append(jnp.transpose(p.h, perm + (nb,))[..., corder]
+                      .reshape(B, M, N, n))
+            Ks.append(jnp.transpose(p.K, perm + (nb, nb + 1))
+                      [..., corder[:, None], corder[None, :]]
+                      .reshape(B, M, N, n, n))
+            kcards = tuple(p.cards[p.dscope.index(v)] for v in keep_ds)
+            metas.append((keep_ds, kcards, keep_cs))
+        names = tuple(f"_c{j}" for j in range(n))
+        q = CGPotential(("_keep", "_drop"), (M, N), names,
+                        jnp.concatenate(gs), jnp.concatenate(hs),
+                        jnp.concatenate(Ks))
+        r = weak_marginalize(q, ("_keep",), names[:nkc],
+                             use_pallas=use_pallas)
+        g = r.g.reshape(len(members), B, M)
+        h = r.h.reshape(len(members), B, M, nkc)
+        K = r.K.reshape(len(members), B, M, nkc, nkc)
+        for j, (i, p, keep_ds, drop_d, drop_c) in enumerate(members):
+            keep_ds_j, kcards, keep_cs = metas[j]
+            shp = (B,) + kcards
+            out[i] = CGPotential(
+                keep_ds_j, kcards, keep_cs, g[j].reshape(shp),
+                h[j].reshape(shp + (nkc,)), K[j].reshape(shp + (nkc, nkc)))
+    return out
+
+
 # -- queries ------------------------------------------------------------------
 
 

@@ -62,8 +62,13 @@ class JunctionTreeEngine:
     """Paper §3.4 inference API, exact flavor."""
 
     def __init__(self, bn: Optional[BayesianNetwork] = None, *,
-                 use_pallas: Optional[bool] = None) -> None:
+                 use_pallas: Optional[bool] = None,
+                 bucketed: bool = True) -> None:
         self.use_pallas = F.USE_PALLAS if use_pallas is None else use_pallas
+        # strong pipeline: batch per-clique solve/slogdet/weak-marginal calls
+        # through shape buckets per tree level (False = one call per clique,
+        # the reference schedule; results are identical — tested)
+        self.bucketed = bucketed
         self.bn: Optional[BayesianNetwork] = None
         self.jt: Optional[JunctionTree] = None
         self.evidence: Dict[str, jnp.ndarray] = {}
@@ -327,6 +332,15 @@ class JunctionTreeEngine:
 
     def _propagate_strong(self, names: Tuple[str, ...],
                           values: Tuple[jnp.ndarray, ...]):
+        """Level-ordered two-pass propagation.
+
+        Cliques at the same tree depth are independent given the previous
+        level, so their canonical-form linalg (the collect pass's exact
+        Gaussian integrals, the distribute pass's weak marginals) is batched
+        through shape buckets — one stacked solve/slogdet/moment-match per
+        (n_cont, n_config) bucket per level instead of one per clique
+        (``bucketed=False`` restores the per-clique reference schedule).
+        """
         pots = self._strong_potentials(names, values)
         cscopes = self._run_cscopes(names)
         up = self.use_pallas
@@ -334,38 +348,59 @@ class JunctionTreeEngine:
         children: Dict[int, List[int]] = {}
         for u, p, _ in self._collect:
             children.setdefault(p, []).append(u)
+        depth = {root: 0}
+        for u, p, _ in self._distribute:     # preorder: parent before child
+            depth[u] = depth[p] + 1
+        by_level: Dict[int, List[Tuple[int, int, Tuple[str, ...]]]] = {}
+        for u, p, sep in self._collect:
+            by_level.setdefault(depth[u], []).append((u, p, sep))
         nmsg: Dict[Tuple[int, int], CG.CGPotential] = {}
         absorbed: List[CG.CGPotential] = list(pots)
-        # collect: leaves -> strong root, EXACT strong marginals: integrate
+        # collect: deepest level -> root, EXACT strong marginals: integrate
         # the continuous residual, then sum the (now table-only) discrete one
-        for u, p, sep in self._collect:
-            f = absorbed[u]
-            for w in children.get(u, ()):
-                f = CG.combine(f, nmsg[(w, u)])
-            absorbed[u] = f
-            sep_c = tuple(v for v in cscopes[u] if v in set(sep))
-            sep_d = tuple(v for v in self._scopes[u] if v in set(sep))
-            m = CG.marginalize_cont(
-                f, tuple(v for v in f.cscope if v not in set(sep_c)))
-            m = CG.marginalize_disc(
-                m, tuple(v for v in m.dscope if v not in set(sep_d)))
-            nmsg[(u, p)] = m
+        for lev in sorted(by_level, reverse=True):
+            entries = by_level[lev]
+            items = []
+            for u, p, sep in entries:
+                f = absorbed[u]
+                for w in children.get(u, ()):
+                    f = CG.combine(f, nmsg[(w, u)])
+                absorbed[u] = f
+                sep_c = {v for v in cscopes[u] if v in set(sep)}
+                items.append(
+                    (f, tuple(v for v in f.cscope if v not in sep_c)))
+            ms = (CG.marginalize_cont_many(items) if self.bucketed
+                  else [CG.marginalize_cont(f_, d_) for f_, d_ in items])
+            for (u, p, sep), m in zip(entries, ms):
+                sep_d = {v for v in self._scopes[u] if v in set(sep)}
+                nmsg[(u, p)] = CG.marginalize_disc(
+                    m, tuple(v for v in m.dscope if v not in sep_d))
         beliefs: List[Optional[CG.CGPotential]] = [None] * len(pots)
         f = absorbed[root]
         for w in children.get(root, ()):
             f = CG.combine(f, nmsg[(w, root)])
         beliefs[root] = f
         logz = CG.log_norm(f)
-        # distribute: root -> leaves, WEAK (moment-matched) marginals
+        # distribute: root -> leaves, WEAK (moment-matched) marginals; all
+        # edges leaving one level share one bucketed weak-marginal pass
+        by_plevel: Dict[int, List[Tuple[int, int, Tuple[str, ...]]]] = {}
         for u, p, sep in self._distribute:
-            sep_set = set(sep)
-            sep_d = tuple(v for v in self._scopes[p] if v in sep_set)
-            sep_c = tuple(v for v in cscopes[p] if v in sep_set)
-            star = CG.weak_marginalize(beliefs[p], sep_d, sep_c,
-                                       use_pallas=up)
-            down = CG.divide(star, nmsg[(u, p)])
-            f = absorbed[u]
-            beliefs[u] = CG.combine(f, down)
+            by_plevel.setdefault(depth[p], []).append((u, p, sep))
+        for lev in sorted(by_plevel):
+            entries = by_plevel[lev]
+            items = []
+            for u, p, sep in entries:
+                sep_set = set(sep)
+                sep_d = tuple(v for v in self._scopes[p] if v in sep_set)
+                sep_c = tuple(v for v in cscopes[p] if v in sep_set)
+                items.append((beliefs[p], sep_d, sep_c))
+            stars = (CG.weak_marginalize_many(items, use_pallas=up)
+                     if self.bucketed
+                     else [CG.weak_marginalize(b_, d_, c_, use_pallas=up)
+                           for b_, d_, c_ in items])
+            for (u, p, sep), star in zip(entries, stars):
+                down = CG.divide(star, nmsg[(u, p)])
+                beliefs[u] = CG.combine(absorbed[u], down)
         flat = tuple((b.g, b.h, b.K) for b in beliefs)
         return flat, logz
 

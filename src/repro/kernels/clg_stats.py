@@ -133,6 +133,116 @@ def clg_suffstats(d: jnp.ndarray, y: jnp.ndarray, r: jnp.ndarray, *,
     return sxx, sxy, syy
 
 
+def _latent_kernel(o_ref, hm_ref, y_ref, r_ref, shh_ref,
+                   sxx_ref, sxy_ref, syy_ref,
+                   sxx_scr, sxy_scr, syy_scr, rsum_scr, *,
+                   nb: int, Do: int, L: int):
+    bi = pl.program_id(2)
+
+    @pl.when(bi == 0)
+    def _init():
+        sxx_scr[...] = jnp.zeros_like(sxx_scr)
+        sxy_scr[...] = jnp.zeros_like(sxy_scr)
+        syy_scr[...] = jnp.zeros_like(syy_scr)
+        rsum_scr[...] = jnp.zeros_like(rsum_scr)
+
+    o = o_ref[0].astype(jnp.float32)          # [bn, Do]  (leaf f's design)
+    hm = hm_ref[0].astype(jnp.float32)        # [bn, L]   (component k's E[h])
+    y = y_ref[0].astype(jnp.float32)          # [bn]
+    r = r_ref[0].astype(jnp.float32)          # [bn]
+
+    u = jnp.concatenate([o, hm], axis=1)      # [bn, D] component-major design
+    uw = u * r[:, None]
+    sxx_scr[...] += jax.lax.dot_general(
+        uw, u, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [D, D]
+    sxy_scr[...] += (uw * y[:, None]).sum(0)  # [D]
+    syy_scr[0] += (r * y * y).sum()
+    rsum_scr[0] += r.sum()
+
+    @pl.when(bi == nb - 1)
+    def _final():
+        # E[hh^T | z=k] = S_k + E[h]E[h]^T: the outer products above cover the
+        # mean part; the instance-independent covariance enters as rsum * S_k
+        # padded into the latent-latent block.
+        D = Do + L
+        corr = jnp.zeros((D, D), jnp.float32)
+        corr = corr.at[Do:, Do:].set(shh_ref[0])
+        sxx_ref[0, 0] = sxx_scr[...] + rsum_scr[0] * corr
+        sxy_ref[0, 0] = sxy_scr[...]
+        syy_ref[0, 0] = syy_scr[0]
+
+
+def clg_suffstats_latent(obs: jnp.ndarray, h_mean: jnp.ndarray,
+                         y: jnp.ndarray, r: jnp.ndarray, s_hh: jnp.ndarray, *,
+                         block: int = 512, interpret: Optional[bool] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused latent-plate (FA/PPCA) suff-stats: component-major designs.
+
+    obs: [N, F, Do] observed design vectors; h_mean: [N, K, L] per-component
+    posterior means E[h | z=k]; y: [N, F]; r: [N, K]; s_hh: [K, L, L] the
+    shared posterior covariance S_k of q(H | z=k) (so
+    E[hh^T | z=k] = S_k + E[h]E[h]^T).
+
+    Returns the FULL regression-moment triple over the concatenated design
+    d[n,f,k] = [obs[n,f], E[h|z=k]] with the E[hh^T] covariance correction
+    folded into the latent-latent block:
+
+        sxx [F, K, D, D], sxy [F, K, D], syy [F, K],  D = Do + L
+
+    One pass over instances; nothing [N, K, L, L]-shaped is ever formed
+    (oracle: kernels.ref.clg_suffstats_latent_ref).
+    """
+    interpret = _resolve_interpret(interpret)
+    N, F, Do = obs.shape
+    K, L = h_mean.shape[1], h_mean.shape[2]
+    D = Do + L
+    block = min(block, N)
+    nb = pl.cdiv(N, block)
+    pad = nb * block - N
+    if pad:
+        obs = jnp.pad(obs, ((0, pad), (0, 0), (0, 0)))
+        h_mean = jnp.pad(h_mean, ((0, pad), (0, 0), (0, 0)))
+        y = jnp.pad(y, ((0, pad), (0, 0)))
+        r = jnp.pad(r, ((0, pad), (0, 0)))  # r = 0 pads: contribute nothing
+
+    of = jnp.moveaxis(obs, 1, 0)              # [F, N, Do]
+    hk = jnp.moveaxis(h_mean, 1, 0)           # [K, N, L]
+    yf = jnp.moveaxis(y, 1, 0)                # [F, N]
+    rk = jnp.moveaxis(r, 1, 0)                # [K, N]
+    shh = jnp.asarray(s_hh, jnp.float32)      # [K, L, L]
+
+    sxx, sxy, syy = pl.pallas_call(
+        functools.partial(_latent_kernel, nb=nb, Do=Do, L=L),
+        grid=(F, K, nb),
+        in_specs=[
+            pl.BlockSpec((1, block, Do), lambda f, k, bi: (f, bi, 0)),
+            pl.BlockSpec((1, block, L), lambda f, k, bi: (k, bi, 0)),
+            pl.BlockSpec((1, block), lambda f, k, bi: (f, bi)),
+            pl.BlockSpec((1, block), lambda f, k, bi: (k, bi)),
+            pl.BlockSpec((1, L, L), lambda f, k, bi: (k, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, D, D), lambda f, k, bi: (f, k, 0, 0)),
+            pl.BlockSpec((1, 1, D), lambda f, k, bi: (f, k, 0)),
+            pl.BlockSpec((1, 1), lambda f, k, bi: (f, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((F, K, D, D), jnp.float32),
+            jax.ShapeDtypeStruct((F, K, D), jnp.float32),
+            jax.ShapeDtypeStruct((F, K), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),
+            pltpu.VMEM((D,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(of, hk, yf, rk, shh)
+    return sxx, sxy, syy
+
+
 def _disc_kernel(x_ref, r_ref, out_ref, acc_scr, *, nb: int, C: int):
     bi = pl.program_id(2)
 

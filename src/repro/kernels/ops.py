@@ -14,7 +14,8 @@ import jax
 
 from repro.kernels.clg_stats import (_resolve_interpret,
                                      clg_disc_counts as _clg_disc,
-                                     clg_suffstats as _clg)
+                                     clg_suffstats as _clg,
+                                     clg_suffstats_latent as _clg_latent)
 from repro.kernels.factor_ops import (cg_weak_marg as _cgweak,
                                       evidence_select as _evsel,
                                       log_marginalize as _logmarg,
@@ -39,6 +40,12 @@ def ssd_scan(x, dt, A, B, C, chunk=128):
 @partial(jax.jit, static_argnames=("block",))
 def clg_suffstats(d, y, r, *, block=512):
     return _clg(d, y, r, block=block, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def clg_suffstats_latent(obs, h_mean, y, r, s_hh, *, block=512):
+    return _clg_latent(obs, h_mean, y, r, s_hh, block=block,
+                       interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("C", "block"))

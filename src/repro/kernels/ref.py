@@ -30,6 +30,29 @@ def clg_suffstats_ref(d: jnp.ndarray, y: jnp.ndarray, r: jnp.ndarray
     return sxx, sxy, syy
 
 
+def clg_suffstats_latent_ref(obs: jnp.ndarray, h_mean: jnp.ndarray,
+                             y: jnp.ndarray, r: jnp.ndarray,
+                             s_hh: jnp.ndarray
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels.clg_stats.clg_suffstats_latent: the three-einsum
+    latent path over the component-major design d[n,f,k] = [obs, E[h|z=k]]
+    with the E[hh^T|z=k] = S_k + E[h]E[h]^T covariance correction."""
+    F = obs.shape[1]
+    sxx_oo = jnp.einsum("nfa,nfb,nk->fkab", obs, obs, r)
+    sxx_oh = jnp.einsum("nfa,nkl,nk->fkal", obs, h_mean, r)
+    sxx_hh = (jnp.einsum("nkl,nkm,nk->klm", h_mean, h_mean, r)
+              + r.sum(0)[:, None, None] * s_hh)               # [K, L, L]
+    sxx_hh = jnp.broadcast_to(sxx_hh[None], (F,) + sxx_hh.shape)
+    top = jnp.concatenate([sxx_oo, sxx_oh], axis=-1)
+    bot = jnp.concatenate([jnp.swapaxes(sxx_oh, -1, -2), sxx_hh], axis=-1)
+    sxx = jnp.concatenate([top, bot], axis=-2)
+    sxy = jnp.concatenate(
+        [jnp.einsum("nfa,nf,nk->fka", obs, y, r),
+         jnp.einsum("nkl,nf,nk->fkl", h_mean, y, r)], axis=-1)
+    syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
+    return sxx, sxy, syy
+
+
 def clg_disc_counts_ref(xd: jnp.ndarray, r: jnp.ndarray, C: int) -> jnp.ndarray:
     """Oracle for kernels.clg_stats.clg_disc_counts."""
     import jax.nn

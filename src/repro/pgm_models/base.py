@@ -60,7 +60,8 @@ class Model:
     # -- learning (paper Code Fragments 7, 9, 12) --------------------------------
 
     def update_model(self, data, *, sweeps: int = 100, tol: float = 1e-5,
-                     mesh=None, data_axes: Tuple[str, ...] = ("data",)) -> float:
+                     mesh=None, data_axes: Tuple[str, ...] = ("data",),
+                     stream_window: Optional[int] = None) -> float:
         """Fit/refine the posterior on ``data``.
 
         Repeated calls implement Bayesian updating (Eq. 3): the previous
@@ -71,10 +72,11 @@ class Model:
         replayed by ``stream_fit`` in ONE jitted ``lax.scan`` (drift test +
         tempering resident on device); ragged chunk shapes fall back to the
         per-batch ``stream_update`` loop.  Single-chunk streams, raw arrays
-        and ``Batch``es keep the one-shot VMP fit below.  Note the stacked
-        replay is whole-stream-resident by design (the scan consumes
-        [T, B, F] on device) — for streams larger than memory, drive
-        ``streaming.stream_update`` directly, one batch at a time.
+        and ``Batch``es keep the one-shot VMP fit below.  The stacked
+        replay is whole-stream-resident by default (the scan consumes
+        [T, B, F] on device); ``stream_window=w`` keeps the stack on the
+        host and replays device-sliced windows of w batches instead —
+        bounded device memory for streams larger than memory.
         """
         if (mesh is None and isinstance(data, DataStream)
                 and type(self).supervised_r is Model.supervised_r):
@@ -82,7 +84,8 @@ class Model:
                       for xc, xd in data.chunks()]
             if len(chunks) > 1:
                 return self._update_model_stream(chunks, sweeps=sweeps,
-                                                 tol=tol)
+                                                 tol=tol,
+                                                 window=stream_window)
             if chunks:
                 # single chunk: reuse it instead of re-running the source
                 # (sources need not be restartable)
@@ -119,21 +122,25 @@ class Model:
         self.n_seen += int(batch.mask.sum())
         return e
 
-    def _update_model_stream(self, chunks, *, sweeps: int, tol: float
-                             ) -> float:
+    def _update_model_stream(self, chunks, *, sweeps: int, tol: float,
+                             window: Optional[int] = None) -> float:
         """Streaming Bayesian updating over pre-chunked data (ROADMAP item:
         ``stream_fit`` underneath ``update_model``)."""
+        import numpy as np
+
         from repro.core import streaming
 
         state = streaming.stream_init(self._chained_prior, self.posterior)
         stacked = len({(xc.shape, xd.shape) for xc, xd in chunks}) == 1
         if stacked:
-            xcs = jnp.stack([xc for xc, _ in chunks])
-            xds = jnp.stack([xd for _, xd in chunks])
+            # windowed replay keeps the stack host-resident (numpy)
+            stack = np.stack if window is not None else jnp.stack
+            xcs = stack([xc for xc, _ in chunks])
+            xds = stack([xd for _, xd in chunks])
             state, info = streaming.stream_fit(
                 self.cp, self.prior, state, xcs, xds,
                 sweeps=sweeps, tol=tol, backend=self.backend,
-                chunk=self.chunk)
+                chunk=self.chunk, window=window)
             e = float(info["elbo"][-1])
         else:
             for xc, xd in chunks:

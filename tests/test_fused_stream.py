@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import expfam as ef
 from repro.core import streaming, vmp
 from repro.core.dag import PlateSpec
 from repro.data.synthetic import drift_stream, gmm_stream, nb_stream
@@ -25,9 +26,12 @@ def _mixed_setup(n=600, seed=0):
 
 
 def _assert_stats_close(a, b, label, atol=5e-4, rtol=1e-4):
+    # densify: the einsum backend stores the latent-latent block lazily as
+    # [K, L, L] while the fused pallas kernel emits the full matrix
+    ra, rb = ef.reg_dense(a.reg), ef.reg_dense(b.reg)
     for la, lb, name in [
-        (a.counts, b.counts, "counts"), (a.reg.sxx, b.reg.sxx, "sxx"),
-        (a.reg.sxy, b.reg.sxy, "sxy"), (a.reg.syy, b.reg.syy, "syy"),
+        (a.counts, b.counts, "counts"), (ra.sxx, rb.sxx, "sxx"),
+        (ra.sxy, rb.sxy, "sxy"), (ra.syy, rb.syy, "syy"),
         (a.disc, b.disc, "disc"), (a.n, b.n, "n"),
         (a.local_elbo, b.local_elbo, "local_elbo"),
     ]:
@@ -50,20 +54,71 @@ def test_local_step_backend_parity_mixed_plate(backend, chunk):
 
 
 @pytest.mark.parametrize("backend", ["einsum", "pallas"])
-def test_local_step_parity_latent_dim(backend):
-    """FA/PPCA plates (L > 0): the [N, K, L, L] e_hh path stays correct
-    under chunked accumulation on both backends."""
-    spec = PlateSpec(n_features=4, latent_card=0, latent_dim=2)
+@pytest.mark.parametrize("L,latent_card", [(1, 0), (2, 3), (8, 2)])
+def test_local_step_parity_latent_dim(backend, L, latent_card):
+    """FA/PPCA plates (L > 0): the fused component-major kernel and the
+    lazy-latent-block einsum path match the unchunked reference under
+    chunked accumulation, across latent dims and with padded/masked tails
+    (300 % 128 != 0 also exercises the kernel's instance padding)."""
+    spec = PlateSpec(n_features=4, latent_card=latent_card, latent_dim=L)
     cp = vmp.compile_plate(spec)
     prior = vmp.default_prior(cp)
     post = vmp.symmetry_broken(prior, jax.random.PRNGKey(3))
     xc = jax.random.normal(jax.random.PRNGKey(4), (300, 4))
     xd = jnp.zeros((300, 0), jnp.int32)
-    mask = jnp.ones(300)
-    ref_stats, _ = vmp.local_step(cp, post, xc, xd, mask)
-    stats, _ = vmp.local_step(cp, post, xc, xd, mask,
+    mask = jnp.concatenate([jnp.ones(260), jnp.zeros(40)])
+    ref_stats, ref_r = vmp.local_step(cp, post, xc, xd, mask)
+    stats, r = vmp.local_step(cp, post, xc, xd, mask,
                               backend=backend, chunk=128)
-    _assert_stats_close(ref_stats, stats, backend)
+    _assert_stats_close(ref_stats, stats, f"{backend}/L{L}")
+    np.testing.assert_allclose(np.asarray(ref_r), np.asarray(r), atol=1e-5)
+
+
+def test_local_step_latent_lazy_vs_fused_forms():
+    """The einsum backend stores the leaf-shared latent-latent block ONCE
+    ([K, L, L], no per-leaf broadcast); the fused pallas kernel emits the
+    dense matrix; reg_dense reconciles them exactly."""
+    spec = PlateSpec(n_features=5, latent_card=3, latent_dim=4)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    post = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+    xc = jax.random.normal(jax.random.PRNGKey(1), (200, 5))
+    xd = jnp.zeros((200, 0), jnp.int32)
+    se, _ = vmp.local_step(cp, post, xc, xd, jnp.ones(200))
+    sp, _ = vmp.local_step(cp, post, xc, xd, jnp.ones(200),
+                           backend="pallas")
+    lay = cp.layout
+    assert se.reg.sxx_hh is not None
+    assert se.reg.sxx_hh.shape == (lay.K, lay.L, lay.L)
+    assert se.reg.sxx.shape == (lay.F, lay.K, 1 + lay.P, lay.D)
+    assert sp.reg.sxx_hh is None
+    assert sp.reg.sxx.shape == (lay.F, lay.K, lay.D, lay.D)
+    dense = ef.reg_dense(se.reg)
+    assert dense.sxx.shape == sp.reg.sxx.shape
+    # the dense matrix is symmetric and its hh block is leaf-shared
+    np.testing.assert_allclose(np.asarray(dense.sxx),
+                               np.asarray(np.swapaxes(dense.sxx, -1, -2)),
+                               atol=1e-6)
+    # both feed the same conjugate update
+    pe = vmp.global_update(prior, se)
+    pp = vmp.global_update(prior, sp)
+    np.testing.assert_allclose(np.asarray(pe.reg.m), np.asarray(pp.reg.m),
+                               atol=1e-4)
+
+
+def test_local_step_latent_nonuniform_mask_falls_back_dense():
+    """Per-leaf latent masks (CustomGlobalLocalModel) keep the dense,
+    leaf-dependent hh block on every backend — and they still agree."""
+    spec = PlateSpec(n_features=3, latent_card=2, latent_dim=3)
+    cp = vmp.compile_plate(spec, jnp.eye(3))
+    post = vmp.symmetry_broken(vmp.default_prior(cp), jax.random.PRNGKey(2))
+    xc = jax.random.normal(jax.random.PRNGKey(5), (150, 3))
+    xd = jnp.zeros((150, 0), jnp.int32)
+    se, _ = vmp.local_step(cp, post, xc, xd, jnp.ones(150))
+    sp, _ = vmp.local_step(cp, post, xc, xd, jnp.ones(150),
+                           backend="pallas")
+    assert se.reg.sxx_hh is None and sp.reg.sxx_hh is None
+    _assert_stats_close(se, sp, "nonuniform-mask")
 
 
 def test_local_step_chunked_r_fixed():
@@ -192,6 +247,78 @@ def test_stream_fit_pallas_backend_mixed_plate():
                                np.asarray(got.post.disc.alpha),
                                rtol=1e-4, atol=1e-4)
     assert np.isfinite(np.asarray(infos["elbo"])).all()
+
+
+def test_stream_fit_latent_plate_pallas_backend():
+    """FA/PPCA plates (L > 0) ride the same donated single-scan streaming
+    program as mixtures, on the fused kernel backend."""
+    spec = PlateSpec(n_features=4, latent_card=2, latent_dim=2)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    init = vmp.symmetry_broken(prior, jax.random.PRNGKey(1))
+    xc = jax.random.normal(jax.random.PRNGKey(2), (240, 4))
+    xcs = xc.reshape(4, 60, 4)
+    xds = jnp.zeros((4, 60, 0), jnp.int32)
+
+    ref, _ = streaming.stream_fit(cp, prior,
+                                  streaming.stream_init(prior, init),
+                                  xcs, xds, sweeps=3)
+    got, infos = streaming.stream_fit(cp, prior,
+                                      streaming.stream_init(prior, init),
+                                      xcs, xds, sweeps=3,
+                                      backend="pallas", chunk=32)
+    np.testing.assert_allclose(np.asarray(ref.post.reg.m),
+                               np.asarray(got.post.reg.m),
+                               rtol=1e-4, atol=1e-4)
+    assert np.isfinite(np.asarray(infos["elbo"])).all()
+
+
+def test_dvmp_latent_plate_matches_single_device():
+    """d-VMP psums the lazy latent-block message pytree correctly: the
+    mesh fit equals the single-device fit on an FA-mixture plate."""
+    from repro.core import dvmp
+    from repro.core.compat import make_mesh
+
+    spec = PlateSpec(n_features=3, latent_card=2, latent_dim=2)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    init = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+    xc = jax.random.normal(jax.random.PRNGKey(3), (128, 3))
+    xd = jnp.zeros((128, 0), jnp.int32)
+    mesh = make_mesh((1,), ("data",))
+    single = vmp.vmp_fit(cp, prior, init, xc, xd, 10, 0.0)
+    dist = dvmp.dvmp_fit(cp, prior, init, xc, xd, mesh, ("data",), 10, 0.0)
+    np.testing.assert_allclose(np.asarray(single.post.reg.m),
+                               np.asarray(dist.post.reg.m),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_stream_fit_windowed_matches_full_scan():
+    """window= replays the stream in device-sliced windows (host-resident
+    stack) and matches the single full scan exactly, ragged tail included."""
+    stream, _, _ = gmm_stream(1100, 2, 3, seed=7)
+    spec = PlateSpec(n_features=3, latent_card=2)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    init = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+    batches = list(stream.batches(250))
+    xcs, xds, masks = _stacked(batches)
+    xcs_h, xds_h, masks_h = (np.asarray(xcs), np.asarray(xds),
+                             np.asarray(masks))
+
+    ref, iref = streaming.stream_fit(cp, prior,
+                                     streaming.stream_init(prior, init),
+                                     xcs, xds, masks)
+    win, iwin = streaming.stream_fit(cp, prior,
+                                     streaming.stream_init(prior, init),
+                                     xcs_h, xds_h, masks_h, window=2)
+    np.testing.assert_allclose(np.asarray(ref.post.reg.m),
+                               np.asarray(win.post.reg.m),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(iref["elbo"]),
+                               np.asarray(iwin["elbo"]), rtol=1e-5)
+    assert iwin["elbo"].shape[0] == len(batches)
+    assert float(ref.n_seen) == float(win.n_seen) == 1100.0
 
 
 def test_stream_fit_donation_keeps_inputs_alive():

@@ -12,7 +12,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.clg_stats import clg_disc_counts, clg_suffstats
+from repro.kernels.clg_stats import (clg_disc_counts, clg_suffstats,
+                                     clg_suffstats_latent)
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -128,6 +129,72 @@ def test_clg_disc_counts_sweep(N, Fd, C, K, block):
     np.testing.assert_allclose(np.asarray(out.sum(-1)),
                                np.tile(np.asarray(r.sum(0)), (Fd, 1)),
                                atol=1e-3)
+
+
+@pytest.mark.parametrize("N,F,Do,K,L,block", [
+    (600, 3, 2, 2, 1, 256),
+    (513, 2, 1, 3, 2, 128),    # ragged N vs block; FA-style Do = 1
+    (256, 1, 3, 4, 8, 64),     # wide latent block (L = 8)
+])
+def test_clg_suffstats_latent_sweep(N, F, Do, K, L, block):
+    """The fused component-major latent kernel vs its three-einsum oracle
+    (observed, cross and E[hh^T]-corrected latent blocks in one pass)."""
+    obs = jax.random.normal(KEYS[0], (N, F, Do))
+    hm = jax.random.normal(KEYS[1], (N, K, L))
+    y = jax.random.normal(KEYS[2], (N, F))
+    r = jax.nn.softmax(jax.random.normal(KEYS[3], (N, K)), -1)
+    a = jax.random.normal(KEYS[4], (K, L, L)) * 0.3
+    shh = a @ jnp.swapaxes(a, -1, -2) + jnp.eye(L)   # SPD covariance
+    sxx, sxy, syy = clg_suffstats_latent(obs, hm, y, r, shh, block=block)
+    rxx, rxy, ryy = ref.clg_suffstats_latent_ref(obs, hm, y, r, shh)
+    np.testing.assert_allclose(np.asarray(sxx), np.asarray(rxx),
+                               atol=1e-3, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(sxy), np.asarray(rxy),
+                               atol=1e-3, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(syy), np.asarray(ryy),
+                               atol=1e-3, rtol=1e-4)
+    # block structure: the latent-latent block is leaf-independent
+    hh = np.asarray(sxx)[..., Do:, Do:]
+    np.testing.assert_allclose(hh, np.broadcast_to(hh[:1], hh.shape),
+                               atol=1e-4)
+    # symmetric output
+    np.testing.assert_allclose(np.asarray(sxx),
+                               np.asarray(jnp.swapaxes(sxx, -1, -2)),
+                               atol=1e-4)
+
+
+def test_clg_suffstats_latent_masked_instances():
+    """r = 0 rows (padded/masked instances) contribute nothing, including
+    to the rsum * S_k covariance correction."""
+    N, F, Do, K, L = 200, 2, 2, 3, 2
+    obs = jax.random.normal(KEYS[0], (N, F, Do))
+    hm = jax.random.normal(KEYS[1], (N, K, L))
+    y = jax.random.normal(KEYS[2], (N, F))
+    r = jax.nn.softmax(jax.random.normal(KEYS[3], (N, K)), -1)
+    r = r * (jnp.arange(N) < 150)[:, None]
+    shh = jnp.broadcast_to(jnp.eye(L), (K, L, L)) * 0.7
+    full = clg_suffstats_latent(obs, hm, y, r, shh, block=64)
+    trunc = clg_suffstats_latent(obs[:150], hm[:150], y[:150], r[:150],
+                                 shh, block=64)
+    for a, b in zip(full, trunc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-5)
+
+
+def test_clg_suffstats_latent_via_ops_policy():
+    """The jit'd ops wrapper follows the session interpret policy (the CI
+    parity legs run this file under both policies)."""
+    N, F, Do, K, L = 130, 2, 1, 2, 2
+    obs = jax.random.normal(KEYS[5], (N, F, Do))
+    hm = jax.random.normal(KEYS[6], (N, K, L))
+    y = jax.random.normal(KEYS[7], (N, F))
+    r = jax.nn.softmax(jax.random.normal(KEYS[0], (N, K)), -1)
+    shh = jnp.broadcast_to(jnp.eye(L), (K, L, L))
+    got = ops.clg_suffstats_latent(obs, hm, y, r, shh, block=64)
+    exp = ref.clg_suffstats_latent_ref(obs, hm, y, r, shh)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   atol=1e-4, rtol=1e-4)
 
 
 def test_clg_kernel_feeds_conjugate_update():

@@ -109,6 +109,29 @@ def test_update_model_multibatch_stream_uses_stream_fit():
     np.testing.assert_allclose(e, float(info["elbo"]), atol=2.0)
 
 
+def test_update_model_stream_window_matches_full_scan():
+    """stream_window= replays the same stream in device-sliced windows and
+    lands on the same posterior as the whole-stream-resident scan."""
+    from repro.data.stream import DataStream
+    from repro.pgm_models import GaussianMixture
+
+    full, _, _ = gmm_stream(1200, 2, 3, seed=12)
+    batch = full.collect()
+    xc = np.asarray(batch.xc)
+    parts = [DataStream.from_arrays(full.attributes, xc[i:i + 300])
+             for i in range(0, 1200, 300)]
+
+    m = GaussianMixture(full.attributes, n_states=2, seed=0)
+    e = m.update_model(DataStream.concat(parts), sweeps=8)
+    mw = GaussianMixture(full.attributes, n_states=2, seed=0)
+    ew = mw.update_model(DataStream.concat(parts), sweeps=8, stream_window=2)
+    np.testing.assert_allclose(np.asarray(m.posterior.reg.m),
+                               np.asarray(mw.posterior.reg.m),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(e, ew, atol=1e-3)
+    assert mw.n_seen == 1200
+
+
 def test_update_model_ragged_stream_falls_back_to_per_batch():
     from repro.data.stream import DataStream
     from repro.pgm_models import GaussianMixture
