@@ -55,6 +55,18 @@ BENCH_LATENT_SCHEMA = {
     "jt_bucketed_speedup": float,
 }
 
+# --json --structure mode: the structure-learning workload — batched family
+# scoring throughput (family_counts kernel vs einsum), Chow-Liu edge
+# recovery and hill-climbing wall-clock/skeleton-F1 on ground-truth
+# synthetic networks.
+BENCH_STRUCTURE_SCHEMA = {
+    "bench": str, "schema_version": int, "created": str,
+    "config": dict, "results": list,
+    "family_score_max_abs_diff": float,
+    "chowliu_edge_f1": float,
+    "hillclimb_skeleton_f1": float,
+}
+
 
 def _bench_env_config() -> dict:
     """Environment fields stamped into every BENCH_*.json config block so
@@ -553,6 +565,145 @@ def validate_bench_latent(payload: dict) -> None:
             f"{payload['jt_posterior_max_abs_diff']}")
 
 
+def bench_structure_json(n: int = 20_000, n_vars: int = 8,
+                         max_parents: int = 2, card: int = 3, reps: int = 3,
+                         out: str = "BENCH_structure.json") -> dict:
+    """(JSON mode) the structure-learning perf trail (learn_structure).
+
+    Part 1 — batched family scoring: EVERY candidate family of parent-set
+    size <= ``max_parents`` over ``n_vars`` discrete columns, scored in one
+    device call per backend (``family_counts`` Pallas kernel vs the einsum
+    reference); records families/s both ways plus their max score diff
+    (the kernel must match the reference wherever it runs).
+
+    Part 2 — Chow-Liu on a ground-truth random tree: wall-clock + exact
+    edge-recovery F1.
+
+    Part 3 — hill-climbing on a bounded-fan-in random discrete BN:
+    wall-clock, iterations, cache-miss families scored, skeleton F1.
+    """
+    import datetime
+    import itertools
+
+    from repro.data import synthetic as syn
+    from repro.learn_structure import chow_liu, hill_climb, skeleton_f1
+    from repro.learn_structure import scores as S
+
+    results = []
+
+    # -- part 1: family-score throughput, einsum vs pallas -------------------
+    bn = syn.random_discrete_bn(n_vars, card=card,
+                                max_parents=max_parents, seed=0)
+    stream = syn.bn_stream(bn, n, seed=1)
+    batch = stream.collect()
+    cards = [card] * n_vars
+    fams = []
+    for ch in range(n_vars):
+        rest = [v for v in range(n_vars) if v != ch]
+        for k in range(max_parents + 1):
+            fams.extend((ch, pa) for pa in
+                        itertools.combinations(rest, k))
+    scores = {}
+    for backend in ("einsum", "pallas"):
+        def score(be=backend):
+            scores[be] = S.disc_family_scores(
+                batch.xd, fams, cards, mask=batch.mask, backend=be)
+            return scores[be]
+
+        t = _t(score, reps=reps)
+        results.append({
+            "driver": "family_scores", "backend": backend,
+            "n": n, "n_families": len(fams), "us_per_call": t,
+            "families_per_s": len(fams) / t * 1e6,
+        })
+    score_diff = float(np.abs(scores["einsum"] - scores["pallas"]).max())
+
+    # -- part 2: Chow-Liu tree recovery --------------------------------------
+    tree = syn.random_discrete_bn(n_vars, card=card, seed=3, tree=True)
+    ts = syn.bn_stream(tree, n, seed=4)
+    tb = ts.collect()
+    chow_liu(tb, ts.attributes)                   # warm the jit caches
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        edges, _ = chow_liu(tb, ts.attributes)
+    dt = (time.perf_counter() - t0) / reps
+    cl_f1 = skeleton_f1(tree, edges)
+    results.append({
+        "driver": "chowliu", "backend": "einsum", "n": n,
+        "n_vars": n_vars, "wallclock_s": dt, "edge_f1": cl_f1,
+    })
+
+    # -- part 3: hill-climbing recovery --------------------------------------
+    hs = syn.bn_stream(bn, n, seed=5)
+    hb = hs.collect()
+    hill_climb(hb, hs.attributes, max_parents=max_parents)     # warm
+    t0 = time.perf_counter()
+    res = hill_climb(hb, hs.attributes, max_parents=max_parents)
+    dt = time.perf_counter() - t0
+    hc_f1 = skeleton_f1(bn, res.parents)
+    results.append({
+        "driver": "hillclimb", "backend": "einsum", "n": n,
+        "n_vars": n_vars, "max_parents": max_parents, "wallclock_s": dt,
+        "n_iters": res.n_iters, "n_families_scored": res.n_scored,
+        "skeleton_f1": hc_f1,
+    })
+
+    payload = {
+        "bench": "structure",
+        "schema_version": 1,
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "config": {"n": n, "n_vars": n_vars, "max_parents": max_parents,
+                   "card": card, **_bench_env_config()},
+        "results": results,
+        "family_score_max_abs_diff": score_diff,
+        "chowliu_edge_f1": cl_f1,
+        "hillclimb_skeleton_f1": hc_f1,
+    }
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {out}: {len(fams)} families "
+          f"({results[0]['families_per_s']:.0f} fam/s einsum, "
+          f"{results[1]['families_per_s']:.0f} pallas, "
+          f"diff {score_diff:.2e}); chowliu F1={cl_f1:.2f}, "
+          f"hillclimb F1={hc_f1:.2f} in {dt:.2f}s")
+    return payload
+
+
+def validate_bench_structure(payload: dict) -> None:
+    """Schema gate for BENCH_structure.json — used by scripts/ci.sh."""
+    for key, typ in BENCH_STRUCTURE_SCHEMA.items():
+        if key not in payload:
+            raise ValueError(f"BENCH_structure.json missing key {key!r}")
+        if typ is float and isinstance(payload[key], int):
+            continue
+        if not isinstance(payload[key], typ):
+            raise ValueError(f"{key!r} must be {typ.__name__}, "
+                             f"got {type(payload[key]).__name__}")
+    for key in ("jax_version", "pallas_policy"):
+        if key not in payload["config"]:
+            raise ValueError(f"config missing {key!r}")
+    drivers = {r["driver"] for r in payload["results"]}
+    for need in ("family_scores", "chowliu", "hillclimb"):
+        if need not in drivers:
+            raise ValueError(f"missing driver {need!r}")
+    backends = {r["backend"] for r in payload["results"]
+                if r["driver"] == "family_scores"}
+    if backends != {"einsum", "pallas"}:
+        raise ValueError(f"family_scores must cover both backends, "
+                         f"got {backends}")
+    if not payload["family_score_max_abs_diff"] < 1e-2:
+        raise ValueError(
+            "family_counts kernel diverged from the einsum reference: "
+            f"{payload['family_score_max_abs_diff']}")
+    if not payload["chowliu_edge_f1"] >= 0.99:
+        raise ValueError(
+            f"Chow-Liu tree recovery broke: F1={payload['chowliu_edge_f1']}")
+    if not payload["hillclimb_skeleton_f1"] >= 0.7:
+        raise ValueError("hill-climb skeleton recovery broke: "
+                         f"F1={payload['hillclimb_skeleton_f1']}")
+
+
 def bench_drift():
     """(iv) drift detection latency (batches until flagged)."""
     import jax
@@ -791,6 +942,10 @@ def main(argv=None) -> None:
                     help="with --json: run the latent-plate E-step + "
                          "bucketed strong-JT drivers and write "
                          "BENCH_latent.json instead")
+    ap.add_argument("--structure", action="store_true",
+                    help="with --json: run the structure-learning drivers "
+                         "(family scoring, Chow-Liu, hill-climb) and write "
+                         "BENCH_structure.json instead")
     ap.add_argument("--out", default=None)
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--batch", type=int, default=2_000)
@@ -807,10 +962,15 @@ def main(argv=None) -> None:
                     help="instances for the --latent E-step drivers")
     ap.add_argument("--depth", type=int, default=12,
                     help="CLG chain depth for the --latent strong-JT driver")
+    ap.add_argument("--structure-n", type=int, default=20_000,
+                    help="instances for the --structure drivers")
+    ap.add_argument("--structure-vars", type=int, default=8,
+                    help="variables for the --structure drivers")
     args = ap.parse_args(argv)
 
-    if (args.dvmp or args.latent) and not args.json:
-        ap.error("--dvmp/--latent require --json (they write BENCH_*.json)")
+    if (args.dvmp or args.latent or args.structure) and not args.json:
+        ap.error("--dvmp/--latent/--structure require --json "
+                 "(they write BENCH_*.json)")
     if args.json and args.dvmp:
         payload = bench_dvmp_json(
             n=args.n, sweeps=args.sweeps, backend=args.backend,
@@ -822,6 +982,12 @@ def main(argv=None) -> None:
             n=args.latent_n, depth=args.depth,
             out=args.out or "BENCH_latent.json")
         validate_bench_latent(payload)
+        return
+    if args.json and args.structure:
+        payload = bench_structure_json(
+            n=args.structure_n, n_vars=args.structure_vars,
+            out=args.out or "BENCH_structure.json")
+        validate_bench_structure(payload)
         return
     if args.json:
         payload = bench_streaming_json(

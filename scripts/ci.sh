@@ -17,10 +17,16 @@
 #      validation PLUS the fused-kernel-vs-einsum and bucketed-vs-per-clique
 #      parity gates baked into the validator (the latent-kernel interpret-
 #      vs-policy parity itself rides the test_kernels legs of step 2),
+#   4c. the structure-learning harness (--json --structure) on tiny sizes:
+#      schema validation PLUS the family_counts-vs-einsum score parity and
+#      the Chow-Liu / hill-climb recovery gates baked into the validator,
 #   5. end-to-end junction-tree queries through the public API: a discrete
 #      2-variable query AND a strong-junction-tree query on a CLG network
 #      with an unobserved continuous INTERNAL node, so both exact-inference
-#      pipelines are exercised even under pytest -k filters.
+#      pipelines are exercised even under pytest -k filters,
+#   6. a structure-recovery smoke: Chow-Liu learns a ground-truth tree from
+#      sampled data, recovers it exactly, and the learned network answers a
+#      schema-batched query through PGMQueryEngine.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -50,7 +56,8 @@ fi
 BENCH_OUT="$(mktemp -t bench_streaming_smoke.XXXXXX.json)"
 DVMP_OUT="$(mktemp -t bench_dvmp_smoke.XXXXXX.json)"
 LATENT_OUT="$(mktemp -t bench_latent_smoke.XXXXXX.json)"
-trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT"' EXIT
+STRUCT_OUT="$(mktemp -t bench_structure_smoke.XXXXXX.json)"
+trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT"' EXIT
 python benchmarks/run.py --json --n 1000 --batch 250 --sweeps 2 \
     --window 2 --out "$BENCH_OUT"
 python - "$BENCH_OUT" <<'EOF'
@@ -94,6 +101,22 @@ print("ci smoke: BENCH_latent schema OK (kernel rel diff "
       f"{payload['latent_backend_max_rel_diff']:.2e}, strong-JT bucketed "
       f"{payload['jt_bucketed_speedup']:.2f}x, "
       f"diff {payload['jt_posterior_max_abs_diff']:.2e})")
+EOF
+
+python benchmarks/run.py --json --structure --structure-n 3000 \
+    --structure-vars 6 --out "$STRUCT_OUT"
+python - "$STRUCT_OUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from run import validate_bench_structure
+
+with open(sys.argv[1]) as fh:
+    payload = json.load(fh)
+validate_bench_structure(payload)
+print("ci smoke: BENCH_structure schema OK (score diff "
+      f"{payload['family_score_max_abs_diff']:.2e}, chowliu F1 "
+      f"{payload['chowliu_edge_f1']:.2f}, hillclimb F1 "
+      f"{payload['hillclimb_skeleton_f1']:.2f})")
 EOF
 
 python - <<'EOF'
@@ -156,4 +179,26 @@ mb, vb = brute_posterior_mean_var(bn, X2, ev)
 assert abs(float(m) - float(mb)) < 1e-5 and abs(float(v) - float(vb)) < 1e-5
 print(f"ci smoke: strong JT P(Z | X1, X3) = {pz}, "
       f"E[X2 | e] = {float(m):.4f} OK")
+EOF
+
+python - <<'EOF'
+import numpy as np
+from repro.data import synthetic as syn
+from repro.learn_structure import chow_liu, undirected_edges
+from repro.serve.engine import PGMQueryEngine
+
+# structure recovery: Chow-Liu must find a ground-truth tree exactly, and
+# the learned network must serve schema-batched exact queries
+bn = syn.random_discrete_bn(6, card=3, seed=3, tree=True)
+stream = syn.bn_stream(bn, 4000, seed=4)
+edges, learned = chow_liu(stream, stream.attributes)
+true, got = undirected_edges(bn), undirected_edges(edges)
+assert got == true, (sorted(map(tuple, true)), sorted(map(tuple, got)))
+eng = PGMQueryEngine(learned, mode="exact")
+qs = [eng.submit("D0", {"D2": k % 3, "D3": (k + 1) % 3}) for k in range(4)]
+eng.flush()
+for q in qs:
+    assert q.done and abs(float(q.result.sum()) - 1.0) < 1e-5
+print(f"ci smoke: Chow-Liu recovered the tree exactly "
+      f"({len(edges)} edges), learned BN served {len(qs)} exact queries OK")
 EOF

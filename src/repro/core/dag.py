@@ -79,6 +79,25 @@ class DAG:
         self.variables = variables
         self.parents: Dict[str, List[Variable]] = {v.name: [] for v in variables}
 
+    def is_ancestor(self, anc: str, desc: str) -> bool:
+        """True iff ``anc`` reaches ``desc`` along directed edges (reflexive:
+        a variable is its own ancestor).  The incremental ancestor walk —
+        touches only ``desc``'s ancestor set, not the whole graph — shared
+        by :meth:`add_parent` and the structure-search operator guards
+        (``learn_structure.search``: an add/reverse is acyclic iff the
+        would-be child is not already an ancestor of the would-be parent).
+        """
+        stack, seen = [desc], set()
+        while stack:
+            u = stack.pop()
+            if u == anc:
+                return True
+            if u in seen:
+                continue
+            seen.add(u)
+            stack.extend(p.name for p in self.parents[u])
+        return False
+
     def add_parent(self, child: Variable, parent: Variable) -> None:
         if parent.name == child.name:
             raise ValueError("self-loop")
@@ -86,41 +105,51 @@ class DAG:
             raise ValueError(
                 f"duplicate edge {parent.name!r} -> {child.name!r}")
         # incremental acyclicity: the new edge closes a cycle iff the child
-        # is already an ancestor of the parent — walk only those ancestors
-        # instead of re-running a full-graph DFS per edge.  Checked before
-        # mutation, so a rejected edge leaves the DAG untouched.
-        stack, seen = [parent.name], set()
-        while stack:
-            u = stack.pop()
-            if u == child.name:
-                raise ValueError(
-                    f"edge {parent.name!r} -> {child.name!r} creates a cycle")
-            if u in seen:
-                continue
-            seen.add(u)
-            stack.extend(p.name for p in self.parents[u])
+        # is already an ancestor of the parent.  Checked before mutation,
+        # so a rejected edge leaves the DAG untouched.
+        if self.is_ancestor(child.name, parent.name):
+            raise ValueError(
+                f"edge {parent.name!r} -> {child.name!r} creates a cycle")
         self.parents[child.name].append(parent)
+
+    def remove_parent(self, child: Variable, parent: Variable) -> None:
+        """Delete edge parent -> child (structure-search remove/reverse)."""
+        pas = self.parents[child.name]
+        for i, p in enumerate(pas):
+            if p.name == parent.name:
+                del pas[i]
+                return
+        raise ValueError(f"no edge {parent.name!r} -> {child.name!r}")
 
     def get_parents(self, v: Variable) -> List[Variable]:
         return self.parents[v.name]
 
     def topological_order(self) -> List[Variable]:
-        order, seen, mark = [], set(), set()
-
-        def visit(v: Variable):
-            if v.name in seen:
-                return
-            if v.name in mark:
-                raise ValueError("cycle in DAG")
-            mark.add(v.name)
-            for p in self.parents[v.name]:
-                visit(p)
-            mark.discard(v.name)
-            seen.add(v.name)
-            order.append(v)
-
-        for v in self.variables:
-            visit(v)
+        # iterative DFS (parents before children, registry order breaking
+        # ties — same order the old recursive visit produced): structure
+        # search generates chains deeper than Python's recursion limit
+        order: List[Variable] = []
+        seen, mark = set(), set()
+        for root in self.variables:
+            if root.name in seen:
+                continue
+            mark.add(root.name)
+            stack = [(root, iter(self.parents[root.name]))]
+            while stack:
+                v, it = stack[-1]
+                for p in it:
+                    if p.name in seen:
+                        continue
+                    if p.name in mark:
+                        raise ValueError("cycle in DAG")
+                    mark.add(p.name)
+                    stack.append((p, iter(self.parents[p.name])))
+                    break
+                else:
+                    stack.pop()
+                    mark.discard(v.name)
+                    seen.add(v.name)
+                    order.append(v)
         return order
 
 

@@ -72,6 +72,17 @@ class DataStream:
 
     @staticmethod
     def concat(streams: Sequence["DataStream"]) -> "DataStream":
+        if not streams:
+            raise ValueError("concat of zero streams")
+        # silently concatenating mismatched schemas would misalign columns
+        # in every downstream batch — validate attribute-for-attribute
+        for i, s in enumerate(streams[1:], start=1):
+            if s.attributes != streams[0].attributes:
+                raise ValueError(
+                    f"concat: stream {i} attribute schema "
+                    f"{[str(a) for a in s.attributes]} does not match "
+                    f"stream 0 {[str(a) for a in streams[0].attributes]}")
+
         def src():
             for s in streams:
                 yield from s._source()

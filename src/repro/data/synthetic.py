@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -116,6 +116,119 @@ def lds_sequences(s: int, t: int, dim_h: int, f: int, seed: int = 0
             xs[i, j] = C @ h + 0.2 * rng.standard_normal(f)
     attrs = [Attribute(f"G{i}", REAL) for i in range(f)]
     return DynamicDataStream(attrs, xs), A.astype(np.float32), C
+
+
+# -- ground-truth structures (structure-learning experiments) ------------------
+
+
+def random_discrete_bn(n_vars: int, card: int = 3, max_parents: int = 2,
+                       seed: int = 0, conc: float = 0.25,
+                       tree: bool = False):
+    """Random discrete Bayesian network with bounded fan-in.
+
+    Node ``D{i}`` draws its parents uniformly from ``D{0..i-1}`` (at most
+    ``max_parents``; exactly one when ``tree=True``).  CPD rows are built
+    identifiable by construction: each parent's value shifts a chunk of
+    the child's probability mass to a distinct mode (plus ``conc`` of
+    Dirichlet noise), so every edge carries detectable marginal AND joint
+    dependence — random Dirichlet tables routinely produce near-
+    independent edges no score can recover.  Returns the
+    ``BayesianNetwork`` (sample it with :func:`bn_stream`); ground truth
+    for ``learn_structure`` tests and the BENCH_structure driver.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.dag import (BayesianNetwork, DAG, MultinomialCPD,
+                                Variables)
+
+    rng = np.random.default_rng(seed)
+    vs = Variables()
+    nodes = [vs.new_multinomial(f"D{i}", card) for i in range(n_vars)]
+    dag = DAG(vs)
+    cpds = {}
+    for i, v in enumerate(nodes):
+        if tree:
+            n_pa = 1 if i > 0 else 0
+        else:
+            n_pa = int(rng.integers(0, min(max_parents, i) + 1))
+        pa = sorted(rng.choice(i, size=n_pa, replace=False)) if n_pa else []
+        for p in pa:
+            dag.add_parent(v, nodes[p])
+        q = card ** len(pa)
+        noise = rng.dirichlet(np.ones(card), size=q)
+        table = conc * noise
+        if pa:
+            # per-parent mode weights: first parent strongest, all > noise
+            w = np.array([2.0 ** -k for k in range(len(pa))])
+            w = w / w.sum() * (1.0 - conc)
+            offset = rng.integers(0, card, size=len(pa))
+            for j in range(q):
+                digits = [(j // card ** (len(pa) - 1 - k)) % card
+                          for k in range(len(pa))]
+                for k, d in enumerate(digits):
+                    table[j, (d + offset[k]) % card] += w[k]
+        else:
+            table += (1.0 - conc) * rng.dirichlet(np.full(card, 0.8))
+        table = table / table.sum(-1, keepdims=True)
+        cpds[v.name] = MultinomialCPD(jnp.asarray(
+            table.astype(np.float32).reshape((card,) * len(pa) + (card,))))
+    return BayesianNetwork(dag, cpds)
+
+
+def clg_tree_bn(n_vars: int, seed: int = 0, beta_lo: float = 0.8,
+                beta_hi: float = 1.4, noise: float = 0.4):
+    """Random linear-Gaussian tree: ``G{i}`` regresses on one earlier node
+    with |beta| in [beta_lo, beta_hi] — strong enough that pairwise
+    Gaussian MI recovers the tree exactly from ample data."""
+    import jax.numpy as jnp
+
+    from repro.core.dag import BayesianNetwork, CLGCPD, DAG, Variables
+
+    rng = np.random.default_rng(seed)
+    vs = Variables()
+    nodes = [vs.new_gaussian(f"G{i}") for i in range(n_vars)]
+    dag = DAG(vs)
+    cpds = {nodes[0].name: CLGCPD(jnp.asarray(float(rng.uniform(-1, 1))),
+                                  jnp.zeros((0,)), jnp.asarray(1.0))}
+    for i in range(1, n_vars):
+        p = int(rng.integers(0, i))
+        dag.add_parent(nodes[i], nodes[p])
+        beta = float(rng.uniform(beta_lo, beta_hi) * rng.choice([-1.0, 1.0]))
+        cpds[nodes[i].name] = CLGCPD(
+            jnp.asarray(float(rng.uniform(-1, 1))), jnp.asarray([beta]),
+            jnp.asarray(float(noise * (0.5 + rng.random()))))
+    return BayesianNetwork(dag, cpds)
+
+
+def bn_stream(bn, n: int, seed: int = 0, n_chunks: int = 1) -> DataStream:
+    """Sample ``n`` instances from a ``BayesianNetwork`` into a
+    ``DataStream`` (continuous variables -> REAL/xc columns, discrete ->
+    FINITE/xd, both in registry order).  ``n_chunks > 1`` splits the rows
+    into that many source chunks so the stream drives the streaming /
+    drift-adaptation paths."""
+    import jax
+
+    asg = bn.sample(jax.random.PRNGKey(seed), n)
+    attrs: List[Attribute] = []
+    cc, dd = [], []
+    for v in bn.dag.variables:
+        if v.is_discrete:
+            attrs.append(Attribute(v.name, FINITE, v.card))
+            dd.append(np.asarray(asg[v.name], np.int32))
+        else:
+            attrs.append(Attribute(v.name, REAL))
+            cc.append(np.asarray(asg[v.name], np.float32))
+    xc = (np.stack(cc, 1) if cc else np.zeros((n, 0), np.float32))
+    xd = (np.stack(dd, 1) if dd else np.zeros((n, 0), np.int32))
+    if n_chunks <= 1:
+        return DataStream.from_arrays(attrs, xc, xd)
+    bounds = np.linspace(0, n, n_chunks + 1).astype(int)
+
+    def src():
+        for a, b in zip(bounds, bounds[1:]):
+            yield xc[a:b], xd[a:b]
+
+    return DataStream(attrs, src, n_instances=n)
 
 
 def lda_corpus(n_docs: int, vocab: int, topics: int, doc_len: int = 80,

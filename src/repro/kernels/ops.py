@@ -16,6 +16,7 @@ from repro.kernels.clg_stats import (_resolve_interpret,
                                      clg_disc_counts as _clg_disc,
                                      clg_suffstats as _clg,
                                      clg_suffstats_latent as _clg_latent)
+from repro.kernels.family_counts import family_counts as _famcounts
 from repro.kernels.factor_ops import (cg_weak_marg as _cgweak,
                                       evidence_select as _evsel,
                                       log_marginalize as _logmarg,
@@ -51,6 +52,11 @@ def clg_suffstats_latent(obs, h_mean, y, r, s_hh, *, block=512):
 @partial(jax.jit, static_argnames=("C", "block"))
 def clg_disc_counts(xd, r, C, *, block=512):
     return _clg_disc(xd, r, C, block=block, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("C", "block"))
+def family_counts(xd, strides, w, C, *, block=512):
+    return _famcounts(xd, strides, w, C, block=block, interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("bm",))

@@ -61,6 +61,17 @@ def clg_disc_counts_ref(xd: jnp.ndarray, r: jnp.ndarray, C: int) -> jnp.ndarray:
     return jnp.einsum("nfc,nk->fkc", onehot, r)
 
 
+def family_counts_ref(xd: jnp.ndarray, strides: jnp.ndarray, w: jnp.ndarray,
+                      C: int) -> jnp.ndarray:
+    """Oracle for kernels.family_counts.family_counts: the einsum fallback
+    (mixed-radix code per (instance, family), then a weighted one-hot)."""
+    import jax.nn
+
+    codes = xd.astype(jnp.int32) @ strides.astype(jnp.int32).T     # [N, M]
+    onehot = jax.nn.one_hot(codes, C)                              # [N, M, C]
+    return jnp.einsum("nmc,n->mc", onehot, w)
+
+
 def log_product_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Oracle for kernels.factor_ops.log_product."""
     return a + b[:, None, :]

@@ -52,6 +52,46 @@ def test_importance_sampling_matches_exact(clg_net):
     assert float(inf.effective_sample_size()) > 1000
 
 
+def test_importance_sampling_evidence_on_root(clg_net):
+    """Evidence on a root node: the root is clamped, every particle gets
+    the same p(e) weight (uniform -> ESS == n), and children sample from
+    the clamped conditional."""
+    bn, Z = clg_net
+    inf = ImportanceSampling(n_samples=20_000, seed=2)
+    inf.set_model(bn)
+    inf.set_evidence({"Z": 1})
+    inf.run_inference()
+    # uniform weights: likelihood weighting on a root contributes the same
+    # prior factor to every particle
+    assert float(inf.effective_sample_size()) == pytest.approx(20_000,
+                                                               rel=1e-4)
+    post = np.asarray(inf.posterior_discrete(Z))
+    np.testing.assert_allclose(post, [0.0, 1.0], atol=1e-3)
+    assert post[0] == 0.0          # the clamped value takes ALL the mass
+    m, v = inf.posterior_mean_var(bn.dag.variables.by_name("X1"))
+    assert float(m) == pytest.approx(4.0, abs=0.05)
+    assert float(v) == pytest.approx(1.0, abs=0.05)
+
+
+def test_importance_sampling_empty_evidence_prior(clg_net):
+    """No evidence = pure prior sampling: uniform weights, posterior ==
+    prior marginals."""
+    bn, Z = clg_net
+    inf = ImportanceSampling(n_samples=50_000, seed=3)
+    inf.set_model(bn)
+    inf.set_evidence({})
+    inf.run_inference()
+    assert float(inf.effective_sample_size()) == pytest.approx(50_000,
+                                                               rel=1e-4)
+    post = np.asarray(inf.posterior_discrete(Z))
+    np.testing.assert_allclose(post, [0.3, 0.7], atol=0.01)
+    # X2 marginal: mixture mean 0.3*(-2) + 0.7*2 = 0.8
+    m, v = inf.posterior_mean_var(bn.dag.variables.by_name("X2"))
+    assert float(m) == pytest.approx(0.8, abs=0.05)
+    # mixture variance: 1 + E[mu^2] - E[mu]^2 = 1 + (0.3*4 + 0.7*4) - 0.64
+    assert float(v) == pytest.approx(1.0 + 4.0 - 0.64, abs=0.1)
+
+
 def test_bn_sampling_consistency(clg_net):
     bn, Z = clg_net
     asg = bn.sample(jax.random.PRNGKey(0), 50_000)

@@ -14,6 +14,7 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.clg_stats import (clg_disc_counts, clg_suffstats,
                                      clg_suffstats_latent)
+from repro.kernels.family_counts import family_counts
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -195,6 +196,56 @@ def test_clg_suffstats_latent_via_ops_policy():
     for g, e in zip(got, exp):
         np.testing.assert_allclose(np.asarray(g), np.asarray(e),
                                    atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("N,Fd,block", [
+    (1000, 4, 256),
+    (513, 2, 128),      # ragged N vs block
+    (100, 6, 64),
+])
+def test_family_counts_sweep(N, Fd, block):
+    """The structure-learning count reduction: mixed-radix family codes +
+    weighted one-hot histogram, one pass over instances."""
+    cards = [int(c) for c in
+             np.asarray(jax.random.randint(KEYS[0], (Fd,), 2, 5))]
+    cols = [jax.random.randint(jax.random.fold_in(KEYS[1], f), (N,), 0, c)
+            for f, c in enumerate(cards)]
+    xd = jnp.stack(cols, 1).astype(jnp.int32)
+    # candidate families: each var with its two successors as parents
+    fams = [(f, tuple((f + 1 + j) % Fd for j in range(min(2, Fd - 1))))
+            for f in range(Fd)]
+    strides = np.zeros((len(fams), Fd), np.int32)
+    sizes = []
+    for m, (ch, pa) in enumerate(fams):
+        strides[m, ch] = 1
+        s = cards[ch]
+        for p in reversed(pa):
+            strides[m, p] = s
+            s *= cards[p]
+        sizes.append(s)
+    C = max(sizes)
+    w = jax.random.uniform(KEYS[2], (N,))
+    got = family_counts(xd, jnp.asarray(strides), w, C, block=block)
+    exp = ref.family_counts_ref(xd, jnp.asarray(strides), w, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               atol=1e-3, rtol=1e-5)
+    # every family's histogram carries the full instance mass, and padded
+    # configurations beyond its true size stay exactly zero
+    np.testing.assert_allclose(np.asarray(got.sum(-1)),
+                               float(w.sum()), rtol=1e-5)
+    for m, s in enumerate(sizes):
+        assert np.asarray(got)[m, s:].max(initial=0.0) == 0.0
+
+
+def test_family_counts_via_ops_policy():
+    """The jit'd ops wrapper follows the session interpret policy (the CI
+    parity legs run this file under both policies)."""
+    xd = jax.random.randint(KEYS[3], (300, 3), 0, 3).astype(jnp.int32)
+    strides = jnp.asarray([[1, 3, 9], [0, 1, 3], [1, 0, 0]], jnp.int32)
+    w = jnp.ones(300)
+    got = ops.family_counts(xd, strides, w, 27)
+    exp = ref.family_counts_ref(xd, strides, w, 27)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-4)
 
 
 def test_clg_kernel_feeds_conjugate_update():
