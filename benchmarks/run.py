@@ -140,15 +140,61 @@ def bench_streaming():
           f"{50_000 / dt:.0f} inst/s elbo={float(info['elbo']):.1f}")
 
 
+def register_estimators() -> None:
+    """Register the analytical HLO cost model (``hlo_analysis.analyze``,
+    dormant since seed) in the obs registry as ``"hlo_cost"`` — the first
+    concrete piece of the ROADMAP roofline gate.  Estimates flow back into
+    BENCH_* results via :func:`_program_analysis` and, when obs is enabled,
+    into ``bench_estimate`` JSONL events."""
+    from repro import obs
+
+    if obs.registered("hlo_cost"):
+        return
+    try:
+        import hlo_analysis                      # script mode (sys.path[0])
+    except ImportError:
+        from benchmarks import hlo_analysis      # repo-root import
+
+    def hlo_cost(hlo_text: str) -> dict:
+        a = hlo_analysis.analyze(hlo_text)
+        return {"flops": a.get("flops"),
+                "hbm_bytes": a.get("hbm_bytes"),
+                "hbm_bytes_min": a.get("hbm_bytes_min"),
+                "collective_bytes": a.get("collective_bytes")}
+
+    obs.register("hlo_cost", hlo_cost)
+
+
+def _program_analysis(lowered):
+    """(peak_mem_bytes, analytical) of a lowered program — ONE compile
+    shared by the peak-memory proxy and the registered ``hlo_cost``
+    analytical FLOP/byte model.  Either half degrades to None if the
+    backend exposes no memory analysis / HLO text."""
+    from repro import obs
+
+    try:
+        compiled = lowered.compile()
+    except Exception:
+        return None, None
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                     + ma.output_size_in_bytes)
+    except Exception:
+        peak = None
+    analytical = None
+    try:
+        if obs.registered("hlo_cost"):
+            analytical = obs.estimate("hlo_cost", compiled.as_text())
+    except Exception:
+        analytical = None
+    return peak, analytical
+
+
 def _peak_mem_proxy(lowered):
     """Compiled-program peak-memory proxy in bytes (None if the backend
     exposes no memory analysis — e.g. some CPU jaxlibs)."""
-    try:
-        ma = lowered.compile().memory_analysis()
-        return float(ma.temp_size_in_bytes + ma.argument_size_in_bytes
-                     + ma.output_size_in_bytes)
-    except Exception:
-        return None
+    return _program_analysis(lowered)[0]
 
 
 def bench_streaming_json(n: int = 50_000, batch: int = 2_000,
@@ -232,22 +278,25 @@ def bench_streaming_json(n: int = 50_000, batch: int = 2_000,
             "peak_mem_bytes": None,
         })
 
-    # peak-mem proxies from the compiled scan programs; the loop driver has
-    # no single program — proxy with its per-batch fit program
+    # peak-mem proxies + analytical FLOP/byte estimates from the compiled
+    # scan programs (one compile each — _program_analysis shares it); the
+    # loop driver has no single program — proxy with its per-batch fit
+    register_estimators()
     ss0 = streaming.stream_init(prior, init)
-    results[1]["peak_mem_bytes"] = _peak_mem_proxy(
-        streaming._stream_fit_scan.lower(
+    results[1]["peak_mem_bytes"], results[1]["analytical"] = \
+        _program_analysis(streaming._stream_fit_scan.lower(
             cp, prior, ss0, xcs, xds, masks, sweeps=sweeps, tol=1e-4,
             drift_threshold=5.0, forget=0.3, backend=backend, chunk=None))
     ss0 = streaming.stream_init(prior, init)
-    results[2]["peak_mem_bytes"] = _peak_mem_proxy(
-        streaming._stream_fit_scan.lower(
+    results[2]["peak_mem_bytes"], results[2]["analytical"] = \
+        _program_analysis(streaming._stream_fit_scan.lower(
             cp, prior, ss0, xcs[:window], xds[:window], masks[:window],
             sweeps=sweeps, tol=1e-4, drift_threshold=5.0, forget=0.3,
             backend=backend, chunk=None))
-    results[0]["peak_mem_bytes"] = _peak_mem_proxy(
-        vmp.vmp_fit.lower(cp, prior, init, batches[0].xc, batches[0].xd,
-                          sweeps, 1e-4, batches[0].mask, "einsum", None))
+    results[0]["peak_mem_bytes"], results[0]["analytical"] = \
+        _program_analysis(
+            vmp.vmp_fit.lower(cp, prior, init, batches[0].xc, batches[0].xd,
+                              sweeps, 1e-4, batches[0].mask, "einsum", None))
 
     # same posterior from all drivers (parity is also unit-tested)
     drift = max(float(np.abs(
@@ -366,13 +415,20 @@ def bench_dvmp_json(n: int = 50_000, sweeps: int = 5, k: int = 3, f: int = 8,
     diff = float(np.abs(
         np.asarray(finals["vmp_single_device"].post.reg.m)
         - np.asarray(finals["dvmp_mesh"].post.reg.m)).max())
+    # analytical FLOP/byte estimate of the compiled mesh-fit program
+    register_estimators()
+    prog = dvmp._fit_program(cp, mesh, ("data",), sweeps, 0.0, backend, None)
+    _, analytical = _program_analysis(
+        prog.lower(prior, init, xc, xd,
+                   jax.numpy.ones(xc.shape[0], xc.dtype)))
     payload = {
         "bench": "dvmp",
         "schema_version": 1,
         "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
         "backend": backend,
         "config": {"n": n, "sweeps": sweeps, "features": f, "components": k,
-                   "mesh_shape": [ndev], **_bench_env_config()},
+                   "mesh_shape": [ndev], "analytical_mesh_fit": analytical,
+                   **_bench_env_config()},
         "results": results,
         "speedup_inst_per_s": results[1]["inst_per_s"]
         / results[0]["inst_per_s"],
@@ -966,42 +1022,49 @@ def main(argv=None) -> None:
                     help="instances for the --structure drivers")
     ap.add_argument("--structure-vars", type=int, default=8,
                     help="variables for the --structure drivers")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the benchmark "
+                         "run into DIR (open with TensorBoard/Perfetto)")
     args = ap.parse_args(argv)
 
     if (args.dvmp or args.latent or args.structure) and not args.json:
         ap.error("--dvmp/--latent/--structure require --json "
                  "(they write BENCH_*.json)")
-    if args.json and args.dvmp:
-        payload = bench_dvmp_json(
-            n=args.n, sweeps=args.sweeps, backend=args.backend,
-            n_devices=args.devices, out=args.out or "BENCH_dvmp.json")
-        validate_bench_dvmp(payload)
-        return
-    if args.json and args.latent:
-        payload = bench_latent_json(
-            n=args.latent_n, depth=args.depth,
-            out=args.out or "BENCH_latent.json")
-        validate_bench_latent(payload)
-        return
-    if args.json and args.structure:
-        payload = bench_structure_json(
-            n=args.structure_n, n_vars=args.structure_vars,
-            out=args.out or "BENCH_structure.json")
-        validate_bench_structure(payload)
-        return
-    if args.json:
-        payload = bench_streaming_json(
-            n=args.n, batch=args.batch, sweeps=args.sweeps,
-            backend=args.backend, window=args.window,
-            out=args.out or "BENCH_streaming.json")
-        validate_bench_streaming(payload)
-        return
 
-    print("name,us_per_call,derived")
-    for fn in (bench_vmp_parallel, bench_streaming, bench_drift,
-               bench_model_zoo, bench_importance_sampling, bench_kernels,
-               bench_exact_vs_approx, bench_lm_training):
-        fn()
+    from repro.obs.profile import profile
+
+    with profile(args.profile):
+        if args.json and args.dvmp:
+            payload = bench_dvmp_json(
+                n=args.n, sweeps=args.sweeps, backend=args.backend,
+                n_devices=args.devices, out=args.out or "BENCH_dvmp.json")
+            validate_bench_dvmp(payload)
+            return
+        if args.json and args.latent:
+            payload = bench_latent_json(
+                n=args.latent_n, depth=args.depth,
+                out=args.out or "BENCH_latent.json")
+            validate_bench_latent(payload)
+            return
+        if args.json and args.structure:
+            payload = bench_structure_json(
+                n=args.structure_n, n_vars=args.structure_vars,
+                out=args.out or "BENCH_structure.json")
+            validate_bench_structure(payload)
+            return
+        if args.json:
+            payload = bench_streaming_json(
+                n=args.n, batch=args.batch, sweeps=args.sweeps,
+                backend=args.backend, window=args.window,
+                out=args.out or "BENCH_streaming.json")
+            validate_bench_streaming(payload)
+            return
+
+        print("name,us_per_call,derived")
+        for fn in (bench_vmp_parallel, bench_streaming, bench_drift,
+                   bench_model_zoo, bench_importance_sampling, bench_kernels,
+                   bench_exact_vs_approx, bench_lm_training):
+            fn()
 
 
 if __name__ == "__main__":

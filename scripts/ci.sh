@@ -26,7 +26,14 @@
 #      pipelines are exercised even under pytest -k filters,
 #   6. a structure-recovery smoke: Chow-Liu learns a ground-truth tree from
 #      sampled data, recovers it exactly, and the learned network answers a
-#      schema-batched query through PGMQueryEngine.
+#      schema-batched query through PGMQueryEngine,
+#   7. the observability leg: one fresh process under REPRO_OBS=trace runs a
+#      drifting stream_fit plus schema-batched PGMQueryEngine flushes, then
+#      validate_obs_events checks the emitted JSONL against the event schema
+#      and asserts the run produced ELBO-per-batch metrics, drift events,
+#      per-bucket serve latency spans and kernel-dispatch counts; the obs
+#      test module also re-runs once with REPRO_OBS=trace ambient so the
+#      instrumentation is exercised at a non-default level under pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -57,7 +64,8 @@ BENCH_OUT="$(mktemp -t bench_streaming_smoke.XXXXXX.json)"
 DVMP_OUT="$(mktemp -t bench_dvmp_smoke.XXXXXX.json)"
 LATENT_OUT="$(mktemp -t bench_latent_smoke.XXXXXX.json)"
 STRUCT_OUT="$(mktemp -t bench_structure_smoke.XXXXXX.json)"
-trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT"' EXIT
+OBS_OUT="$(mktemp -t obs_events_smoke.XXXXXX.jsonl)"
+trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT" "$OBS_OUT"' EXIT
 python benchmarks/run.py --json --n 1000 --batch 250 --sweeps 2 \
     --window 2 --out "$BENCH_OUT"
 python - "$BENCH_OUT" <<'EOF'
@@ -202,3 +210,57 @@ for q in qs:
 print(f"ci smoke: Chow-Liu recovered the tree exactly "
       f"({len(edges)} edges), learned BN served {len(qs)} exact queries OK")
 EOF
+
+# obs leg: a FRESH process (kernel-dispatch counters fire at host-dispatch /
+# trace time, so the run must own its jit caches) emits the full telemetry
+# surface in one go, then the JSONL is schema-validated.
+REPRO_OBS=trace REPRO_OBS_PATH="$OBS_OUT" python - <<'EOF'
+import jax
+import jax.numpy as jnp
+from repro.core import streaming, vmp
+from repro.core.dag import PlateSpec
+from repro.data import synthetic as syn
+from repro.serve.engine import PGMQueryEngine
+
+# drifting stream -> stream_batch + drift events + kernel_dispatch snapshot
+stream, _ = syn.drift_stream(1000, 3, seed=8)
+cp = vmp.compile_plate(PlateSpec(n_features=3, latent_card=1))
+prior = vmp.default_prior(cp)
+init = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+batches = list(stream.batches(250))
+state = streaming.stream_init(prior, init)
+state, info = streaming.stream_fit(
+    cp, prior, state,
+    jnp.stack([b.xc for b in batches]), jnp.stack([b.xd for b in batches]),
+    jnp.stack([b.mask for b in batches]), drift_threshold=3.0)
+assert bool(info["drifted"].any()), "drift stream produced no drift event"
+
+# schema-batched serving -> serve spans, bucket events, jt_plan
+bn = syn.random_discrete_bn(5, card=3, seed=0, tree=True)
+eng = PGMQueryEngine(bn, mode="exact")
+for k in range(3):
+    eng.submit("D0", {"D3": k % 3, "D4": (k + 1) % 3})
+eng.submit("D0", {"D4": 1})
+eng.flush()
+for k in range(3):
+    eng.submit("D0", {"D3": (k + 1) % 3, "D4": k % 3})   # cached schema
+eng.flush()
+EOF
+python - "$OBS_OUT" <<'EOF'
+import sys
+from repro.obs import validate_obs_events
+
+counts = validate_obs_events(sys.argv[1])
+need = ("stream_batch", "drift", "span", "serve_flush", "serve_bucket",
+        "jt_plan", "kernel_dispatch")
+missing = [ev for ev in need if not counts.get(ev)]
+assert not missing, f"obs leg missing event types: {missing} (got {counts})"
+print(f"ci smoke: obs JSONL schema OK ({sum(counts.values())} events: "
+      + ", ".join(f"{k}={counts[k]}" for k in sorted(counts)) + ")")
+EOF
+
+echo "ci: obs-enabled pytest leg (REPRO_OBS=trace)"
+OBS_PYTEST_OUT="$(mktemp -t obs_pytest.XXXXXX.jsonl)"
+REPRO_OBS=trace REPRO_OBS_PATH="$OBS_PYTEST_OUT" \
+    python -m pytest -x -q tests/test_obs.py
+rm -f "$OBS_PYTEST_OUT"

@@ -35,6 +35,7 @@ from repro.core.compat import shard_map
 
 from repro.core import vmp as V
 from repro.core.vmp import CompiledPlate, PlateParams, PlateStats, VMPState
+from repro.obs.metrics import DvmpMetrics
 
 
 def _psum_stats(stats: PlateStats, axes) -> PlateStats:
@@ -55,13 +56,14 @@ def _psum_stats(stats: PlateStats, axes) -> PlateStats:
 @functools.lru_cache(maxsize=64)
 def _fit_program(cp: CompiledPlate, mesh: Mesh, data_axes: Tuple[str, ...],
                  max_sweeps: int, tol: float, backend: str,
-                 chunk: Optional[int]):
+                 chunk: Optional[int], with_metrics: bool = False):
     dspec = P(data_axes)
     rep = P()
 
     @partial(
         shard_map, mesh=mesh,
-        in_specs=(rep, rep, dspec, dspec, dspec), out_specs=rep,
+        in_specs=(rep, rep, dspec, dspec, dspec),
+        out_specs=(rep, rep) if with_metrics else rep,
         check_vma=False,
     )
     def fit_shard(prior_, init_, xc_, xd_, mask_):
@@ -82,7 +84,15 @@ def _fit_program(cp: CompiledPlate, mesh: Mesh, data_axes: Tuple[str, ...],
 
         s0 = VMPState(post=init_, elbo=jnp.asarray(-jnp.inf),
                       delta=jnp.asarray(jnp.inf), sweep=jnp.asarray(0))
-        return jax.lax.while_loop(cond, sweep, sweep(s0))
+        st = jax.lax.while_loop(cond, sweep, sweep(s0))
+        if not with_metrics:
+            return st
+        # per-shard effective instance counts, gathered across every data
+        # axis in order — rides the same replicated out_spec as the state
+        shard_n = mask_.sum()[None]
+        for ax in data_axes:
+            shard_n = jax.lax.all_gather(shard_n, ax).reshape(-1)
+        return st, DvmpMetrics(shard_n=shard_n, sweeps=st.sweep)
 
     return jax.jit(fit_shard)
 
@@ -121,6 +131,7 @@ def dvmp_fit(
     mask: Optional[jnp.ndarray] = None,
     backend: str = "einsum",
     chunk: Optional[int] = None,
+    with_metrics: bool = False,
 ) -> VMPState:
     """Distributed VMP fit.
 
@@ -129,11 +140,17 @@ def dvmp_fit(
     Global params are replicated; data is sharded over ``data_axes``.
     Result is numerically identical to single-device ``vmp_fit`` on the
     concatenated data (up to float reduction order) — tested.
+
+    ``with_metrics=True`` (part of the program-cache key — a separate
+    compiled program, the metric-free path is untouched) also returns a
+    :class:`DvmpMetrics`: per-shard effective instance counts (all_gather
+    of each shard's mask sum — the data-balance gauge) and
+    sweeps-to-convergence.
     """
     if mask is None:
         mask = jnp.ones(xc.shape[0], xc.dtype)
     prog = _fit_program(cp, mesh, tuple(data_axes), max_sweeps, tol,
-                        backend, chunk)
+                        backend, chunk, with_metrics)
     return prog(prior, init, xc, xd, mask)
 
 

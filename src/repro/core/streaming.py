@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from repro.core import vmp as V
 from repro.core import dvmp
 from repro.core.vmp import CompiledPlate, PlateParams
+from repro.obs import sink as obs
+from repro.obs.metrics import StreamBatchMetrics
 
 
 class DriftState(NamedTuple):
@@ -114,8 +116,13 @@ def _stream_step(
 
     THE step body, shared by the per-batch :func:`stream_update` API and
     the :func:`stream_fit` scan — both drivers run exactly this math.
-    ``fit_fn(prior, post) -> (post, elbo)`` supplies the inner VMP fit
-    (jitted ``vmp_fit``, traced ``fit_loop`` or d-VMP sweeps).
+    ``fit_fn(prior, post) -> (post, elbo, sweeps)`` supplies the inner VMP
+    fit (jitted ``vmp_fit``, traced ``fit_loop`` or d-VMP sweeps).
+
+    The info output is a :class:`StreamBatchMetrics` pytree computed
+    in-graph (ELBO, drift statistic + event mask, tempering rho, effective
+    instance count, sweeps-to-convergence) — scan-safe telemetry at zero
+    extra cost (every gauge is a byproduct of ops the step already runs).
     """
     n_eff = mask.sum()
 
@@ -138,7 +145,7 @@ def _stream_step(
     )
 
     # --- streaming VB: VMP sweeps against the chained prior ------------------
-    post, e = fit_fn(prior, state.post)
+    post, e, fit_sweeps = fit_fn(prior, state.post)
 
     new_state = StreamState(
         prior=post,  # Eq. 3: today's posterior is tomorrow's prior
@@ -147,8 +154,11 @@ def _stream_step(
         n_seen=state.n_seen + n_eff,
         n_drifts=state.n_drifts + drifted.astype(jnp.int32),
     )
-    info = {"elbo": e, "score": score, "ph": ph, "drifted": drifted}
-    return new_state, info
+    metrics = StreamBatchMetrics(
+        elbo=e, score=score, ph=ph, drifted=drifted, n_eff=n_eff,
+        rho=jnp.where(drifted, forget, 1.0), sweeps=fit_sweeps,
+    )
+    return new_state, metrics.as_info()
 
 
 def stream_update(
@@ -184,7 +194,7 @@ def stream_update(
         def fit_fn(prior, post):
             fit = V.vmp_fit(cp, prior, post, xc, xd, sweeps, tol,
                             mask, backend, chunk)
-            return fit.post, fit.elbo
+            return fit.post, fit.elbo, fit.sweep
     else:
         def fit_fn(prior, post):
             e = jnp.asarray(-jnp.inf)
@@ -193,10 +203,15 @@ def stream_update(
                     cp, prior, post, xc, xd, mask, mesh, data_axes,
                     backend, chunk
                 )
-            return post, e
+            return post, e, jnp.asarray(sweeps)
 
-    return _stream_step(cp, base_prior, state, xc, xd, mask,
-                        drift_threshold, forget, backend, chunk, fit_fn)
+    new_state, info = _stream_step(cp, base_prior, state, xc, xd, mask,
+                                   drift_threshold, forget, backend, chunk,
+                                   fit_fn)
+    if obs.enabled():
+        obs.emit_stream_events(info)
+        obs.emit_kernel_counts(site="stream_update")
+    return new_state, info
 
 
 @partial(
@@ -214,7 +229,7 @@ def _stream_fit_scan(cp, base_prior, state, xcs, xds, masks, *, sweeps, tol,
         def fit_fn(prior, post):
             fit = V.fit_loop(cp, prior, post, xc, xd, mask, sweeps, tol,
                              backend, chunk)
-            return fit.post, fit.elbo
+            return fit.post, fit.elbo, fit.sweep
 
         return _stream_step(cp, base_prior, carry, xc, xd, mask,
                             drift_threshold, forget, backend, chunk, fit_fn)
@@ -255,7 +270,12 @@ def stream_fit(
     footprint).  The tail window may retrace once if ``T % w != 0``.
 
     Returns the final state and per-batch info arrays
-    ``{"elbo", "score", "ph", "drifted"}`` each of leading dim T.
+    ``{"elbo", "score", "ph", "drifted", "n_eff", "rho", "sweeps"}`` each
+    of leading dim T (the :class:`StreamBatchMetrics` columns; ``drifted``
+    is the per-batch drift-event mask).  When obs is enabled
+    (``REPRO_OBS``) the same columns are emitted host-side as
+    ``stream_batch``/``drift`` JSONL events AFTER the scan returns — the
+    fused device program is byte-identical at every obs level.
     """
     # state is donated, but its leaves routinely alias each other and the
     # other operands (stream_init reuses the prior's buffers for state.prior
@@ -277,10 +297,15 @@ def stream_fit(
     if window is None or window >= T:
         if masks is None:
             masks = jnp.ones(xcs.shape[:2])
-        return _stream_fit_scan(cp, base_prior, state, xcs, xds, masks,
-                                sweeps=sweeps, tol=tol,
-                                drift_threshold=drift_threshold,
-                                forget=forget, backend=backend, chunk=chunk)
+        state, info = _stream_fit_scan(cp, base_prior, state, xcs, xds,
+                                       masks, sweeps=sweeps, tol=tol,
+                                       drift_threshold=drift_threshold,
+                                       forget=forget, backend=backend,
+                                       chunk=chunk)
+        if obs.enabled():
+            obs.emit_stream_events(info)
+            obs.emit_kernel_counts(site="stream_fit")
+        return state, info
     infos = []
     for t0 in range(0, T, window):
         xc_w = jnp.asarray(xcs[t0:t0 + window])
@@ -294,4 +319,7 @@ def stream_fit(
                                        chunk=chunk)
         infos.append(info)
     info = {k: jnp.concatenate([i[k] for i in infos]) for k in infos[0]}
+    if obs.enabled():
+        obs.emit_stream_events(info)
+        obs.emit_kernel_counts(site="stream_fit")
     return state, info

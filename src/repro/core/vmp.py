@@ -30,6 +30,8 @@ import jax.numpy as jnp
 
 from repro.core import expfam as ef
 from repro.core.dag import PlateSpec
+from repro.obs import sink as obs_sink
+from repro.obs.metrics import LocalStepMetrics
 
 
 # ---------------------------------------------------------------------------
@@ -262,6 +264,7 @@ def _reduce_reg(cp: CompiledPlate, obs: jnp.ndarray, y: jnp.ndarray,
     lay = cp.layout
     L = lay.L
     if L == 0:
+        obs_sink.count_kernel(f"clg_suffstats:{backend}")
         if backend == "pallas":
             from repro.kernels import clg_stats
 
@@ -271,6 +274,7 @@ def _reduce_reg(cp: CompiledPlate, obs: jnp.ndarray, y: jnp.ndarray,
             sxy = jnp.einsum("nfa,nf,nk->fka", obs, y, r)
             syy = jnp.einsum("nf,nf,nk->fk", y, y, r)
         return sxx, None, sxy, syy
+    obs_sink.count_kernel(f"clg_suffstats_latent:{backend}")
     if backend == "pallas":
         from repro.kernels import clg_stats
 
@@ -301,6 +305,7 @@ def _reduce_disc(cp: CompiledPlate, xd: jnp.ndarray, r: jnp.ndarray,
                  backend: str) -> jnp.ndarray:
     """Discrete-leaf one-hot count reduction -> [Fd, K, C]."""
     lay = cp.layout
+    obs_sink.count_kernel(f"clg_disc_counts:{backend}")
     if backend == "pallas":
         from repro.kernels import clg_stats
 
@@ -436,6 +441,7 @@ def local_step(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
                xd: jnp.ndarray, mask: jnp.ndarray,
                r_fixed: Optional[jnp.ndarray] = None, *,
                backend: str = "einsum", chunk: Optional[int] = None,
+               with_metrics: bool = False,
                ) -> Tuple[PlateStats, jnp.ndarray]:
     """One local VMP step on a batch.
 
@@ -449,13 +455,21 @@ def local_step(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
     [N, F, K] / [N, K, L, L] intermediate ever materializes at full N.
     Both knobs only change the reduction schedule, not the math.
 
-    Returns the suff-stat message pytree and the responsibilities r: [N, K].
+    Returns the suff-stat message pytree and the responsibilities r: [N, K];
+    with ``with_metrics=True`` (a static flag — jitted callers key on it)
+    additionally returns an :class:`LocalStepMetrics` pytree whose
+    ``chunk_n_eff`` holds the per-chunk effective instance counts ([1] when
+    unchunked) — in-graph observability of the reduction schedule.
     """
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
     N = xc.shape[0]
     if chunk is None or chunk >= N:
-        return _local_step_body(cp, params, xc, xd, mask, r_fixed, backend)
+        stats, r = _local_step_body(cp, params, xc, xd, mask, r_fixed,
+                                    backend)
+        if with_metrics:
+            return stats, r, LocalStepMetrics(chunk_n_eff=mask.sum()[None])
+        return stats, r
 
     nchunks = -(-N // chunk)
     pad = nchunks * chunk - N
@@ -489,6 +503,8 @@ def local_step(cp: CompiledPlate, params: PlateParams, xc: jnp.ndarray,
           else (xcs[1:], xds[1:], ms[1:], rfs[1:]))
     stats, rs = jax.lax.scan(body, stats0, xs)
     r = jnp.concatenate([r0[None], rs], axis=0).reshape(nchunks * chunk, -1)
+    if with_metrics:
+        return stats, r[:N], LocalStepMetrics(chunk_n_eff=ms.sum(axis=1))
     return stats, r[:N]
 
 

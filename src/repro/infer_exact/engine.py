@@ -46,6 +46,7 @@ from repro.infer_exact import cg_potentials as CG
 from repro.infer_exact import factors as F
 from repro.infer_exact.graph import (JunctionTree, compile_junction_tree,
                                      compile_strong_junction_tree)
+from repro import obs
 
 
 def _needs_strong(bn: BayesianNetwork) -> bool:
@@ -75,7 +76,8 @@ class JunctionTreeEngine:
         self._beliefs: Optional[Tuple] = None
         self._logz: Optional[jnp.ndarray] = None
         self._batched = False
-        self._compiled: Dict[Tuple[str, ...], object] = {}
+        self._compiled: Dict[Tuple, object] = {}
+        self.last_run: Optional[Dict[str, object]] = None
         if bn is not None:
             self.set_model(bn)
 
@@ -153,12 +155,33 @@ class JunctionTreeEngine:
         self.evidence = ev
         self._beliefs = None
 
+    def _plan_levels(self) -> List[int]:
+        """Clique count per tree depth (root = level 0) — the propagation
+        plan shape both pipelines schedule by."""
+        depth = {self.jt.root: 0}
+        for u, p, _ in self._distribute:     # preorder: parent before child
+            depth[u] = depth[p] + 1
+        levels = [0] * (max(depth.values()) + 1 if depth else 1)
+        for d in depth.values():
+            levels[d] += 1
+        return levels
+
     def run_inference(self) -> None:
         """Propagate. One device call for the full (batched) tree.
 
         Zero-probability evidence is reported as ``log_evidence() == -inf``
         (posteriors are then 0/0 = NaN — check the evidence first).
+
+        Propagation programs are compiled ahead-of-time per
+        ``(schema, batch, dtypes)`` key, which splits compile from execute
+        time; ``self.last_run`` always records
+        ``{"cache_hit", "compile_us", "execute_us", "batch", "pipeline"}``
+        (the serving tier's per-bucket split), and ``obs`` additionally gets
+        ``jt.compile``/``jt.execute`` spans plus a ``jt_plan`` event (per-
+        level clique counts) at trace level.
         """
+        import time as _time
+
         names = tuple(sorted(self.evidence))
         vals = []
         B = 1
@@ -172,13 +195,41 @@ class JunctionTreeEngine:
                 f"evidence batch lengths disagree: {sorted(sizes)}")
         self._batched = any(v.shape[0] > 1 for v in vals)
         vals = tuple(jnp.broadcast_to(v, (B,)) for v in vals)
-        fn = self._compiled.get(names)
+        pipeline = "strong" if self.strong else "discrete"
+        # AOT executables do not retrace on new shapes the way lazy jit
+        # does, so the cache key carries everything shape-affecting
+        key = (names, B, tuple(str(v.dtype) for v in vals))
+        fn = self._compiled.get(key)
+        cache_hit = fn is not None
+        compile_us = 0.0
         if fn is None:
             prop = self._propagate_strong if self.strong else self._propagate
-            fn = jax.jit(partial(prop, names))
-            self._compiled[names] = fn
+            t0 = _time.perf_counter_ns()
+            with obs.span("jt.compile", schema=",".join(names), batch=B,
+                          pipeline=pipeline):
+                fn = jax.jit(partial(prop, names)).lower(vals).compile()
+            compile_us = (_time.perf_counter_ns() - t0) / 1e3
+            self._compiled[key] = fn
+            if obs.enabled():
+                obs.emit("jt_plan", pipeline=pipeline,
+                         n_cliques=len(self.jt.cliques),
+                         levels=self._plan_levels(),
+                         bucketed=self.bucketed, batch=B,
+                         schema=",".join(names))
         self._run_names = names
-        self._beliefs, self._logz = fn(vals)
+        t0 = _time.perf_counter_ns()
+        with obs.span("jt.execute", schema=",".join(names), batch=B,
+                      pipeline=pipeline, cache_hit=cache_hit):
+            out = fn(vals)
+            if obs.enabled(obs.TRACE):
+                # only at trace level: force the async dispatch to finish so
+                # the span measures device time, not enqueue time
+                out = jax.block_until_ready(out)
+        execute_us = (_time.perf_counter_ns() - t0) / 1e3
+        self._beliefs, self._logz = out
+        self.last_run = {"cache_hit": cache_hit, "compile_us": compile_us,
+                         "execute_us": execute_us, "batch": B,
+                         "pipeline": pipeline}
 
     # ======================= discrete pipeline ==============================
 

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+# obs is deliberately jax-free (safe even before the XLA_FLAGS line above)
+from repro import obs
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
 from repro.launch.mesh import data_axes_of, make_production_mesh
@@ -328,7 +330,8 @@ def main(argv=None) -> int:
                     failures += 1
                 with open(out_path, "w") as f:
                     json.dump(rec, f, indent=1)
-                print(f"[dryrun] {tag}: {status}", flush=True)
+                obs.log(f"[dryrun] {tag}: {status}", component="dryrun",
+                        tag=tag, status=status)
     return 1 if failures else 0
 
 

@@ -24,6 +24,7 @@ def main(argv=None) -> int:
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.configs import get_config
     from repro.nn import transformer as T
     from repro.serve.engine import DecodeEngine, Request
@@ -53,8 +54,10 @@ def main(argv=None) -> int:
     dt = time.time() - t0
     done = args.requests
     toks = done * args.max_new
-    print(f"[serve] {done} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:,.0f} tok/s, batch={args.batch})")
+    obs.log(f"[serve] {done} requests, {toks} tokens in {dt:.1f}s "
+            f"({toks/dt:,.0f} tok/s, batch={args.batch})",
+            component="serve", requests=done, tokens=toks, seconds=dt,
+            tok_s=toks / dt, batch=args.batch)
     return 0
 
 

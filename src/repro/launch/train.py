@@ -36,6 +36,7 @@ def main(argv=None) -> int:
     import jax
     import jax.numpy as jnp
 
+    from repro import obs
     from repro.configs import get_config
     from repro.data.tokens import TokenStream, markov_sequence_fast
     from repro.launch.mesh import make_host_mesh
@@ -48,8 +49,10 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    print(f"[train] arch={cfg.name} params~{cfg.n_params()/1e6:.1f}M "
-          f"optimizer={args.optimizer}")
+    obs.log(f"[train] arch={cfg.name} params~{cfg.n_params()/1e6:.1f}M "
+            f"optimizer={args.optimizer}",
+            component="train", arch=cfg.name, n_params=cfg.n_params(),
+            optimizer=args.optimizer)
 
     sh = T.NO_SHARD
     if args.data_shards * args.model_shards > 1:
@@ -84,14 +87,18 @@ def main(argv=None) -> int:
         monitor, drifted = monitor.observe(jnp.asarray(loss))
         if i % args.log_every == 0 or i == args.steps - 1:
             tps = args.batch * args.seq * (i + 1) / (time.time() - t0)
-            print(f"[train] step={i:5d} loss={loss:.4f} tok/s={tps:,.0f}"
-                  + (" DRIFT" if bool(drifted) else ""))
-    print(f"[train] done: first={losses[0]:.3f} last={losses[-1]:.3f} "
-          f"log(V)={np.log(cfg.vocab):.3f}")
+            obs.log(f"[train] step={i:5d} loss={loss:.4f} tok/s={tps:,.0f}"
+                    + (" DRIFT" if bool(drifted) else ""),
+                    component="train", step=i, loss=loss, tok_s=tps,
+                    drifted=bool(drifted))
+    obs.log(f"[train] done: first={losses[0]:.3f} last={losses[-1]:.3f} "
+            f"log(V)={np.log(cfg.vocab):.3f}",
+            component="train", first_loss=losses[0], last_loss=losses[-1])
     if args.ckpt:
         p = state.params if args.optimizer == "adamw" else state.vb.mean
         ck.save(args.ckpt, p)
-        print(f"[train] checkpoint -> {args.ckpt}")
+        obs.log(f"[train] checkpoint -> {args.ckpt}", component="train",
+                ckpt=args.ckpt)
     return 0
 
 

@@ -1,0 +1,42 @@
+"""repro.obs — observability: metrics pytrees, span tracing, JSONL sink.
+
+Layering rule: this package (and everything imported here) is jax-free,
+so ``repro.obs`` can be imported before jax is configured —
+``launch/dryrun.py`` must set ``XLA_FLAGS`` before the first jax import.
+The two jax-adjacent pieces are opt-in imports: ``repro.obs.metrics``
+holds the pytree definitions (itself jax-free; the arrays come from the
+caller) and ``repro.obs.profile`` imports jax lazily inside the context
+manager.
+
+Quick start::
+
+    REPRO_OBS=basic  python ...   # JSONL events -> $REPRO_OBS_PATH
+    REPRO_OBS=trace  python ...   # + host latency spans
+
+    from repro import obs
+    with obs.span("my.region", tag="x") as sp:
+        ...
+    obs.emit("metric", name="elbo", value=-1.23)
+
+See ``obs/sink.py`` for the event schema and README "Observability".
+"""
+
+from repro.obs.sink import (BASIC, EVENT_SCHEMA, OFF, TRACE, configure,
+                            count_kernel, emit, emit_kernel_counts,
+                            emit_stream_events, enabled, estimate,
+                            kernel_counts, level, log, register, registered,
+                            validate_obs_events)
+from repro.obs.trace import current_span, span
+from repro.obs.metrics import (DvmpMetrics, LocalStepMetrics,
+                               StreamBatchMetrics)
+
+__all__ = [
+    "OFF", "BASIC", "TRACE", "EVENT_SCHEMA",
+    "configure", "enabled", "level",
+    "emit", "log", "span", "current_span",
+    "count_kernel", "kernel_counts", "emit_kernel_counts",
+    "emit_stream_events",
+    "register", "registered", "estimate",
+    "validate_obs_events",
+    "StreamBatchMetrics", "LocalStepMetrics", "DvmpMetrics",
+]

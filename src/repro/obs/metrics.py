@@ -1,0 +1,47 @@
+"""Metrics pytrees — jit/scan-safe counters and gauges.
+
+These are plain NamedTuples of arrays, so they ride through ``lax.scan``
+carries/outputs, ``shard_map`` and donation like any other pytree: the
+fused hot paths (``streaming._stream_fit_scan``, ``vmp.local_step``'s
+chunked scan, the ``dvmp`` mesh programs) compute them IN-GRAPH and the
+host decides after the fact whether to ship them to the sink
+(``sink.emit_stream_events``).  Nothing here imports jax — the fields
+are whatever arrays the caller puts in, which keeps ``repro.obs``
+importable before jax is configured (``launch/dryrun.py`` sets XLA
+flags pre-import).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+
+class StreamBatchMetrics(NamedTuple):
+    """Per-batch gauges from one streaming-VMP step (scalars in
+    ``stream_update``; ``[T]`` stacked columns out of ``stream_fit``)."""
+
+    elbo: Any      # final ELBO of the batch fit
+    score: Any     # per-instance ELBO (drift statistic input)
+    ph: Any        # Page-Hinkley statistic after the batch
+    drifted: Any   # bool: did the detector fire on this batch
+    n_eff: Any     # effective instance count (mask sum)
+    rho: Any       # prior tempering factor applied (1.0 = no temper)
+    sweeps: Any    # VMP sweeps-to-convergence for the batch fit
+
+    def as_info(self) -> Dict[str, Any]:
+        """The dict view that ``stream_fit``/``stream_update`` return
+        (the public info API predates this pytree and stays dict-shaped)."""
+        return dict(self._asdict())
+
+
+class LocalStepMetrics(NamedTuple):
+    """Optional output of ``vmp.local_step(..., with_metrics=True)``."""
+
+    chunk_n_eff: Any   # [n_chunks] effective instances reduced per chunk
+
+
+class DvmpMetrics(NamedTuple):
+    """Optional output of ``dvmp.dvmp_fit(..., with_metrics=True)``."""
+
+    shard_n: Any   # [n_shards] per-device effective instance counts
+    sweeps: Any    # scalar: sweeps-to-convergence of the distributed fit

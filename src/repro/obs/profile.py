@@ -1,0 +1,39 @@
+"""``jax.profiler`` integration hook.
+
+Device-side time (kernel durations, HLO-op breakdown) is out of scope
+for the host span tracer — this module bridges to the real profiler.
+``benchmarks/run.py --profile DIR`` wraps each benchmark in
+:func:`profile`; the resulting trace opens in TensorBoard / Perfetto.
+
+jax is imported lazily so ``repro.obs`` stays importable before jax is
+configured (see ``launch/dryrun.py``'s XLA_FLAGS ordering).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+from repro.obs import sink
+
+
+@contextlib.contextmanager
+def profile(logdir: Optional[str]) -> Iterator[None]:
+    """Capture a ``jax.profiler`` trace into ``logdir``.
+
+    No-op when ``logdir`` is falsy, so call sites can pass the CLI flag
+    straight through.  Emits a ``log`` event bracketing the capture when
+    obs is enabled."""
+    if not logdir:
+        yield
+        return
+    import jax
+
+    sink.emit("log", msg=f"profiler trace -> {logdir}", component="profile")
+    jax.profiler.start_trace(logdir)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+        sink.emit("log", msg=f"profiler trace written to {logdir}",
+                  component="profile")

@@ -27,6 +27,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.data.stream import Batch
 from repro.nn import transformer as T
@@ -154,6 +155,7 @@ class PGMQueryEngine:
                     if mode == "exact" else None)
         self._queue: List[PGMQuery] = []
         self._next = 0
+        self._vmp_caps: set = set()   # compiled posterior_z batch capacities
 
     def submit(self, target: str, evidence: Dict[str, float]) -> PGMQuery:
         if self.mode == "vmp":
@@ -173,23 +175,50 @@ class PGMQueryEngine:
         return q
 
     def flush(self) -> List[PGMQuery]:
-        """Answer every queued query; one device call per evidence schema."""
+        """Answer every queued query; one device call per evidence schema.
+
+        When obs is enabled each schema bucket is measured — queue depth,
+        batch size, compile-vs-execute split (from the junction tree's
+        ``last_run``), cache hit/miss and wall latency — as a
+        ``serve.bucket`` span plus a ``serve_bucket`` event, with a
+        ``serve_flush`` summary and a kernel-dispatch snapshot at the end.
+        Disabled (the default), this method runs the pre-obs code path with
+        one integer compare per bucket added.
+        """
+        import time as _time
+
         done, queue = [], self._queue
         self._queue = []
         groups: Dict[tuple, List[PGMQuery]] = {}
         for q in queue:
             groups.setdefault(tuple(sorted(q.evidence)), []).append(q)
-        for schema, qs in groups.items():
-            if self.mode == "exact":
-                self._flush_exact(schema, qs)
-            elif self.mode == "vmp":
-                self._flush_vmp(schema, qs)
-            else:
-                self._flush_importance(qs)
-            done.extend(qs)
+        queue_depth = len(queue)
+        with obs.span("serve.flush", mode=self.mode, n_queries=queue_depth,
+                      n_buckets=len(groups)):
+            for schema, qs in groups.items():
+                t0 = _time.perf_counter_ns()
+                with obs.span("serve.bucket", mode=self.mode,
+                              schema=",".join(schema), batch=len(qs)):
+                    if self.mode == "exact":
+                        binfo = self._flush_exact(schema, qs)
+                    elif self.mode == "vmp":
+                        binfo = self._flush_vmp(schema, qs)
+                    else:
+                        binfo = self._flush_importance(qs)
+                if obs.enabled():
+                    obs.emit("serve_bucket", mode=self.mode,
+                             schema=",".join(schema), batch=len(qs),
+                             queue_depth=queue_depth,
+                             latency_us=(_time.perf_counter_ns() - t0) / 1e3,
+                             **binfo)
+                done.extend(qs)
+        if obs.enabled():
+            obs.emit("serve_flush", mode=self.mode, n_queries=queue_depth,
+                     n_buckets=len(groups))
+            obs.emit_kernel_counts(site="serve.flush")
         return done
 
-    def _flush_exact(self, schema: tuple, qs: List[PGMQuery]) -> None:
+    def _flush_exact(self, schema: tuple, qs: List[PGMQuery]) -> dict:
         ev = {n: jnp.asarray([q.evidence[n] for q in qs]) for n in schema}
         self._jt.set_evidence(ev)
         self._jt.run_inference()
@@ -203,8 +232,12 @@ class PGMQueryEngine:
                     q.result = post[b if post.shape[0] > 1 else 0]
                     q.log_evidence = float(logz[b if logz.size > 1 else 0])
                     q.done = True
+        lr = self._jt.last_run or {}
+        return {"cache_hit": bool(lr.get("cache_hit", False)),
+                "compile_us": lr.get("compile_us", 0.0),
+                "execute_us": lr.get("execute_us", 0.0)}
 
-    def _flush_vmp(self, schema: tuple, qs: List[PGMQuery]) -> None:
+    def _flush_vmp(self, schema: tuple, qs: List[PGMQuery]) -> dict:
         """q(Z | x) for a schema group in ONE jitted posterior_z dispatch.
 
         Queries were validated at submit time (full evidence, target Z)."""
@@ -221,14 +254,17 @@ class PGMQueryEngine:
         for b, q in enumerate(qs):
             xc[b] = [q.evidence[f"X{i}"] for i in cont_ids]
             xd[b] = [q.evidence[f"X{i}"] for i in sorted(dm)]
+        cache_hit = cap in self._vmp_caps   # reused compiled posterior_z cap
+        self._vmp_caps.add(cap)
         post = np.asarray(model.posterior_z(Batch(
             jnp.asarray(xc), jnp.asarray(xd),
             jnp.ones(cap, jnp.float32))))
         for b, q in enumerate(qs):
             q.result = post[b]
             q.done = True
+        return {"cache_hit": cache_hit, "compile_us": 0.0, "execute_us": 0.0}
 
-    def _flush_importance(self, qs: List[PGMQuery]) -> None:
+    def _flush_importance(self, qs: List[PGMQuery]) -> dict:
         from repro.core.importance_sampling import ImportanceSampling
 
         for q in qs:
@@ -240,3 +276,4 @@ class PGMQueryEngine:
             var = self.bn.dag.variables.by_name(q.target)
             q.result = np.asarray(inf.posterior_discrete(var))
             q.done = True
+        return {"cache_hit": False, "compile_us": 0.0, "execute_us": 0.0}

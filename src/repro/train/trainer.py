@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.bayes import vb_optimizer as vb
 from repro.bayes.drift import LossDriftMonitor
 from repro.configs.base import ModelConfig
@@ -88,9 +89,11 @@ class Trainer:
                 self._on_drift()
             if self.tcfg.log_every and i % self.tcfg.log_every == 0:
                 tps = tok_per_batch * (i + 1) / (time.time() - t0)
-                print(f"[trainer] step={i:5d} loss={loss:.4f} "
-                      f"tok/s={tps:,.0f}"
-                      + (" DRIFT" if bool(drifted) else ""))
+                obs.log(f"[trainer] step={i:5d} loss={loss:.4f} "
+                        f"tok/s={tps:,.0f}"
+                        + (" DRIFT" if bool(drifted) else ""),
+                        component="trainer", step=i, loss=loss, tok_s=tps,
+                        drifted=bool(drifted))
             if eval_fn and self.tcfg.eval_every \
                     and i and i % self.tcfg.eval_every == 0:
                 eval_fn(self.params, i)
