@@ -68,6 +68,20 @@ BENCH_STRUCTURE_SCHEMA = {
 }
 
 
+# --json --temporal mode: the fused temporal hot path — the whole-fit
+# lax.scan (dynamic HMM family) vs the seed-style host sweep loop at
+# B=512/T=64, the chain-parallel fHMM suff-stats backends, fused/unfused
+# posterior parity and the compiled-program (no-retrace) flag.
+BENCH_TEMPORAL_SCHEMA = {
+    "bench": str, "schema_version": int, "created": str,
+    "config": dict, "results": list,
+    "speedup_seq_per_s": float,
+    "fused_posterior_max_abs_diff": float,
+    "fhmm_backend_max_abs_diff": float,
+    "retrace_free": bool,
+}
+
+
 def _bench_env_config() -> dict:
     """Environment fields stamped into every BENCH_*.json config block so
     the perf trajectory is comparable across jax versions / kernel policies."""
@@ -760,6 +774,147 @@ def validate_bench_structure(payload: dict) -> None:
                          f"F1={payload['hillclimb_skeleton_f1']}")
 
 
+def bench_temporal_json(b: int = 512, t: int = 64, states: int = 3,
+                        f: int = 2, sweeps: int = 5, chains: int = 2,
+                        reps: int = 3, out: str = "BENCH_temporal.json"
+                        ) -> dict:
+    """(JSON mode) the temporal hot path (pgm_models.dynamic).
+
+    Part 1 — HMM VB-EM at B=``b`` sequences x T=``t`` steps: the seed-style
+    host sweep loop (one device dispatch per E/M step) vs the fused
+    whole-fit ``lax.scan`` (``fused=True``), sequences/s both ways plus the
+    posterior max-abs-diff between the two drivers (``tol=0`` so both run
+    exactly ``sweeps`` sweeps).
+
+    Part 2 — factorial HMM chain-parallel sweep: ``einsum`` vs ``pallas``
+    suff-stats backends (the ``clg_seq_suffstats`` kernel), sequences/s and
+    the learnt-means max-abs-diff.
+
+    Part 3 — program caching: refitting a FRESH same-shape model must NOT
+    retrace the fused program (``dynamic.trace_counts``) — recorded as the
+    ``retrace_free`` flag the CI gate asserts.
+    """
+    import datetime
+
+    from repro.data.synthetic import hmm_sequences
+    from repro.pgm_models import FactorialHMMModel, HiddenMarkovModel
+    from repro.pgm_models import dynamic as dyn
+
+    stream = hmm_sequences(s=b, t=t, states=states, f=f, seed=0)[0]
+    batch = stream.collect()
+    results = []
+
+    def make():
+        m = HiddenMarkovModel(stream.attributes, n_states=states, seed=0)
+        m._warm_start(batch.xc)     # identical init for every driver
+        return m
+
+    # -- part 1: fused scan vs host sweep loop -------------------------------
+    mf, mu = make(), make()
+    mf.update_model(batch, sweeps=sweeps, tol=0.0, fused=True)
+    mu.update_model(batch, sweeps=sweeps, tol=0.0, fused=False)
+    parity = float(np.abs(np.asarray(mf.posterior.emis.m)
+                          - np.asarray(mu.posterior.emis.m)).max())
+    for name, fused in (("hmm_update_host_loop", False),
+                        ("hmm_fit_fused_scan", True)):
+        m = make()
+        m.update_model(batch, sweeps=sweeps, tol=0.0, fused=fused)  # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            m.update_model(batch, sweeps=sweeps, tol=0.0, fused=fused)
+        dt = (time.perf_counter() - t0) / reps
+        results.append({
+            "driver": name, "B": b, "T": t, "sweeps": sweeps,
+            "us_per_fit": dt * 1e6, "seq_per_s": b / dt,
+            "sweeps_per_s": sweeps / dt,
+        })
+    speedup = results[1]["seq_per_s"] / results[0]["seq_per_s"]
+
+    # -- part 2: fHMM suff-stats backends ------------------------------------
+    fmeans = {}
+    for backend in ("einsum", "pallas"):
+        fm = FactorialHMMModel(stream.attributes, n_chains=chains,
+                               n_states=2, seed=0)
+        fm.update_model(batch, sweeps=sweeps, tol=0.0, backend=backend)
+        fmeans[backend] = np.asarray(fm.means)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fm.update_model(batch, sweeps=sweeps, tol=0.0, backend=backend)
+        dt = (time.perf_counter() - t0) / reps
+        results.append({
+            "driver": "fhmm_fit_fused_scan", "backend": backend,
+            "B": b, "T": t, "sweeps": sweeps, "us_per_fit": dt * 1e6,
+            "seq_per_s": b / dt, "sweeps_per_s": sweeps / dt,
+        })
+    fhmm_diff = float(np.abs(fmeans["einsum"] - fmeans["pallas"]).max())
+
+    # -- part 3: a fresh same-shape model reuses the compiled program --------
+    before = dyn.trace_counts().get("hmm_fit", 0)
+    make().update_model(batch, sweeps=sweeps, tol=0.0, fused=True)
+    retrace_free = dyn.trace_counts().get("hmm_fit", 0) == before
+
+    payload = {
+        "bench": "temporal",
+        "schema_version": 1,
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "config": {"B": b, "T": t, "states": states, "features": f,
+                   "sweeps": sweeps, "chains": chains,
+                   **_bench_env_config()},
+        "results": results,
+        "speedup_seq_per_s": speedup,
+        "fused_posterior_max_abs_diff": parity,
+        "fhmm_backend_max_abs_diff": fhmm_diff,
+        "retrace_free": retrace_free,
+    }
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {out}: hmm_fit_fused_scan {speedup:.2f}x seq/s vs host "
+          f"loop ({results[1]['seq_per_s']:.0f} vs "
+          f"{results[0]['seq_per_s']:.0f}); posterior diff {parity:.2e}, "
+          f"fhmm backend diff {fhmm_diff:.2e}, retrace_free={retrace_free}")
+    return payload
+
+
+def validate_bench_temporal(payload: dict) -> None:
+    """Schema gate for BENCH_temporal.json — used by scripts/ci.sh."""
+    for key, typ in BENCH_TEMPORAL_SCHEMA.items():
+        if key not in payload:
+            raise ValueError(f"BENCH_temporal.json missing key {key!r}")
+        if typ is float and isinstance(payload[key], int):
+            continue
+        if not isinstance(payload[key], typ):
+            raise ValueError(f"{key!r} must be {typ.__name__}, "
+                             f"got {type(payload[key]).__name__}")
+    for key in ("jax_version", "pallas_policy"):
+        if key not in payload["config"]:
+            raise ValueError(f"config missing {key!r}")
+    drivers = {r["driver"] for r in payload["results"]}
+    for need in ("hmm_update_host_loop", "hmm_fit_fused_scan",
+                 "fhmm_fit_fused_scan"):
+        if need not in drivers:
+            raise ValueError(f"missing driver {need!r}")
+    backends = {r.get("backend") for r in payload["results"]
+                if r["driver"] == "fhmm_fit_fused_scan"}
+    if backends != {"einsum", "pallas"}:
+        raise ValueError(f"fhmm_fit_fused_scan must cover both backends, "
+                         f"got {backends}")
+    for r in payload["results"]:
+        if not r["seq_per_s"] > 0:
+            raise ValueError("seq_per_s must be positive")
+    if not payload["speedup_seq_per_s"] > 1.0:
+        raise ValueError("fused temporal fit must beat the host sweep loop: "
+                         f"speedup {payload['speedup_seq_per_s']}")
+    if not payload["fused_posterior_max_abs_diff"] < 1e-2:
+        raise ValueError("fused/unfused posterior parity broke: "
+                         f"{payload['fused_posterior_max_abs_diff']}")
+    if not payload["fhmm_backend_max_abs_diff"] < 1e-2:
+        raise ValueError("fHMM pallas backend diverged from einsum: "
+                         f"{payload['fhmm_backend_max_abs_diff']}")
+    if payload["retrace_free"] is not True:
+        raise ValueError("same-shape refit retraced the fused program")
+
+
 def bench_drift():
     """(iv) drift detection latency (batches until flagged)."""
     import jax
@@ -1002,6 +1157,10 @@ def main(argv=None) -> None:
                     help="with --json: run the structure-learning drivers "
                          "(family scoring, Chow-Liu, hill-climb) and write "
                          "BENCH_structure.json instead")
+    ap.add_argument("--temporal", action="store_true",
+                    help="with --json: run the fused temporal VB-EM drivers "
+                         "(HMM scan vs host loop, fHMM backends) and write "
+                         "BENCH_temporal.json instead")
     ap.add_argument("--out", default=None)
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--batch", type=int, default=2_000)
@@ -1022,13 +1181,18 @@ def main(argv=None) -> None:
                     help="instances for the --structure drivers")
     ap.add_argument("--structure-vars", type=int, default=8,
                     help="variables for the --structure drivers")
+    ap.add_argument("--temporal-b", type=int, default=512,
+                    help="sequences per batch for the --temporal drivers")
+    ap.add_argument("--temporal-t", type=int, default=64,
+                    help="steps per sequence for the --temporal drivers")
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of the benchmark "
                          "run into DIR (open with TensorBoard/Perfetto)")
     args = ap.parse_args(argv)
 
-    if (args.dvmp or args.latent or args.structure) and not args.json:
-        ap.error("--dvmp/--latent/--structure require --json "
+    if ((args.dvmp or args.latent or args.structure or args.temporal)
+            and not args.json):
+        ap.error("--dvmp/--latent/--structure/--temporal require --json "
                  "(they write BENCH_*.json)")
 
     from repro.obs.profile import profile
@@ -1051,6 +1215,12 @@ def main(argv=None) -> None:
                 n=args.structure_n, n_vars=args.structure_vars,
                 out=args.out or "BENCH_structure.json")
             validate_bench_structure(payload)
+            return
+        if args.json and args.temporal:
+            payload = bench_temporal_json(
+                b=args.temporal_b, t=args.temporal_t, sweeps=args.sweeps,
+                out=args.out or "BENCH_temporal.json")
+            validate_bench_temporal(payload)
             return
         if args.json:
             payload = bench_streaming_json(

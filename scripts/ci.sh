@@ -20,6 +20,10 @@
 #   4c. the structure-learning harness (--json --structure) on tiny sizes:
 #      schema validation PLUS the family_counts-vs-einsum score parity and
 #      the Chow-Liu / hill-climb recovery gates baked into the validator,
+#   4d. the temporal harness (--json --temporal) on tiny sizes: schema
+#      validation PLUS the fused-vs-host-loop posterior parity, the fHMM
+#      pallas-vs-einsum suff-stats parity and the no-retrace program-cache
+#      flag baked into the validator,
 #   5. end-to-end junction-tree queries through the public API: a discrete
 #      2-variable query AND a strong-junction-tree query on a CLG network
 #      with an unobserved continuous INTERNAL node, so both exact-inference
@@ -33,7 +37,12 @@
 #      and asserts the run produced ELBO-per-batch metrics, drift events,
 #      per-bucket serve latency spans and kernel-dispatch counts; the obs
 #      test module also re-runs once with REPRO_OBS=trace ambient so the
-#      instrumentation is exercised at a non-default level under pytest.
+#      instrumentation is exercised at a non-default level under pytest,
+#   7b. the temporal obs leg: a fresh process fits a dynamic HMM (fused),
+#      replays a sequence stream through seq_stream_fit and serves
+#      filter/predict queries via PGMQueryEngine mode="temporal", then
+#      validate_obs_events asserts temporal_fit, stream_batch and
+#      temporal_plan events all made it to the JSONL.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -64,8 +73,10 @@ BENCH_OUT="$(mktemp -t bench_streaming_smoke.XXXXXX.json)"
 DVMP_OUT="$(mktemp -t bench_dvmp_smoke.XXXXXX.json)"
 LATENT_OUT="$(mktemp -t bench_latent_smoke.XXXXXX.json)"
 STRUCT_OUT="$(mktemp -t bench_structure_smoke.XXXXXX.json)"
+TEMPORAL_OUT="$(mktemp -t bench_temporal_smoke.XXXXXX.json)"
 OBS_OUT="$(mktemp -t obs_events_smoke.XXXXXX.jsonl)"
-trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT" "$OBS_OUT"' EXIT
+OBS_TEMPORAL_OUT="$(mktemp -t obs_temporal_smoke.XXXXXX.jsonl)"
+trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT" "$TEMPORAL_OUT" "$OBS_OUT" "$OBS_TEMPORAL_OUT"' EXIT
 python benchmarks/run.py --json --n 1000 --batch 250 --sweeps 2 \
     --window 2 --out "$BENCH_OUT"
 python - "$BENCH_OUT" <<'EOF'
@@ -125,6 +136,22 @@ print("ci smoke: BENCH_structure schema OK (score diff "
       f"{payload['family_score_max_abs_diff']:.2e}, chowliu F1 "
       f"{payload['chowliu_edge_f1']:.2f}, hillclimb F1 "
       f"{payload['hillclimb_skeleton_f1']:.2f})")
+EOF
+
+python benchmarks/run.py --json --temporal --temporal-b 16 --temporal-t 8 \
+    --sweeps 2 --out "$TEMPORAL_OUT"
+python - "$TEMPORAL_OUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from run import validate_bench_temporal
+
+with open(sys.argv[1]) as fh:
+    payload = json.load(fh)
+validate_bench_temporal(payload)
+print("ci smoke: BENCH_temporal schema OK (fused "
+      f"{payload['speedup_seq_per_s']:.2f}x, posterior diff "
+      f"{payload['fused_posterior_max_abs_diff']:.2e}, "
+      f"retrace_free={payload['retrace_free']})")
 EOF
 
 python - <<'EOF'
@@ -256,6 +283,40 @@ need = ("stream_batch", "drift", "span", "serve_flush", "serve_bucket",
 missing = [ev for ev in need if not counts.get(ev)]
 assert not missing, f"obs leg missing event types: {missing} (got {counts})"
 print(f"ci smoke: obs JSONL schema OK ({sum(counts.values())} events: "
+      + ", ".join(f"{k}={counts[k]}" for k in sorted(counts)) + ")")
+EOF
+
+# temporal obs leg: fused dynamic-BN fit + sequence-batch streaming +
+# temporal serving in a fresh process, validated against the event schema.
+REPRO_OBS=basic REPRO_OBS_PATH="$OBS_TEMPORAL_OUT" python - <<'EOF'
+import numpy as np
+from repro.data import synthetic as syn
+from repro.pgm_models import HiddenMarkovModel, seq_stream_fit
+from repro.serve.engine import PGMQueryEngine
+
+batches, attrs, switch_at = syn.hmm_stream(
+    n_batches=4, s=16, t=10, states=2, f=2, shift=8.0, seed=0)
+m = HiddenMarkovModel(attrs, n_states=2, seed=0)
+m.update_model(batches[0], sweeps=3)              # temporal_fit event
+info = seq_stream_fit(m, batches, sweeps=3, tol=0.0)   # stream_batch events
+assert m.n_drifts >= 1, "temporal stream produced no drift event"
+eng = PGMQueryEngine(m, mode="temporal")          # temporal_plan events
+xc = np.asarray(batches[0].xc)
+qs = [eng.submit("filter", {}, payload=xc[i]) for i in range(3)]
+qs.append(eng.submit("predict", {"horizon": 2}, payload=xc[3]))
+eng.flush()
+assert all(q.done and np.isfinite(np.asarray(q.result)).all() for q in qs)
+EOF
+python - "$OBS_TEMPORAL_OUT" <<'EOF'
+import sys
+from repro.obs import validate_obs_events
+
+counts = validate_obs_events(sys.argv[1])
+need = ("temporal_fit", "stream_batch", "drift", "temporal_plan",
+        "serve_bucket")
+missing = [ev for ev in need if not counts.get(ev)]
+assert not missing, f"temporal obs leg missing: {missing} (got {counts})"
+print(f"ci smoke: temporal obs JSONL schema OK ("
       + ", ".join(f"{k}={counts[k]}" for k in sorted(counts)) + ")")
 EOF
 

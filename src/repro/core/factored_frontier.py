@@ -37,11 +37,24 @@ class Factorial2TBN(NamedTuple):
 
 
 def factored_frontier_filter(
-    model: Factorial2TBN, loglik: jnp.ndarray
+    model: Factorial2TBN, loglik: jnp.ndarray,
+    mask: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """loglik: [T, C, S].  Returns (beliefs [T, C, S], loglik_lb [T])."""
+    """loglik: [T, C, S].  Returns (beliefs [T, C, S], loglik_lb [T]).
 
-    def step(belief, ll_t):
+    ``mask`` ([T], optional) marks which steps carry evidence.  Padded
+    steps (``mask[t] == 0``) HOLD the belief — no transition is applied
+    and the loglik lower bound contribution is 0 — matching the
+    ragged-sequence semantics of ``pgm_models.dynamic.forward_backward``.
+    The padded frames' loglik values are never read (``where``-gated
+    before use), so garbage/NaN padding cannot corrupt the marginals.
+    """
+    if mask is None:
+        mask = jnp.ones(loglik.shape[0], dtype=loglik.dtype)
+
+    def step(belief, inputs):
+        ll_t, m_t = inputs
+        ll_t = jnp.where(m_t > 0, ll_t, 0.0)
         # predict (per chain, independent transition)
         pred = jnp.einsum("cs,cst->ct", belief, model.trans)
         # correct
@@ -50,30 +63,39 @@ def factored_frontier_filter(
         post = post / jnp.maximum(norm, 1e-30)
         ll = (jnp.log(jnp.maximum(norm[..., 0], 1e-30))
               + ll_t.max(-1)).sum()
+        post = jnp.where(m_t > 0, post, belief)
+        ll = jnp.where(m_t > 0, ll, 0.0)
         return post, (post, ll)
 
-    _, (beliefs, ll) = jax.lax.scan(step, model.init, loglik)
+    _, (beliefs, ll) = jax.lax.scan(step, model.init, (loglik, mask))
     return beliefs, ll
 
 
 def factored_frontier_smooth(
-    model: Factorial2TBN, loglik: jnp.ndarray
+    model: Factorial2TBN, loglik: jnp.ndarray,
+    mask: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """Factored gamma smoothing (forward-backward with the FF assumption)."""
-    beliefs, _ = factored_frontier_filter(model, loglik)
+    """Factored gamma smoothing (forward-backward with the FF assumption).
+
+    ``mask`` ([T], optional): padded steps hold both the filtered belief
+    and the backward message (see :func:`factored_frontier_filter`)."""
+    if mask is None:
+        mask = jnp.ones(loglik.shape[0], dtype=loglik.dtype)
+    beliefs, _ = factored_frontier_filter(model, loglik, mask)
 
     def bstep(bnext, inputs):
-        ll_t, filt_t = inputs
+        ll_t, m_t = inputs
+        ll_t = jnp.where(m_t > 0, ll_t, 0.0)
         # backward variable per chain
         msg = jnp.einsum("cst,ct->cs", model.trans,
                          bnext * jnp.exp(ll_t - ll_t.max(-1, keepdims=True)))
         msg = msg / jnp.maximum(msg.sum(-1, keepdims=True), 1e-30)
+        msg = jnp.where(m_t > 0, msg, bnext)
         return msg, msg
 
-    T = loglik.shape[0]
     ones = jnp.ones_like(model.init)
     _, back = jax.lax.scan(
-        bstep, ones, (loglik[1:][::-1], beliefs[1:][::-1])
+        bstep, ones, (loglik[1:][::-1], mask[1:][::-1])
     )
     back = jnp.concatenate([back[::-1], ones[None]], axis=0)
     gamma = beliefs * back

@@ -70,6 +70,31 @@ def drift_update(state: DriftState, score: jnp.ndarray, *,
     return DriftState(mean=mean, cum=cum, cum_min=cum_min, t=t), ph
 
 
+def drift_gate(dstate: DriftState, score: jnp.ndarray, chained, tempered, *,
+               drift_threshold: float):
+    """Page-Hinkley test + prior selection, as pure traced ops.
+
+    Runs :func:`drift_update` on ``score``, then where-selects between the
+    ``chained`` prior (no drift) and the ``tempered`` prior (detector
+    fired), resetting the PH statistics on a firing.  Generic over the
+    prior pytree — shared by the static streaming path
+    (:func:`_stream_step`, ``PlateParams``) and the temporal
+    ``pgm_models.dynamic.seq_stream_fit`` scan (``HMMPosterior``).
+
+    Returns ``(prior, new_dstate, ph, drifted)``.
+    """
+    dstate, ph = drift_update(dstate, score)
+    drifted = ph > drift_threshold
+    prior = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(drifted, a, b), tempered, chained
+    )
+    # reset PH statistics after a drift signal
+    dstate = jax.tree_util.tree_map(
+        lambda r, k: jnp.where(drifted, r, k), drift_init(), dstate
+    )
+    return prior, dstate, ph, drifted
+
+
 class StreamState(NamedTuple):
     prior: PlateParams     # chained prior  (Eq. 3 accumulation)
     post: PlateParams      # current posterior
@@ -130,18 +155,11 @@ def _stream_step(
     stats_pre, _ = V.local_step(cp, state.post, xc, xd, mask,
                                 backend=backend, chunk=chunk)
     score = stats_pre.local_elbo / jnp.maximum(n_eff, 1.0)
-    dstate, ph = drift_update(state.drift, score)
-    drifted = ph > drift_threshold
-
     # on drift: temper the chained prior back toward the base prior
-    prior = jax.tree_util.tree_map(
-        lambda a, b: jnp.where(drifted, a, b),
+    prior, dstate, ph, drifted = drift_gate(
+        state.drift, score, state.prior,
         _temper(state.prior, base_prior, forget),
-        state.prior,
-    )
-    # reset PH statistics after a drift signal
-    dstate = jax.tree_util.tree_map(
-        lambda r, k: jnp.where(drifted, r, k), drift_init(), dstate
+        drift_threshold=drift_threshold,
     )
 
     # --- streaming VB: VMP sweeps against the chained prior ------------------

@@ -118,6 +118,72 @@ def lds_sequences(s: int, t: int, dim_h: int, f: int, seed: int = 0
     return DynamicDataStream(attrs, xs), A.astype(np.float32), C
 
 
+def hmm_stream(n_batches: int, s: int, t: int, states: int, f: int,
+               switch_at: Optional[int] = None, shift: float = 6.0,
+               seed: int = 0):
+    """Stream of HMM sequence batches with a mid-stream regime switch.
+
+    ``n_batches`` batches of ``s`` sequences x ``t`` steps from a sticky
+    Gaussian-emission HMM; from batch ``switch_at`` on (default: halfway)
+    every emission mean jumps by ``shift`` — the temporal analog of
+    ``drift_stream``/``bn_stream(n_chunks=...)`` for the ``seq_stream_fit``
+    drift tests.  Returns (batches, attrs, switch_at) where ``batches`` is
+    a list of equal-shape ``DynamicDataStream``s (one per arriving batch).
+    """
+    if switch_at is None:
+        switch_at = n_batches // 2
+    rng = np.random.default_rng(seed)
+    trans = rng.dirichlet(np.ones(states) * 0.3, size=states)
+    trans = 0.2 * trans + 0.8 * np.eye(states)
+    init = np.ones(states) / states
+    means = (np.arange(states)[:, None] * 4.0
+             + rng.uniform(-1, 1, (states, f))).astype(np.float32)
+    attrs = [Attribute(f"G{i}", REAL) for i in range(f)]
+    batches = []
+    for b in range(n_batches):
+        mu = means + (shift if b >= switch_at else 0.0)
+        xs = np.zeros((s, t, f), np.float32)
+        for i in range(s):
+            z = rng.choice(states, p=init)
+            for j in range(t):
+                xs[i, j] = mu[z] + 0.5 * rng.standard_normal(f)
+                z = rng.choice(states, p=trans[z])
+        batches.append(DynamicDataStream(attrs, xs))
+    return batches, attrs, switch_at
+
+
+def slds_stream(n_batches: int, s: int, t: int, dim_h: int, f: int,
+                switch_at: Optional[int] = None, seed: int = 0):
+    """Stream of switching-LDS sequence batches with a mid-stream regime
+    switch: every sequence alternates between two dynamics matrices (a slow
+    rotation and its reverse) at a per-sequence midpoint, and from batch
+    ``switch_at`` on the emission map is re-drawn (the stream-level drift).
+    Returns (batches, attrs, A_true [2, dim_h, dim_h], switch_at)."""
+    if switch_at is None:
+        switch_at = n_batches // 2
+    rng = np.random.default_rng(seed)
+    th = 0.5
+    rot = np.eye(dim_h)
+    rot[:2, :2] = 0.95 * np.array([[np.cos(th), -np.sin(th)],
+                                   [np.sin(th), np.cos(th)]])
+    A_true = np.stack([rot, rot.T]).astype(np.float32)   # [2, L, L]
+    C1 = rng.standard_normal((f, dim_h)).astype(np.float32)
+    C2 = rng.standard_normal((f, dim_h)).astype(np.float32)
+    attrs = [Attribute(f"G{i}", REAL) for i in range(f)]
+    batches = []
+    for b in range(n_batches):
+        C = C2 if b >= switch_at else C1
+        xs = np.zeros((s, t, f), np.float32)
+        for i in range(s):
+            h = rng.standard_normal(dim_h)
+            for j in range(t):
+                A = A_true[0] if j < t // 2 else A_true[1]
+                h = A @ h + 0.1 * rng.standard_normal(dim_h)
+                xs[i, j] = C @ h + 0.1 * rng.standard_normal(f)
+        batches.append(DynamicDataStream(attrs, xs))
+    return batches, attrs, A_true, switch_at
+
+
 # -- ground-truth structures (structure-learning experiments) ------------------
 
 

@@ -66,6 +66,20 @@ def clg_suffstats(d, y, r, *, block=512):
     return _clg(d, y, r, block=block, interpret=INTERPRET)
 
 
+@_counted("clg_seq_suffstats")
+@partial(jax.jit, static_argnames=("block",))
+def clg_seq_suffstats(d, y, r, *, block=512):
+    """Sequence-batch CLG suff-stats: flattens the ``[B, T]`` leading dims
+    of ``d [B,T,F,D] / y [B,T,F] / r [B,T,K]`` into the kernel's instance
+    axis and dispatches one ``clg_suffstats`` call — the temporal
+    (``pgm_models.dynamic``) entry to the same pallas/interpret kernel the
+    static plate uses.  Masking is the caller's job: zero ``r`` rows
+    contribute nothing."""
+    B, T = r.shape[0], r.shape[1]
+    return _clg(d.reshape(B * T, *d.shape[2:]), y.reshape(B * T, *y.shape[2:]),
+                r.reshape(B * T, r.shape[2]), block=block, interpret=INTERPRET)
+
+
 @_counted("clg_suffstats_latent")
 @partial(jax.jit, static_argnames=("block",))
 def clg_suffstats_latent(obs, h_mean, y, r, s_hh, *, block=512):

@@ -28,7 +28,7 @@ from repro.obs.sink import (BASIC, EVENT_SCHEMA, OFF, TRACE, configure,
                             validate_obs_events)
 from repro.obs.trace import current_span, span
 from repro.obs.metrics import (DvmpMetrics, LocalStepMetrics,
-                               StreamBatchMetrics)
+                               StreamBatchMetrics, TemporalFitMetrics)
 
 __all__ = [
     "OFF", "BASIC", "TRACE", "EVENT_SCHEMA",
@@ -38,5 +38,6 @@ __all__ = [
     "emit_stream_events",
     "register", "registered", "estimate",
     "validate_obs_events",
-    "StreamBatchMetrics", "LocalStepMetrics", "DvmpMetrics",
+    "StreamBatchMetrics", "TemporalFitMetrics", "LocalStepMetrics",
+    "DvmpMetrics",
 ]

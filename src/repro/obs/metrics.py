@@ -34,6 +34,20 @@ class StreamBatchMetrics(NamedTuple):
         return dict(self._asdict())
 
 
+class TemporalFitMetrics(NamedTuple):
+    """Per-sweep gauges carried through the fused temporal VB-EM scans
+    (``pgm_models.dynamic``): each field is a ``[sweeps]`` column stacked
+    out of the ``lax.scan`` over sweeps — the temporal analog of
+    :class:`StreamBatchMetrics`."""
+
+    elbo: Any      # ELBO (loglik lower bound) after each sweep
+    delta: Any     # |ELBO - previous ELBO| per sweep (0 once converged)
+    active: Any    # bool: was this sweep actually run (vs held post-tol)
+
+    def as_info(self) -> Dict[str, Any]:
+        return dict(self._asdict())
+
+
 class LocalStepMetrics(NamedTuple):
     """Optional output of ``vmp.local_step(..., with_metrics=True)``."""
 

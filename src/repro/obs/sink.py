@@ -69,6 +69,10 @@ EVENT_SCHEMA: Dict[str, Tuple[str, ...]] = {
                      "compile_us", "execute_us", "latency_us"),
     # junction-tree propagation plan (emitted once per compiled schema)
     "jt_plan": ("pipeline", "n_cliques", "levels", "batch"),
+    # one fused temporal VB-EM fit (pgm_models.dynamic update_model)
+    "temporal_fit": ("model", "sweeps", "elbo", "delta"),
+    # temporal filter/predict program compiled for a serve bucket
+    "temporal_plan": ("pipeline", "batch", "T", "S", "horizon"),
     # kernel-backend dispatch counter snapshot
     "kernel_dispatch": ("counts",),
     # registry estimator output (e.g. analytical HLO FLOP/byte model)

@@ -35,5 +35,6 @@ from repro.pgm_models.dynamic import (
     InputOutputHMM,
     KalmanFilter,
     SwitchingLDS,
+    seq_stream_fit,
 )
 from repro.pgm_models.lda import LDA

@@ -13,20 +13,85 @@ variational Bayesian EM:
     for the switch chain, Kalman smoothing under averaged dynamics, Bayesian
     regression M-step per switch state.
 
-Streaming (Eq. 3) works exactly as in the static case: posteriors chain.
+Streaming (Eq. 3) works exactly as in the static case: posteriors chain —
+:func:`seq_stream_fit` replays stacked sequence batches in ONE jitted scan
+with the Page-Hinkley drift gate (``core.streaming.drift_gate``) and prior
+tempering in-body, mirroring ``streaming.stream_fit``.
+
+**Fused sweep loops.**  Every ``update_model`` defaults to ``fused=True``:
+the whole VB-EM sweep loop runs as one jitted donated-buffer ``lax.scan``
+over sweeps, with the masked forward-backward / Kalman smoother vmapped
+over the sequence batch INSIDE the scan body and a
+:class:`~repro.obs.metrics.TemporalFitMetrics` pytree (per-sweep ELBO,
+delta, active flag) carried out of the scan.  Convergence inside the scan
+is a hold: once ``|e - last| < tol (|e| + 1)`` the posterior stops being
+adopted, bit-matching the host loop that breaks.  ``fused=False`` keeps
+the seed-style eager per-sweep loop (same step functions, one dispatch per
+sweep) as the parity/benchmark reference.
+
+**Program caching.**  The fused fits are MODULE-LEVEL jitted functions, so
+jax's shape-keyed jit cache is the program cache: repeated ``update_model``
+calls with the same ``(B, T, F, S, dtypes)`` reuse the compiled program
+instead of retracing (the seed retraced per call via per-instance
+closures).  :func:`trace_counts` exposes trace-time counters bumped inside
+each fused body — a compile happens iff the counter moves, which is the
+CI non-retrace assertion.
+
+**Suff-stats backends.**  The HMM-family and fHMM M-steps accept
+``backend="einsum" | "pallas"``; ``pallas`` routes the responsibility-
+weighted regression stats through ``kernels.ops.clg_seq_suffstats`` (the
+``clg_stats`` kernel with the ``[B, T]`` leading dims flattened), sharing
+the static plate's kernel and its interpret/compile policy.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import expfam as ef
+from repro.core.factored_frontier import (Factorial2TBN,
+                                          factored_frontier_filter,
+                                          predictive_posterior)
 from repro.data.stream import Attribute, DynamicDataStream, SequenceBatch, REAL
+from repro.obs import sink as obs_sink
+from repro.obs.metrics import StreamBatchMetrics, TemporalFitMetrics
+
+
+# ---------------------------------------------------------------------------
+# trace-time compile counters (the non-retrace CI assertion)
+# ---------------------------------------------------------------------------
+
+_TRACE_COUNTS: Dict[str, int] = {}
+
+
+def _bump_trace(name: str) -> None:
+    """Called INSIDE the jitted fused-fit bodies: runs once per trace
+    (compile), never per cached execution — ``trace_counts()[name]``
+    moving between two same-shape calls means the program was rebuilt."""
+    _TRACE_COUNTS[name] = _TRACE_COUNTS.get(name, 0) + 1
+
+
+def trace_counts() -> Dict[str, int]:
+    """Snapshot of the fused-fit trace counters (per fused program name)."""
+    return dict(_TRACE_COUNTS)
+
+
+def _strong(tree):
+    """Copy a pytree with weak types stripped (explicit-dtype ``jnp.array``).
+
+    Two jobs at once for every fused-fit operand: (1) a weak-typed leaf
+    (python-scalar initialised, e.g. ``jnp.asarray(0.3)``) and its
+    strong-typed successor after one fit would key DIFFERENT compiled
+    programs — the first refit would retrace; (2) the copy unaliases
+    donated buffers (the chained prior IS the posterior after a fit, and
+    XLA rejects donating an aliased or doubly-referenced buffer)."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.array(a, jnp.asarray(a).dtype), tree)
 
 
 # ---------------------------------------------------------------------------
@@ -38,22 +103,31 @@ def forward_backward(log_init: jnp.ndarray, log_trans: jnp.ndarray,
                      loglik: jnp.ndarray, mask: jnp.ndarray):
     """Single sequence. log_init [S], log_trans [S,S], loglik [T,S], mask [T].
 
-    Returns (gamma [T,S], xi_sum [S,S], loglik_scalar)."""
+    Returns (gamma [T,S], xi_sum [S,S], loglik_scalar).
+
+    Padding semantics: masked steps HOLD the forward/backward state, their
+    loglik values are never read (``where``-gated, so NaN/garbage padding
+    is safe), and no transition is counted into or out of a padded step
+    (``xi`` is masked by ``mask[t] * mask[t+1]``).  A LEFT-padded sequence
+    seeds the recursion from ``log_init`` alone at its first observed step
+    — the ``started`` flag below — rather than applying a spurious
+    transition out of the padding."""
     S = log_init.shape[0]
-    ll = loglik * mask[:, None]  # masked steps contribute nothing
+    ll = jnp.where(mask[:, None] > 0, loglik, 0.0)   # NaN-safe padding
 
     def fstep(carry, inp):
-        loga_prev = carry
+        loga_prev, started = carry
         ll_t, m_t = inp
-        loga = jax.nn.logsumexp(
-            loga_prev[:, None] + log_trans, axis=0) + ll_t
+        trans_in = jax.nn.logsumexp(loga_prev[:, None] + log_trans, axis=0)
+        # first observed step seeds from the initial distribution alone
+        loga = jnp.where(started, trans_in, log_init) + ll_t
         loga = jnp.where(m_t > 0, loga, loga_prev)  # hold state over padding
-        return loga, loga
+        started = jnp.logical_or(started, m_t > 0)
+        return (loga, started), loga
 
-    loga0 = log_init + ll[0]
-    _, logas = jax.lax.scan(fstep, loga0, (ll[1:], mask[1:]))
-    logas = jnp.concatenate([loga0[None], logas], 0)      # [T, S]
-    logZ = jax.nn.logsumexp(logas[-1])
+    _, logas = jax.lax.scan(
+        fstep, (log_init, jnp.asarray(False)), (ll, mask))  # [T, S]
+    logZ = jnp.where(mask.max() > 0, jax.nn.logsumexp(logas[-1]), 0.0)
 
     def bstep(carry, inp):
         logb_next = carry
@@ -73,7 +147,7 @@ def forward_backward(log_init: jnp.ndarray, log_trans: jnp.ndarray,
     logxi = (logas[:-1, :, None] + log_trans[None]
              + (ll[1:] + logbs[1:])[:, None, :])
     logxi = logxi - jax.nn.logsumexp(logxi, axis=(1, 2), keepdims=True)
-    xi = jnp.exp(logxi) * mask[1:, None, None]
+    xi = jnp.exp(logxi) * (mask[1:] * mask[:-1])[:, None, None]
     return gamma, xi.sum(0), logZ
 
 
@@ -86,6 +160,142 @@ class HMMPosterior(NamedTuple):
     init: ef.Dirichlet        # [S]
     trans: ef.Dirichlet       # [S, S] rows
     emis: ef.MVNormalGamma    # [F, S, D] regression emission per feature/state
+
+
+# -- class-agnostic step functions: every _HMMBase subclass reduces to a
+#    (design d [B,T,F,D], target y [B,T,F]) pair, so ONE fused program per
+#    shape serves the whole family ------------------------------------------
+
+
+def _hmm_loglik(post: HMMPosterior, d: jnp.ndarray, y: jnp.ndarray
+                ) -> jnp.ndarray:
+    """[B, T, S] expected emission log-lik summed over features."""
+    mom = ef.mvnormalgamma_moments(post.emis)     # [F, S, ...]
+    quad = jnp.einsum("btfa,fsac,btfc->btfs", d, mom.e_lamww, d)
+    lin = jnp.einsum("btfa,fsa->btfs", d, mom.e_lamw)
+    ll = 0.5 * (
+        mom.e_loglam[None, None] - ef.LOG2PI
+        - mom.e_lam[None, None] * (y * y)[..., None]
+        + 2.0 * y[..., None] * lin - quad
+    )
+    return ll.sum(2)
+
+
+def _hmm_estep(post: HMMPosterior, d, y, mask):
+    """Returns (gamma [B,T,S], xi [B,S,S], logZ [B])."""
+    log_init = ef.dirichlet_expected_logprob(post.init)
+    log_trans = ef.dirichlet_expected_logprob(post.trans)
+    ll = _hmm_loglik(post, d, y)                  # [B, T, S]
+    fb = jax.vmap(partial(forward_backward, log_init, log_trans))
+    return fb(ll, mask)
+
+
+def _hmm_mstep(prior: HMMPosterior, gamma, xi, d, y, mask,
+               backend: str = "einsum") -> HMMPosterior:
+    init = ef.Dirichlet(prior.init.alpha + gamma[:, 0].sum(0))
+    trans = ef.Dirichlet(prior.trans.alpha + xi.sum(0))
+    w = gamma * mask[..., None]                   # [B, T, S]
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        sxx, sxy, syy = kops.clg_seq_suffstats(d, y, w)
+    else:
+        sxx = jnp.einsum("btfa,btfc,bts->fsac", d, d, w)
+        sxy = jnp.einsum("btfa,btf,bts->fsa", d, y, w)
+        syy = jnp.einsum("btf,btf,bts->fs", y, y, w)
+    n = jnp.broadcast_to(w.sum((0, 1))[None], syy.shape)
+    emis = ef.mvnormalgamma_update(
+        prior.emis, ef.RegSuffStats(sxx, sxy, syy, n))
+    return HMMPosterior(init=init, trans=trans, emis=emis)
+
+
+def _hmm_fit_core(prior, post, d, y, mask, sweeps, tol, backend):
+    """The sweep loop as a ``lax.scan`` with a convergence HOLD.
+
+    Replicates the host loop exactly: the E/M step of the converging sweep
+    is still adopted (the host ``break`` fires after the M-step), then the
+    carry is held for the remaining scan steps.  Returns
+    (post, last_elbo, TemporalFitMetrics with [sweeps] columns)."""
+
+    def sweep(carry, _):
+        post, last, done = carry
+        gamma, xi, logZ = _hmm_estep(post, d, y, mask)
+        e = logZ.sum()
+        new_post = _hmm_mstep(prior, gamma, xi, d, y, mask, backend)
+        conv = jnp.abs(e - last) < tol * (jnp.abs(e) + 1.0)
+        active = jnp.logical_not(done)
+        sel = lambda a, b: jnp.where(active, a, b)
+        post = jax.tree_util.tree_map(sel, new_post, post)
+        metrics = TemporalFitMetrics(
+            elbo=jnp.where(active, e, last),
+            delta=jnp.where(active, jnp.abs(e - last), 0.0),
+            active=active,
+        )
+        last = jnp.where(active, jnp.where(conv, last, e), last)
+        done = jnp.logical_or(done, conv)
+        return (post, last, done), metrics
+
+    carry0 = (post, -jnp.inf, jnp.asarray(False))
+    (post, last, _), metrics = jax.lax.scan(
+        sweep, carry0, None, length=sweeps)
+    return post, last, metrics
+
+
+@partial(jax.jit, static_argnames=("sweeps", "tol", "backend"),
+         donate_argnums=(1,))
+def _hmm_fit(prior, post, d, y, mask, *, sweeps, tol, backend):
+    """One fused VB-EM fit for the whole HMM family.
+
+    Module-level jit => the jit cache IS the program cache, keyed on the
+    shapes/dtypes of (prior, post, d, y, mask) — i.e. (B, T, F, S, D,
+    dtypes) — plus the static (sweeps, tol, backend).  ``post`` is donated
+    (callers pass an unaliased copy)."""
+    _bump_trace("hmm_fit")
+    return _hmm_fit_core(prior, post, d, y, mask, sweeps, tol, backend)
+
+
+def _hmm_filter_predict(post: HMMPosterior, d, y, mask, horizon: int):
+    """Filtered beliefs + h-step predictive for a sequence batch.
+
+    Returns (beliefs [B,T,S], last [B,S]) where ``last`` is the filtered
+    distribution at the final step rolled ``horizon`` steps forward with no
+    evidence (paper Code Fragment 14).  Pure function of the posterior —
+    the serving layer jits it with the posterior as an ARGUMENT so model
+    updates never serve stale compiled constants."""
+    ll = _hmm_loglik(post, d, y)
+    init = jax.nn.softmax(ef.dirichlet_expected_logprob(post.init))
+    trans = jax.nn.softmax(ef.dirichlet_expected_logprob(post.trans), -1)
+    model = Factorial2TBN(init=init[None], trans=trans[None])
+
+    def one(seq_ll, seq_mask):
+        beliefs, _ = factored_frontier_filter(
+            model, seq_ll[:, None, :], seq_mask)
+        return beliefs[:, 0]
+
+    beliefs = jax.vmap(one)(ll, mask)
+    last = beliefs[:, -1]
+    if horizon > 0:
+        last = jax.vmap(
+            lambda b: predictive_posterior(model, b[None], horizon)[0])(last)
+    return beliefs, last
+
+
+@partial(jax.jit, static_argnames=("horizon",))
+def _temporal_serve(post, d, y, mask, *, horizon):
+    """The compiled temporal query program (``PGMQueryEngine``
+    ``mode="temporal"``): one program per (B, T, F, S, horizon) bucket,
+    cached by the module-level jit like the fused fits."""
+    _bump_trace("temporal_serve")
+    return _hmm_filter_predict(post, d, y, mask, horizon)
+
+
+def _emit_fit_event(name: str, elbo, metrics: TemporalFitMetrics) -> None:
+    if not obs_sink.enabled():
+        return
+    act = np.asarray(metrics.active)
+    dl = np.asarray(metrics.delta)
+    k = int(act.sum())
+    obs_sink.emit("temporal_fit", model=name, sweeps=k, elbo=float(elbo),
+                  delta=float(dl[max(k - 1, 0)]) if dl.size else 0.0)
 
 
 class _HMMBase:
@@ -115,95 +325,95 @@ class _HMMBase:
         self.posterior = self.prior._replace(emis=self.prior.emis._replace(m=m0))
         self._chained_prior = self.prior
 
-    # -- emission design: [B, T, F, D] --------------------------------------
+    # -- emission design: [B, T, F, D] / target: [B, T, F] -------------------
 
     def _design(self, xc: jnp.ndarray) -> jnp.ndarray:
         B, T, F = xc.shape
         return jnp.ones((B, T, F, 1), xc.dtype)
 
+    def _emission_target(self, xc: jnp.ndarray) -> jnp.ndarray:
+        return xc
+
     def _emission_loglik(self, post: HMMPosterior, xc: jnp.ndarray
                          ) -> jnp.ndarray:
-        """[B, T, S] expected log-lik summed over features."""
-        mom = ef.mvnormalgamma_moments(post.emis)     # [F, S, ...]
-        d = self._design(xc)                          # [B, T, F, D]
-        y = xc                                        # [B, T, F]
-        quad = jnp.einsum("btfa,fsac,btfc->btfs", d, mom.e_lamww, d)
-        lin = jnp.einsum("btfa,fsa->btfs", d, mom.e_lamw)
-        ll = 0.5 * (
-            mom.e_loglam[None, None] - ef.LOG2PI
-            - mom.e_lam[None, None] * (y * y)[..., None]
-            + 2.0 * y[..., None] * lin - quad
-        )
-        return ll.sum(2)
+        return _hmm_loglik(post, self._design(xc), self._emission_target(xc))
 
     def _estep(self, post: HMMPosterior, xc, mask):
-        log_init = ef.dirichlet_expected_logprob(post.init)
-        log_trans = ef.dirichlet_expected_logprob(post.trans)
-        ll = self._emission_loglik(post, xc)          # [B, T, S]
-        fb = jax.vmap(partial(forward_backward, log_init, log_trans))
-        gamma, xi, logZ = fb(ll, mask)
-        return gamma, xi, logZ
+        return _hmm_estep(post, self._design(xc),
+                          self._emission_target(xc), mask)
 
-    def _mstep(self, prior: HMMPosterior, gamma, xi, xc, mask) -> HMMPosterior:
-        init = ef.Dirichlet(prior.init.alpha + gamma[:, 0].sum(0))
-        trans = ef.Dirichlet(prior.trans.alpha + xi.sum(0))
-        d = self._design(xc)                          # [B, T, F, D]
-        w = gamma * mask[..., None]                   # [B, T, S]
-        sxx = jnp.einsum("btfa,btfc,bts->fsac", d, d, w)
-        sxy = jnp.einsum("btfa,btf,bts->fsa", d, xc, w)
-        syy = jnp.einsum("btf,btf,bts->fs", xc, xc, w)
-        n = jnp.broadcast_to(w.sum((0, 1))[None], syy.shape)
-        emis = ef.mvnormalgamma_update(
-            prior.emis, ef.RegSuffStats(sxx, sxy, syy, n))
-        return HMMPosterior(init=init, trans=trans, emis=emis)
+    def _warm_start(self, xc: jnp.ndarray) -> None:
+        """Data-driven symmetry breaking: bias term <- random observed
+        frames (first fit only)."""
+        if getattr(self, "_warm", False):
+            return
+        self._warm = True
+        rng = np.random.default_rng(13)
+        frames_all = xc[..., : self.F]   # emission columns (IOHMM: drops input)
+        B, T, F = frames_all.shape
+        picks = rng.integers(0, B * T, self.S)
+        frames = np.asarray(frames_all.reshape(B * T, F))[picks]    # [S, F]
+        m0 = np.array(self.posterior.emis.m)  # writable copy
+        m0[:, :, 0] = frames.T
+        self.posterior = self.posterior._replace(
+            emis=self.posterior.emis._replace(m=jnp.asarray(m0)))
 
     # -- public API -----------------------------------------------------------
 
-    def update_model(self, data, *, sweeps: int = 30, tol: float = 1e-5) -> float:
+    def update_model(self, data, *, sweeps: int = 30, tol: float = 1e-5,
+                     fused: bool = True, backend: str = "einsum") -> float:
         batch = data.collect() if isinstance(data, DynamicDataStream) else data
         xc, mask = batch.xc, batch.mask
+        self._warm_start(xc)
         prior = self._chained_prior
         post = self.posterior
-        if not getattr(self, "_warm", False):
-            # data-driven symmetry breaking: bias term <- random observed frames
-            self._warm = True
-            rng = np.random.default_rng(13)
-            obs = xc[..., : self.F]   # emission columns (IOHMM: drops input)
-            B, T, F = obs.shape
-            picks = rng.integers(0, B * T, self.S)
-            frames = np.asarray(obs.reshape(B * T, F))[picks]    # [S, F]
-            m0 = np.array(post.emis.m)  # writable copy
-            m0[:, :, 0] = frames.T
-            post = post._replace(emis=post.emis._replace(m=jnp.asarray(m0)))
-        last = -np.inf
-        for _ in range(sweeps):
-            gamma, xi, logZ = self._estep(post, xc, mask)
-            post = self._mstep(prior, gamma, xi, xc, mask)
-            e = float(logZ.sum())
-            if abs(e - last) < tol * (abs(e) + 1.0):
-                break
-            last = e
+        d = self._design(xc)
+        y = self._emission_target(xc)
+        if fused:
+            post, last, metrics = _hmm_fit(_strong(prior), _strong(post),
+                                           d, y, mask,
+                                           sweeps=sweeps, tol=tol,
+                                           backend=backend)
+            last = float(last)
+        else:
+            last, elbos, deltas = -np.inf, [], []
+            for _ in range(sweeps):
+                gamma, xi, logZ = _hmm_estep(post, d, y, mask)
+                e = float(logZ.sum())
+                post = _hmm_mstep(prior, gamma, xi, d, y, mask, backend)
+                elbos.append(e)
+                deltas.append(abs(e - last))
+                if abs(e - last) < tol * (abs(e) + 1.0):
+                    break
+                last = e
+            metrics = TemporalFitMetrics(
+                elbo=np.asarray(elbos), delta=np.asarray(deltas),
+                active=np.ones(len(elbos), bool))
         self.posterior = post
         self._chained_prior = post     # Eq. 3
+        self.fit_metrics = metrics
+        _emit_fit_event(type(self).__name__, last, metrics)
         return last
 
     def filtered_posterior(self, xc: jnp.ndarray, mask=None) -> jnp.ndarray:
         """[B, T, S] filtering distributions (Code Fragment 14 analog)."""
-        from repro.core.factored_frontier import factored_frontier_filter, Factorial2TBN
-
         if mask is None:
             mask = jnp.ones(xc.shape[:2])
-        post = self.posterior
-        ll = self._emission_loglik(post, xc)
-        init = jax.nn.softmax(ef.dirichlet_expected_logprob(post.init))
-        trans = jax.nn.softmax(ef.dirichlet_expected_logprob(post.trans), -1)
-        model = Factorial2TBN(init=init[None], trans=trans[None])
+        beliefs, _ = _hmm_filter_predict(
+            self.posterior, self._design(xc), self._emission_target(xc),
+            mask, 0)
+        return beliefs
 
-        def one(seq_ll):
-            beliefs, _ = factored_frontier_filter(model, seq_ll[:, None, :])
-            return beliefs[:, 0]
-
-        return jax.vmap(one)(ll)
+    def predictive(self, xc: jnp.ndarray, horizon: int,
+                   mask=None) -> jnp.ndarray:
+        """[B, S] state distribution ``horizon`` steps past the end of each
+        sequence (getPredictivePosterior)."""
+        if mask is None:
+            mask = jnp.ones(xc.shape[:2])
+        _, last = _hmm_filter_predict(
+            self.posterior, self._design(xc), self._emission_target(xc),
+            mask, horizon)
+        return last
 
     def viterbi_states(self, xc) -> jnp.ndarray:
         g, _, _ = self._estep(self.posterior, xc, jnp.ones(xc.shape[:2]))
@@ -254,6 +464,9 @@ class InputOutputHMM(_HMMBase):
     def _split(self, xc):
         return xc[..., :-1], xc[..., -1]
 
+    def _emission_target(self, xc):
+        return self._split(xc)[0]
+
     def _design(self, xc):
         y, u = self._split(xc)
         B, T, F = y.shape
@@ -261,38 +474,192 @@ class InputOutputHMM(_HMMBase):
         uu = jnp.broadcast_to(u[..., None, None], (B, T, F, 1))
         return jnp.concatenate([ones, uu], -1)
 
-    def _emission_loglik(self, post, xc):
-        y, _ = self._split(xc)
-        mom = ef.mvnormalgamma_moments(post.emis)
-        d = self._design(xc)
-        quad = jnp.einsum("btfa,fsac,btfc->btfs", d, mom.e_lamww, d)
-        lin = jnp.einsum("btfa,fsa->btfs", d, mom.e_lamw)
-        ll = 0.5 * (mom.e_loglam[None, None] - ef.LOG2PI
-                    - mom.e_lam[None, None] * (y * y)[..., None]
-                    + 2.0 * y[..., None] * lin - quad)
-        return ll.sum(2)
 
-    def _mstep(self, prior, gamma, xi, xc, mask):
-        y, _ = self._split(xc)
-        init = ef.Dirichlet(prior.init.alpha + gamma[:, 0].sum(0))
-        trans = ef.Dirichlet(prior.trans.alpha + xi.sum(0))
-        d = self._design(xc)
-        w = gamma * mask[..., None]
-        sxx = jnp.einsum("btfa,btfc,bts->fsac", d, d, w)
-        sxy = jnp.einsum("btfa,btf,bts->fsa", d, y, w)
-        syy = jnp.einsum("btf,btf,bts->fs", y, y, w)
-        n = jnp.broadcast_to(w.sum((0, 1))[None], syy.shape)
-        emis = ef.mvnormalgamma_update(
-            prior.emis, ef.RegSuffStats(sxx, sxy, syy, n))
-        return HMMPosterior(init=init, trans=trans, emis=emis)
+class DynamicNaiveBayes(_HMMBase):
+    """Dynamic NB = HMM whose hidden class smooths over time; emissions are
+    NB-style independent Gaussians — structurally our plain HMM (the paper's
+    dynamic NB is exactly this 2TBN)."""
+
+
+# ---------------------------------------------------------------------------
+# sequence-batch streaming (Eq. 3 over SequenceBatch streams)
+# ---------------------------------------------------------------------------
+
+
+def _temper_hmm(params: HMMPosterior, base: HMMPosterior,
+                rho: float) -> HMMPosterior:
+    """Forgetting for the HMM posterior: geometric interpolation toward the
+    base prior in natural-ish coordinates — Dirichlet alphas and the
+    MVNormalGamma (K, K m, a, b) blocks are lerped, then the mean is
+    recovered from the mixed precision (the temporal analog of
+    ``streaming._temper``)."""
+    lerp = lambda a, b: rho * a + (1.0 - rho) * b
+    K = lerp(params.emis.K, base.emis.K)
+    Km = lerp(jnp.einsum("...ac,...c->...a", params.emis.K, params.emis.m),
+              jnp.einsum("...ac,...c->...a", base.emis.K, base.emis.m))
+    m = jnp.linalg.solve(K, Km[..., None])[..., 0]
+    emis = ef.MVNormalGamma(m=m, K=K, a=lerp(params.emis.a, base.emis.a),
+                            b=lerp(params.emis.b, base.emis.b))
+    return HMMPosterior(
+        init=ef.Dirichlet(lerp(params.init.alpha, base.init.alpha)),
+        trans=ef.Dirichlet(lerp(params.trans.alpha, base.trans.alpha)),
+        emis=emis)
+
+
+@partial(jax.jit,
+         static_argnames=("sweeps", "tol", "drift_threshold", "forget",
+                          "backend"),
+         donate_argnums=(0,))
+def _seq_stream_scan(state, base_prior, ds, ys, masks, *, sweeps, tol,
+                     drift_threshold, forget, backend):
+    from repro.core.streaming import drift_gate
+
+    _bump_trace("seq_stream_fit")
+
+    def step(carry, inp):
+        d, y, mask = inp
+        prior, post, dstate, n_drifts = carry
+        n_eff = mask.sum()
+        # score the batch under the CURRENT posterior (per-frame loglik)
+        _, _, logZ = _hmm_estep(post, d, y, mask)
+        score = logZ.sum() / jnp.maximum(n_eff, 1.0)
+        prior, dstate, ph, drifted = drift_gate(
+            dstate, score, prior, _temper_hmm(prior, base_prior, forget),
+            drift_threshold=drift_threshold)
+        post, last, fmetrics = _hmm_fit_core(
+            prior, post, d, y, mask, sweeps, tol, backend)
+        metrics = StreamBatchMetrics(
+            elbo=last, score=score, ph=ph, drifted=drifted, n_eff=n_eff,
+            rho=jnp.where(drifted, forget, 1.0),
+            sweeps=fmetrics.active.sum(),
+        )
+        carry = (post, post, dstate,    # Eq. 3: posterior becomes the prior
+                 n_drifts + drifted.astype(jnp.int32))
+        return carry, metrics.as_info()
+
+    (prior, post, dstate, n_drifts), info = jax.lax.scan(
+        step, state + (jnp.asarray(0, jnp.int32),), (ds, ys, masks))
+    return (prior, post, dstate, n_drifts), info
+
+
+def seq_stream_fit(model, batches, *, sweeps: int = 10, tol: float = 1e-5,
+                   drift_threshold: float = 5.0, forget: float = 0.3,
+                   backend: str = "einsum"):
+    """Replay a stream of ``SequenceBatch``es in ONE jitted ``lax.scan``.
+
+    The temporal ``stream_fit``: per batch the scan body scores the
+    incoming sequences under the current posterior, runs the Page-Hinkley
+    drift gate (tempering the chained prior on a firing), fits with the
+    fused sweep scan, and chains the posterior (Eq. 3).  ``model`` is any
+    ``_HMMBase`` subclass; it is updated in place and the per-batch
+    :class:`StreamBatchMetrics` columns are returned as an info dict (and
+    emitted as ``stream_batch``/``drift`` JSONL events when obs is on).
+
+    ``batches``: iterable of equal-shape ``SequenceBatch``es (e.g.
+    ``DynamicDataStream.batches(B)``, which pads the tail batch).
+    """
+    batches = list(batches)
+    if not batches:
+        raise ValueError("seq_stream_fit needs at least one batch")
+    model._warm_start(batches[0].xc)
+    ds = jnp.stack([model._design(b.xc) for b in batches])
+    ys = jnp.stack([model._emission_target(b.xc) for b in batches])
+    masks = jnp.stack([b.mask for b in batches])
+    from repro.core.streaming import drift_init
+    state = _strong((model._chained_prior, model.posterior, drift_init()))
+    (prior, post, _, n_drifts), info = _seq_stream_scan(
+        state, _strong(model.prior), ds, ys, masks, sweeps=sweeps, tol=tol,
+        drift_threshold=drift_threshold, forget=forget, backend=backend)
+    model.posterior = post
+    model._chained_prior = post
+    model.n_drifts = int(n_drifts)
+    if obs_sink.enabled():
+        obs_sink.emit_stream_events(info)
+        obs_sink.emit_kernel_counts(site="seq_stream_fit")
+    return info
+
+
+# ---------------------------------------------------------------------------
+# factorial HMM — chain-parallel structured VB
+# ---------------------------------------------------------------------------
+
+
+def _fhmm_sweep(means, log_trans, log_init, noise, gammas, xc, mask, backend):
+    """One Jacobi sweep over ALL chains at once.
+
+    Every chain's residual is computed from the PREVIOUS sweep's gammas and
+    means (chain-batched einsum), the per-chain forward-backward runs as a
+    nested vmap over (chains, sequences), and the M-step is one batched
+    responsibility-weighted regression (einsum or the clg_stats kernel)."""
+    B, T, F = xc.shape
+    C, S = means.shape[0], means.shape[1]
+    contrib = jnp.einsum("btcs,csf->btcf", gammas, means)
+    resid = xc[:, :, None, :] - (contrib.sum(2, keepdims=True) - contrib)
+    diff = resid[:, :, :, None, :] - means[None, None]       # [B,T,C,S,F]
+    ll = (-(0.5 / noise) * (diff ** 2).sum(-1)
+          - 0.5 * F * jnp.log(2 * jnp.pi * noise))           # [B,T,C,S]
+
+    def fb_chain(li, lt, ll_c):
+        return jax.vmap(partial(forward_backward, li, lt))(ll_c, mask)
+
+    g, xi, logZ = jax.vmap(fb_chain, in_axes=(0, 0, 2))(
+        log_init, log_trans, ll)          # [C,B,T,S], [C,B,S,S], [C,B]
+    gammas_new = jnp.moveaxis(g, 0, 2)    # [B,T,C,S]
+    w = gammas_new * mask[:, :, None, None]
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        dsn = jnp.ones((B, T, F, 1), xc.dtype)
+        _, sxy, _ = jax.vmap(kops.clg_seq_suffstats,
+                             in_axes=(None, 2, 2))(dsn, resid, w)
+        num = jnp.swapaxes(sxy[..., 0], 1, 2)                # [C,S,F]
+    else:
+        num = jnp.einsum("btcs,btcf->csf", w, resid)
+    denom = jnp.maximum(w.sum((0, 1)), 1e-6)[..., None]      # [C,S,1]
+    means_new = num / denom
+    xs_sum = xi.sum(1)                                       # [C,S,S]
+    log_trans_new = (
+        jnp.log(jnp.maximum(xs_sum + 1.0, 1e-6))
+        - jnp.log(jnp.maximum(xs_sum.sum(-1, keepdims=True) + S, 1e-6)))
+    return means_new, log_trans_new, gammas_new, logZ.sum()
+
+
+@partial(jax.jit, static_argnames=("sweeps", "tol", "backend"),
+         donate_argnums=(0,))
+def _fhmm_fit(params, log_init, noise, xc, mask, *, sweeps, tol, backend):
+    _bump_trace("fhmm_fit")
+    means, log_trans, gammas = params
+
+    def sweep(carry, _):
+        means, log_trans, gammas, last, done = carry
+        m2, lt2, g2, e = _fhmm_sweep(means, log_trans, log_init, noise,
+                                     gammas, xc, mask, backend)
+        conv = jnp.abs(e - last) < tol * (jnp.abs(e) + 1.0)
+        active = jnp.logical_not(done)
+        sel = lambda a, b: jnp.where(active, a, b)
+        means, log_trans, gammas = jax.tree_util.tree_map(
+            sel, (m2, lt2, g2), (means, log_trans, gammas))
+        metrics = TemporalFitMetrics(
+            elbo=jnp.where(active, e, last),
+            delta=jnp.where(active, jnp.abs(e - last), 0.0),
+            active=active)
+        last = jnp.where(active, jnp.where(conv, last, e), last)
+        return (means, log_trans, gammas, last,
+                jnp.logical_or(done, conv)), metrics
+
+    carry0 = (means, log_trans, gammas, -jnp.inf, jnp.asarray(False))
+    (means, log_trans, gammas, last, _), metrics = jax.lax.scan(
+        sweep, carry0, None, length=sweeps)
+    return means, log_trans, gammas, last, metrics
 
 
 class FactorialHMMModel:
     """Factorial HMM: C independent chains, joint Gaussian emission.
 
     Learnt with the factored-frontier mean-field: each chain's E-step sees
-    the residual of the other chains' expected contributions (standard
-    structured VB for fHMM, Ghahramani & Jordan 1997)."""
+    the residual of the other chains' expected contributions (standard VB
+    for fHMM, Ghahramani & Jordan 1997).  Chain updates are JACOBI (all
+    chains from the previous sweep's state), which is what lets the fused
+    path batch every chain through one nested-vmap forward-backward."""
 
     def __init__(self, attributes, n_chains: int = 2, n_states: int = 2,
                  *, seed: int = 0):
@@ -304,52 +671,157 @@ class FactorialHMMModel:
         self.log_init = jnp.log(jnp.full((self.C, self.S), 1.0 / n_states))
         self.noise = jnp.asarray(1.0)
 
-    def update_model(self, data, *, sweeps: int = 15) -> float:
+    def update_model(self, data, *, sweeps: int = 15, tol: float = 0.0,
+                     fused: bool = True, backend: str = "einsum") -> float:
         batch = data.collect() if isinstance(data, DynamicDataStream) else data
         xc, mask = batch.xc, batch.mask            # [B,T,F], [B,T]
         B, T, F = xc.shape
         gammas = jnp.full((B, T, self.C, self.S), 1.0 / self.S)
-        ll_total = 0.0
-        for _ in range(sweeps):
-            # chain-wise E-step against residuals
-            new_gammas = []
-            for c in range(self.C):
-                others = [cc for cc in range(self.C) if cc != c]
-                resid = xc - sum(
-                    jnp.einsum("bts,sf->btf", gammas[:, :, cc], self.means[cc])
-                    for cc in others
-                ) if others else xc
-                ll = -(0.5 / self.noise) * (
-                    (resid[..., None, :] - self.means[c]) ** 2
-                ).sum(-1) - 0.5 * F * jnp.log(2 * jnp.pi * self.noise)
-                fb = jax.vmap(partial(forward_backward, self.log_init[c],
-                                      self.log_trans[c]))
-                g, xi, logZ = fb(ll, mask)
-                new_gammas.append(g)
-                # M-step for chain c (responsibility-weighted residual means)
-                w = (g * mask[..., None])
-                denom = jnp.maximum(w.sum((0, 1)), 1e-6)[:, None]
-                self.means = self.means.at[c].set(
-                    jnp.einsum("bts,btf->sf", w, resid) / denom)
-                self.log_trans = self.log_trans.at[c].set(
-                    jnp.log(jnp.maximum(xi.sum(0) + 1.0, 1e-6))
-                    - jnp.log(jnp.maximum(
-                        xi.sum(0).sum(-1, keepdims=True) + self.S, 1e-6)))
-                ll_total = float(logZ.sum())
-            gammas = jnp.stack(new_gammas, 2)
-        self.gammas = gammas
-        return ll_total
-
-
-class DynamicNaiveBayes(_HMMBase):
-    """Dynamic NB = HMM whose hidden class smooths over time; emissions are
-    NB-style independent Gaussians — structurally our plain HMM (the paper's
-    dynamic NB is exactly this 2TBN)."""
+        if fused:
+            params = _strong((self.means, self.log_trans, gammas))
+            means, log_trans, gammas, last, metrics = _fhmm_fit(
+                params, _strong(self.log_init), _strong(self.noise),
+                xc, mask, sweeps=sweeps, tol=tol, backend=backend)
+            last = float(last)
+        else:
+            last, elbos, deltas = -np.inf, [], []
+            means, log_trans = self.means, self.log_trans
+            for _ in range(sweeps):
+                means, log_trans, gammas, e = _fhmm_sweep(
+                    means, log_trans, self.log_init, self.noise, gammas,
+                    xc, mask, backend)
+                e = float(e)
+                elbos.append(e)
+                deltas.append(abs(e - last))
+                if abs(e - last) < tol * (abs(e) + 1.0):
+                    break
+                last = e
+            metrics = TemporalFitMetrics(
+                elbo=np.asarray(elbos), delta=np.asarray(deltas),
+                active=np.ones(len(elbos), bool))
+        self.means, self.log_trans, self.gammas = means, log_trans, gammas
+        self.fit_metrics = metrics
+        _emit_fit_event(type(self).__name__, last, metrics)
+        return last
 
 
 # ---------------------------------------------------------------------------
 # Kalman filter (LDS) and switching LDS
 # ---------------------------------------------------------------------------
+
+
+def _kalman_smooth(A, C, q, r, xs, mask):
+    """Masked Kalman smoother for one sequence.
+
+    xs [T, F], mask [T] -> (means [T, L], covs [T, L, L], pair moments
+    [T-1, L, L], loglik).  Masked steps run the time update only (predict,
+    no correction, no loglik contribution); their observation values are
+    never read."""
+    L = A.shape[0]
+    F = C.shape[0]
+    Q = q * jnp.eye(L)
+    R = r * jnp.eye(F)
+
+    def fstep(carry, inp):
+        x_t, m_t = inp
+        m, P, ll = carry
+        mp = A @ m
+        Pp = A @ P @ A.T + Q
+        S = C @ Pp @ C.T + R
+        Sinv = jnp.linalg.inv(S)
+        Kg = Pp @ C.T @ Sinv
+        innov = jnp.where(m_t > 0, x_t, 0.0) - C @ mp
+        m_new = jnp.where(m_t > 0, mp + Kg @ innov, mp)
+        P_new = jnp.where(m_t > 0, (jnp.eye(L) - Kg @ C) @ Pp, Pp)
+        _, logdet = jnp.linalg.slogdet(S)
+        ll_new = ll - jnp.where(
+            m_t > 0,
+            0.5 * (logdet + innov @ Sinv @ innov + F * jnp.log(2 * jnp.pi)),
+            0.0)
+        return (m_new, P_new, ll_new), (m_new, P_new, mp, Pp)
+
+    m0 = jnp.zeros(L)
+    P0 = jnp.eye(L)
+    (mT, PT, ll), (fm, fP, pm, pP) = jax.lax.scan(
+        fstep, (m0, P0, 0.0), (xs, mask))
+
+    def bstep(carry, inp):
+        ms_next, Ps_next = carry
+        fm_t, fP_t, pm_t1, pP_t1 = inp
+        J = fP_t @ A.T @ jnp.linalg.inv(pP_t1)
+        ms = fm_t + J @ (ms_next - pm_t1)
+        Ps = fP_t + J @ (Ps_next - pP_t1) @ J.T
+        pair = J @ Ps_next  # Cov(h_t, h_{t+1})
+        return (ms, Ps), (ms, Ps, pair)
+
+    (m1, P1), (sm, sP, pair) = jax.lax.scan(
+        bstep, (fm[-1], fP[-1]),
+        (fm[:-1], fP[:-1], pm[1:], pP[1:]), reverse=True)
+    sm = jnp.concatenate([sm, fm[-1][None]], 0)
+    sP = jnp.concatenate([sP, fP[-1][None]], 0)
+    return sm, sP, pair, ll
+
+
+def _kf_mstep(sm, sP, pair, xs, mask):
+    """Masked LDS M-step (regressions + noise).  With an all-ones mask this
+    is numerically identical to the seed's unweighted sums."""
+    B, T, L = sm.shape
+    F = xs.shape[-1]
+    w = mask
+    wl = mask[:, 1:] * mask[:, :-1]
+    Ehh = sP + sm[..., :, None] * sm[..., None, :]            # [B,T,L,L]
+    Ehh_lag = pair + sm[:, :-1, :, None] * sm[:, 1:, None, :]
+    # transition regression: h_t on h_{t-1}
+    Sxx = jnp.einsum("bt,btlm->lm", wl, Ehh[:, :-1]) + jnp.eye(L)
+    Sxy = jnp.einsum("bt,btlm->lm", wl, Ehh_lag)              # [L, L] (t,t+1)
+    A = jnp.linalg.solve(Sxx, Sxy).T
+    # emission regression: x_t on h_t
+    Hxx = jnp.einsum("bt,btlm->lm", w, Ehh) + jnp.eye(L)
+    Hxy = jnp.einsum("bt,btl,btf->lf", w, sm, xs)
+    C = jnp.linalg.solve(Hxx, Hxy).T
+    # noise variances
+    n = jnp.maximum(w.sum(), 1.0)
+    nl = jnp.maximum(wl.sum(), 1.0)
+    resid = xs - jnp.einsum("fl,btl->btf", C, sm)
+    r = jnp.maximum(
+        jnp.einsum("bt,btf->", w, resid ** 2) / (n * F)
+        + jnp.einsum("fl,bt,btlm,fm->", C, w, sP, C) / (n * F), 1e-4)
+    dyn = sm[:, 1:] - jnp.einsum("lm,btm->btl", A, sm[:, :-1])
+    q = jnp.maximum(jnp.einsum("bt,btl->", wl, dyn ** 2) / (nl * L), 1e-4)
+    return A, C, q, r
+
+
+@partial(jax.jit, static_argnames=("sweeps", "tol"), donate_argnums=(0,))
+def _kf_fit(params, xs, mask, *, sweeps, tol):
+    _bump_trace("kf_fit")
+    A, C, q, r = params
+    B, T, F = xs.shape
+    L = A.shape[0]
+
+    def sweep(carry, _):
+        A, C, q, r, sm_keep, last, done = carry
+        sm, sP, pair, lls = jax.vmap(
+            partial(_kalman_smooth, A, C, q, r))(xs, mask)
+        e = lls.sum()
+        A2, C2, q2, r2 = _kf_mstep(sm, sP, pair, xs, mask)
+        conv = jnp.abs(e - last) < tol * (jnp.abs(e) + 1.0)
+        active = jnp.logical_not(done)
+        sel = lambda a, b: jnp.where(active, a, b)
+        A, C, q, r, sm_keep = jax.tree_util.tree_map(
+            sel, (A2, C2, q2, r2, sm), (A, C, q, r, sm_keep))
+        metrics = TemporalFitMetrics(
+            elbo=jnp.where(active, e, last),
+            delta=jnp.where(active, jnp.abs(e - last), 0.0),
+            active=active)
+        last = jnp.where(active, jnp.where(conv, last, e), last)
+        return (A, C, q, r, sm_keep, last,
+                jnp.logical_or(done, conv)), metrics
+
+    sm0 = jnp.zeros((B, T, L), xs.dtype)
+    carry0 = (A, C, q, r, sm0, -jnp.inf, jnp.asarray(False))
+    (A, C, q, r, sm, last, _), metrics = jax.lax.scan(
+        sweep, carry0, None, length=sweeps)
+    return A, C, q, r, sm, last, metrics
 
 
 class KalmanFilter:
@@ -376,54 +848,15 @@ class KalmanFilter:
         self.__init__([Attribute(f"G{i}", REAL) for i in range(self.F)], n)
         return self
 
-    # -- E-step: Kalman smoothing (scan) --------------------------------------
-
     def _smooth(self, xs: jnp.ndarray):
         """xs [T, F] -> means [T, L], covs [T, L, L], pair moments, loglik."""
-        L, F = self.L, self.F
-        A, C, q, r = self.A, self.C, self.q, self.r
-        Q = q * jnp.eye(L)
-        R = r * jnp.eye(F)
+        return _kalman_smooth(self.A, self.C, self.q, self.r, xs,
+                              jnp.ones(xs.shape[0]))
 
-        def fstep(carry, x_t):
-            m, P, ll = carry
-            mp = A @ m
-            Pp = A @ P @ A.T + Q
-            S = C @ Pp @ C.T + R
-            Sinv = jnp.linalg.inv(S)
-            Kg = Pp @ C.T @ Sinv
-            innov = x_t - C @ mp
-            m_new = mp + Kg @ innov
-            P_new = (jnp.eye(L) - Kg @ C) @ Pp
-            _, logdet = jnp.linalg.slogdet(S)
-            ll_new = ll - 0.5 * (logdet + innov @ Sinv @ innov
-                                 + F * jnp.log(2 * jnp.pi))
-            return (m_new, P_new, ll_new), (m_new, P_new, mp, Pp)
-
-        m0 = jnp.zeros(L)
-        P0 = jnp.eye(L)
-        (mT, PT, ll), (fm, fP, pm, pP) = jax.lax.scan(
-            fstep, (m0, P0, 0.0), xs)
-
-        def bstep(carry, inp):
-            ms_next, Ps_next = carry
-            fm_t, fP_t, pm_t1, pP_t1 = inp
-            J = fP_t @ A.T @ jnp.linalg.inv(pP_t1)
-            ms = fm_t + J @ (ms_next - pm_t1)
-            Ps = fP_t + J @ (Ps_next - pP_t1) @ J.T
-            pair = J @ Ps_next  # Cov(h_t, h_{t+1})
-            return (ms, Ps), (ms, Ps, pair)
-
-        (m1, P1), (sm, sP, pair) = jax.lax.scan(
-            bstep, (fm[-1], fP[-1]),
-            (fm[:-1], fP[:-1], pm[1:], pP[1:]), reverse=True)
-        sm = jnp.concatenate([sm, fm[-1][None]], 0)
-        sP = jnp.concatenate([sP, fP[-1][None]], 0)
-        return sm, sP, pair, ll
-
-    def update_model(self, data, *, sweeps: int = 25) -> float:
+    def update_model(self, data, *, sweeps: int = 25, tol: float = 0.0,
+                     fused: bool = True) -> float:
         batch = data.collect() if isinstance(data, DynamicDataStream) else data
-        xs = batch.xc                                # [B, T, F]
+        xs, mask = batch.xc, batch.mask              # [B, T, F], [B, T]
         B, T, F = xs.shape
         L = self.L
         if not getattr(self, "_warm", False):
@@ -440,37 +873,121 @@ class KalmanFilter:
             A0 = np.linalg.lstsq(xlag, xnext, rcond=None)[0].T
             self.C = jnp.asarray(C0, jnp.float32)
             self.A = jnp.asarray(A0, jnp.float32)
-        ll = 0.0
-        for _ in range(sweeps):
-            sm, sP, pair, lls = jax.vmap(self._smooth)(xs)
-            ll = float(lls.sum())
-            # expected moments
-            Ehh = sP + sm[..., :, None] * sm[..., None, :]       # [B,T,L,L]
-            Ehh_lag = pair + sm[:, :-1, :, None] * sm[:, 1:, None, :]
-            # transition regression: h_t on h_{t-1}
-            Sxx = Ehh[:, :-1].sum((0, 1)) + jnp.eye(L)
-            Sxy = Ehh_lag.sum((0, 1))                            # [L, L] (t,t+1)
-            self.A = jnp.linalg.solve(Sxx, Sxy).T
-            # emission regression: x_t on h_t
-            Hxx = Ehh.sum((0, 1)) + jnp.eye(L)
-            Hxy = jnp.einsum("btl,btf->lf", sm, xs)
-            self.C = jnp.linalg.solve(Hxx, Hxy).T
-            # noise variances
-            resid = xs - jnp.einsum("fl,btl->btf", self.C, sm)
-            self.r = jnp.maximum(
-                (resid ** 2).mean() + jnp.einsum(
-                    "fl,btlm,fm->", self.C, sP, self.C) / (B * T * F), 1e-4)
-            dyn = sm[:, 1:] - jnp.einsum("lm,btm->btl", self.A, sm[:, :-1])
-            self.q = jnp.maximum((dyn ** 2).mean(), 1e-4)
+        if fused:
+            params = _strong((self.A, self.C, self.q, self.r))
+            A, C, q, r, sm, last, metrics = _kf_fit(
+                params, xs, mask, sweeps=sweeps, tol=tol)
+            self.A, self.C, self.q, self.r = A, C, q, r
+            last = float(last)
+        else:
+            last, elbos, deltas = -np.inf, [], []
+            sm = None
+            for _ in range(sweeps):
+                sm, sP, pair, lls = jax.vmap(partial(
+                    _kalman_smooth, self.A, self.C, self.q, self.r))(xs, mask)
+                e = float(lls.sum())
+                self.A, self.C, self.q, self.r = _kf_mstep(
+                    sm, sP, pair, xs, mask)
+                elbos.append(e)
+                deltas.append(abs(e - last))
+                if abs(e - last) < tol * (abs(e) + 1.0):
+                    break
+                last = e
+            metrics = TemporalFitMetrics(
+                elbo=np.asarray(elbos), delta=np.asarray(deltas),
+                active=np.ones(len(elbos), bool))
         self.smoothed = sm
-        return ll
+        self.fit_metrics = metrics
+        _emit_fit_event(type(self).__name__, last, metrics)
+        return last
 
     def get_model(self):
         return {"A": self.A, "C": self.C, "q": self.q, "r": self.r}
 
     def filtered_states(self, xs: jnp.ndarray) -> jnp.ndarray:
-        sm, _, _, _ = jax.vmap(self._smooth)(xs)
+        masks = jnp.ones(xs.shape[:2])
+        sm, _, _, _ = jax.vmap(partial(
+            _kalman_smooth, self.A, self.C, self.q, self.r))(xs, masks)
         return sm
+
+
+def _slds_sweep(A, C, q, r, log_trans, resp, xs, mask):
+    """One structured-VB sweep: q(h) under switch-averaged dynamics, q(s)
+    from innovation logliks via the masked factored-frontier filter, then
+    a STATE-BATCHED M-step (one [S]-batched linear solve instead of the
+    seed's per-state Python loop)."""
+    B, T, F = xs.shape
+    S, L = A.shape[0], A.shape[1]
+    w_all = resp * mask[..., None]
+    Abar = jnp.einsum("bts,slm->lm", w_all, A) / jnp.maximum(mask.sum(), 1.0)
+    sm, sP, pair, lls = jax.vmap(
+        partial(_kalman_smooth, Abar, C, q, r))(xs, mask)
+    e = lls.sum()
+    # q(s): innovation loglik per switch state
+    pred = jnp.einsum("slm,btm->btsl", A, sm[:, :-1])
+    innov = sm[:, 1:, None, :] - pred                 # [B,T-1,S,L]
+    loglik = -0.5 * (innov ** 2).sum(-1) / q
+    loglik = jnp.concatenate([jnp.zeros((B, 1, S), xs.dtype), loglik], axis=1)
+    model = Factorial2TBN(init=jnp.full((1, S), 1.0 / S),
+                          trans=jnp.exp(log_trans)[None])
+
+    def one(seq_ll, seq_mask):
+        beliefs, _ = factored_frontier_filter(
+            model, seq_ll[:, None, :], seq_mask)
+        return beliefs[:, 0]
+
+    resp2 = jax.vmap(one)(loglik, mask)
+    # M-step: per-switch-state transition regression, batched over S
+    Ehh = sP + sm[..., :, None] * sm[..., None, :]
+    Ehh_lag = pair + sm[:, :-1, :, None] * sm[:, 1:, None, :]
+    wl = mask[:, 1:] * mask[:, :-1]
+    ws = resp2[:, 1:] * wl[..., None]                 # [B,T-1,S]
+    Sxx = jnp.einsum("bts,btlm->slm", ws, Ehh[:, :-1]) + jnp.eye(L)
+    Sxy = jnp.einsum("bts,btlm->slm", ws, Ehh_lag)
+    A2 = jnp.swapaxes(jnp.linalg.solve(Sxx, Sxy), -1, -2)
+    # shared emission + noises (as in KalmanFilter)
+    Hxx = jnp.einsum("bt,btlm->lm", mask, Ehh) + jnp.eye(L)
+    Hxy = jnp.einsum("bt,btl,btf->lf", mask, sm, xs)
+    C2 = jnp.linalg.solve(Hxx, Hxy).T
+    n = jnp.maximum(mask.sum(), 1.0)
+    nl = jnp.maximum(wl.sum(), 1.0)
+    resid = xs - jnp.einsum("fl,btl->btf", C2, sm)
+    r2 = jnp.maximum(jnp.einsum("bt,btf->", mask, resid ** 2) / (n * F), 1e-4)
+    dyn = sm[:, 1:] - jnp.einsum(
+        "bts,slm,btm->btl", resp2[:, 1:], A2, sm[:, :-1])
+    q2 = jnp.maximum(jnp.einsum("bt,btl->", wl, dyn ** 2) / (nl * L), 1e-4)
+    return A2, C2, q2, r2, resp2, sm, e
+
+
+@partial(jax.jit, static_argnames=("sweeps", "tol"), donate_argnums=(0,))
+def _slds_fit(params, log_trans, xs, mask, *, sweeps, tol):
+    _bump_trace("slds_fit")
+    A, C, q, r, resp = params
+    B, T, _ = xs.shape
+    L = A.shape[1]
+
+    def sweep(carry, _):
+        A, C, q, r, resp, sm_keep, last, done = carry
+        A2, C2, q2, r2, resp2, sm, e = _slds_sweep(
+            A, C, q, r, log_trans, resp, xs, mask)
+        conv = jnp.abs(e - last) < tol * (jnp.abs(e) + 1.0)
+        active = jnp.logical_not(done)
+        sel = lambda a, b: jnp.where(active, a, b)
+        A, C, q, r, resp, sm_keep = jax.tree_util.tree_map(
+            sel, (A2, C2, q2, r2, resp2, sm), (A, C, q, r, resp, sm_keep))
+        metrics = TemporalFitMetrics(
+            elbo=jnp.where(active, e, last),
+            delta=jnp.where(active, jnp.abs(e - last), 0.0),
+            active=active)
+        last = jnp.where(active, jnp.where(conv, last, e), last)
+        return (A, C, q, r, resp, sm_keep, last,
+                jnp.logical_or(done, conv)), metrics
+
+    sm0 = jnp.zeros((B, T, L), xs.dtype)
+    carry0 = (A, C, q, r, resp, sm0, -jnp.inf, jnp.asarray(False))
+    (A, C, q, r, resp, sm, last, _), metrics = jax.lax.scan(
+        sweep, carry0, None, length=sweeps)
+    return A, C, q, r, resp, sm, last, metrics
 
 
 class SwitchingLDS:
@@ -493,58 +1010,38 @@ class SwitchingLDS:
         self.r = jnp.asarray(0.3)
         self.log_trans = jnp.log(
             0.9 * jnp.eye(self.S) + 0.1 / self.S)
-        self.base = KalmanFilter(
-            [Attribute(f"G{i}", REAL) for i in range(self.F)], n_hidden)
 
-    def update_model(self, data, *, sweeps: int = 10) -> float:
-        from repro.core.factored_frontier import (
-            Factorial2TBN, factored_frontier_filter)
-
+    def update_model(self, data, *, sweeps: int = 10, tol: float = 0.0,
+                     fused: bool = True) -> float:
         batch = data.collect() if isinstance(data, DynamicDataStream) else data
-        xs = batch.xc
+        xs, mask = batch.xc, batch.mask
         B, T, F = xs.shape
-        S, L = self.S, self.L
+        S = self.S
         resp = jnp.full((B, T, S), 1.0 / S)
-        ll = 0.0
-        for _ in range(sweeps):
-            # q(h): smooth under switch-averaged A
-            self.base.C = self.C
-            self.base.q, self.base.r = self.q, self.r
-            self.base.A = jnp.einsum(
-                "bts,slm->lm", resp, self.A) / (B * T)
-            sm, sP, pair, lls = jax.vmap(self.base._smooth)(xs)
-            ll = float(lls.sum())
-            # q(s): innovation loglik per switch state
-            pred = jnp.einsum("slm,btm->btsl", self.A, sm[:, :-1])
-            innov = sm[:, 1:, None, :] - pred                 # [B,T-1,S,L]
-            loglik = -0.5 * (innov ** 2).sum(-1) / self.q
-            loglik = jnp.concatenate(
-                [jnp.zeros((B, 1, S)), loglik], axis=1)
-            model = Factorial2TBN(
-                init=jnp.full((1, S), 1.0 / S),
-                trans=jnp.exp(self.log_trans)[None])
-
-            def one(seq_ll):
-                beliefs, _ = factored_frontier_filter(model, seq_ll[:, None, :])
-                return beliefs[:, 0]
-
-            resp = jax.vmap(one)(loglik)
-            # M-step: per-switch-state transition regression
-            Ehh = sP + sm[..., :, None] * sm[..., None, :]
-            Ehh_lag = pair + sm[:, :-1, :, None] * sm[:, 1:, None, :]
-            for s in range(S):
-                w = resp[:, 1:, s]
-                Sxx = jnp.einsum("bt,btlm->lm", w, Ehh[:, :-1]) + jnp.eye(L)
-                Sxy = jnp.einsum("bt,btlm->lm", w, Ehh_lag)
-                self.A = self.A.at[s].set(jnp.linalg.solve(Sxx, Sxy).T)
-            # shared emission + noises (as in KalmanFilter)
-            Hxx = Ehh.sum((0, 1)) + jnp.eye(L)
-            Hxy = jnp.einsum("btl,btf->lf", sm, xs)
-            self.C = jnp.linalg.solve(Hxx, Hxy).T
-            resid = xs - jnp.einsum("fl,btl->btf", self.C, sm)
-            self.r = jnp.maximum((resid ** 2).mean(), 1e-4)
-            dyn = sm[:, 1:] - jnp.einsum(
-                "bts,slm,btm->btl", resp[:, 1:], self.A, sm[:, :-1])
-            self.q = jnp.maximum((dyn ** 2).mean(), 1e-4)
+        if fused:
+            params = _strong((self.A, self.C, self.q, self.r, resp))
+            A, C, q, r, resp, sm, last, metrics = _slds_fit(
+                params, _strong(self.log_trans), xs, mask,
+                sweeps=sweeps, tol=tol)
+            self.A, self.C, self.q, self.r = A, C, q, r
+            last = float(last)
+        else:
+            last, elbos, deltas = -np.inf, [], []
+            for _ in range(sweeps):
+                (self.A, self.C, self.q, self.r, resp, sm, e) = _slds_sweep(
+                    self.A, self.C, self.q, self.r, self.log_trans, resp,
+                    xs, mask)
+                e = float(e)
+                elbos.append(e)
+                deltas.append(abs(e - last))
+                if abs(e - last) < tol * (abs(e) + 1.0):
+                    break
+                last = e
+            metrics = TemporalFitMetrics(
+                elbo=np.asarray(elbos), delta=np.asarray(deltas),
+                active=np.ones(len(elbos), bool))
         self.resp = resp
-        return ll
+        self.smoothed = sm
+        self.fit_metrics = metrics
+        _emit_fit_event(type(self).__name__, last, metrics)
+        return last

@@ -118,6 +118,7 @@ class PGMQuery:
     qid: int
     target: str                       # variable whose posterior is requested
     evidence: Dict[str, float]
+    payload: Optional[np.ndarray] = None      # temporal mode: [T, F] sequence
     result: Optional[np.ndarray] = None       # posterior table over target
     log_evidence: Optional[float] = None      # exact mode only
     done: bool = False
@@ -134,19 +135,28 @@ class PGMQueryEngine:
     (``repro.pgm_models``) via the jitted, chunk-bounded
     ``vmp.posterior_z`` — N fully-observed queries sharing a schema cost
     one compiled dispatch; evidence must cover every feature ``X{i}``.
+    ``mode="temporal"`` serves filtered / h-step predictive hidden-state
+    posteriors from a fitted HMM-family model (``pgm_models.dynamic``):
+    queries carry a ``[T, F]`` sequence payload, bucket by (T, horizon),
+    and ride one compiled factored-frontier program per bucket shape
+    (``dynamic._temporal_serve``, posterior passed as an argument so model
+    updates are never served from stale compiled constants).
     """
 
     def __init__(self, bn, *, mode: str = "exact", n_samples: int = 10_000,
                  use_pallas: Optional[bool] = None, seed: int = 0) -> None:
         from repro.infer_exact import JunctionTreeEngine
 
-        if mode not in ("exact", "importance", "vmp"):
+        if mode not in ("exact", "importance", "vmp", "temporal"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "vmp":
             # ``bn`` is a plate Model with a discrete latent Z
             if not hasattr(bn, "cp") or bn.cp.layout.K <= 1:
                 raise ValueError("mode='vmp' needs a plate Model with a "
                                  "discrete latent Z")
+        if mode == "temporal" and not hasattr(bn, "filtered_posterior"):
+            raise ValueError("mode='temporal' needs a fitted HMM-family "
+                             "model (pgm_models.dynamic)")
         self.bn = bn
         self.mode = mode
         self.n_samples = n_samples
@@ -156,8 +166,10 @@ class PGMQueryEngine:
         self._queue: List[PGMQuery] = []
         self._next = 0
         self._vmp_caps: set = set()   # compiled posterior_z batch capacities
+        self._temporal_keys: set = set()   # compiled (T, horizon, cap) buckets
 
-    def submit(self, target: str, evidence: Dict[str, float]) -> PGMQuery:
+    def submit(self, target: str, evidence: Dict[str, float],
+               payload: Optional[np.ndarray] = None) -> PGMQuery:
         if self.mode == "vmp":
             # reject malformed queries HERE: flush() empties the queue
             # before dispatch, so a late error would drop queued work
@@ -169,6 +181,23 @@ class PGMQueryEngine:
             if missing:
                 raise ValueError(f"mode='vmp' needs fully observed features; "
                                  f"missing {sorted(missing)}")
+        if self.mode == "temporal":
+            if target not in ("filter", "predict"):
+                raise ValueError(f"mode='temporal' serves 'filter' or "
+                                 f"'predict', got target {target!r}")
+            arr = np.asarray(payload, np.float32)
+            if arr.ndim != 2:
+                raise ValueError("mode='temporal' needs a [T, F] sequence "
+                                 "payload")
+            h = int(evidence.get("horizon", 1 if target == "predict" else 0))
+            if target == "filter":
+                h = 0
+            # value-carrying schema: same-(T, horizon) queries batch together
+            q = PGMQuery(self._next, target,
+                         {"T": float(arr.shape[0]), "h": float(h)}, arr)
+            self._next += 1
+            self._queue.append(q)
+            return q
         q = PGMQuery(self._next, target, dict(evidence))
         self._next += 1
         self._queue.append(q)
@@ -191,7 +220,11 @@ class PGMQueryEngine:
         self._queue = []
         groups: Dict[tuple, List[PGMQuery]] = {}
         for q in queue:
-            groups.setdefault(tuple(sorted(q.evidence)), []).append(q)
+            # temporal buckets are value-carrying ((T, horizon), not just
+            # the evidence NAMES): sequence length selects the program
+            key = (tuple(f"{k}{int(v)}" for k, v in sorted(q.evidence.items()))
+                   if self.mode == "temporal" else tuple(sorted(q.evidence)))
+            groups.setdefault(key, []).append(q)
         queue_depth = len(queue)
         with obs.span("serve.flush", mode=self.mode, n_queries=queue_depth,
                       n_buckets=len(groups)):
@@ -203,6 +236,8 @@ class PGMQueryEngine:
                         binfo = self._flush_exact(schema, qs)
                     elif self.mode == "vmp":
                         binfo = self._flush_vmp(schema, qs)
+                    elif self.mode == "temporal":
+                        binfo = self._flush_temporal(schema, qs)
                     else:
                         binfo = self._flush_importance(qs)
                 if obs.enabled():
@@ -262,6 +297,42 @@ class PGMQueryEngine:
         for b, q in enumerate(qs):
             q.result = post[b]
             q.done = True
+        return {"cache_hit": cache_hit, "compile_us": 0.0, "execute_us": 0.0}
+
+    def _flush_temporal(self, schema: tuple, qs: List[PGMQuery]) -> dict:
+        """Filtered / predictive state posteriors for one (T, horizon) bucket.
+
+        All sequences in the bucket share T, so they stack into a single
+        ``[cap, T, F]`` batch (cap = next power of two, mirroring the vmp
+        path) and run through ONE jitted factored-frontier program
+        (``dynamic._temporal_serve``); padded rows carry a zero mask."""
+        from repro.pgm_models import dynamic as _dyn
+
+        model = self.bn
+        h = int(qs[0].evidence.get("h", 0))
+        B = len(qs)
+        cap = 1 << max(B - 1, 0).bit_length()
+        T = qs[0].payload.shape[0]
+        F = qs[0].payload.shape[1]
+        xs = np.zeros((cap, T, F), np.float32)
+        mask = np.zeros((cap, T), np.float32)
+        for b, q in enumerate(qs):
+            xs[b] = q.payload
+            mask[b] = 1.0
+        key = (T, h, cap)
+        cache_hit = key in self._temporal_keys
+        xc = jnp.asarray(xs)
+        beliefs, last = _dyn._temporal_serve(
+            model.posterior, model._design(xc), model._emission_target(xc),
+            jnp.asarray(mask), horizon=h)
+        beliefs, last = np.asarray(beliefs), np.asarray(last)
+        for b, q in enumerate(qs):
+            q.result = beliefs[b] if q.target == "filter" else last[b]
+            q.done = True
+        if not cache_hit and obs.enabled():
+            obs.emit("temporal_plan", pipeline="factored_frontier",
+                     batch=cap, T=T, S=int(model.S), horizon=h)
+        self._temporal_keys.add(key)
         return {"cache_hit": cache_hit, "compile_us": 0.0, "execute_us": 0.0}
 
     def _flush_importance(self, qs: List[PGMQuery]) -> dict:
