@@ -82,6 +82,17 @@ BENCH_TEMPORAL_SCHEMA = {
 }
 
 
+# --json --serve mode: the async serving tier — sustained queries/s and
+# request/bucket latency percentiles vs offered load, single-device vs
+# mesh-replica, plan-cache hit rate and the hot-swap zero-drop flag.
+BENCH_SERVE_SCHEMA = {
+    "bench": str, "schema_version": int, "created": str,
+    "config": dict, "results": list,
+    "plan_cache_hit_rate": float,
+    "hot_swap_zero_drop": bool,
+}
+
+
 def _bench_env_config() -> dict:
     """Environment fields stamped into every BENCH_*.json config block so
     the perf trajectory is comparable across jax versions / kernel policies."""
@@ -915,6 +926,223 @@ def validate_bench_temporal(payload: dict) -> None:
         raise ValueError("same-shape refit retraced the fused program")
 
 
+def _serve_offered_load(server, xs, load: float, duration: float,
+                        deadline_ms: float, seed: int = 0,
+                        swap_fn=None) -> dict:
+    """Drive one offered-load window: Poisson arrivals at ``load`` q/s for
+    ``duration`` s; optional hot swap at the halfway point.  Returns
+    request-level latency stats (all tickets are awaited — a lost request
+    would hang the bench, so completion IS the zero-drop check)."""
+    rng = np.random.default_rng(seed)
+    tickets = []
+    swapped = swap_fn is None
+    t0 = time.monotonic()
+    end = t0 + duration
+    F = xs.shape[1]
+    while time.monotonic() < end:
+        row = xs[rng.integers(len(xs))]
+        tickets.append(server.submit(
+            "Z", {f"X{i}": float(row[i]) for i in range(F)},
+            deadline_ms=deadline_ms))
+        if not swapped and time.monotonic() - t0 > duration / 2:
+            swap_fn()
+            swapped = True
+        time.sleep(rng.exponential(1.0 / load))
+    for t in tickets:
+        t.result(timeout=120)
+    dt = time.monotonic() - t0
+    lat_ms = np.array([(t.done_s - t.submitted_s) * 1e3 for t in tickets])
+    return {
+        "offered_qps": load,
+        "achieved_qps": len(tickets) / dt,
+        "n_queries": len(tickets),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "deadline_ms": deadline_ms,
+        "deadline_misses": sum(t.deadline_miss for t in tickets),
+        "swapped": swap_fn is not None,
+    }
+
+
+def bench_serve_json(duration: float = 3.0, loads: tuple = (200.0, 800.0),
+                     deadline_ms: float = 50.0, max_batch: int = 32,
+                     max_delay_ms: float = 5.0, n: int = 512, k: int = 3,
+                     f: int = 4, out: str = "BENCH_serve.json") -> dict:
+    """(JSON mode) the async serving tier (``repro.serve.queue``).
+
+    A fitted GaussianMixture serves q(Z | x) queries (``mode="vmp"`` — the
+    jitted ``posterior_z`` path) through :class:`AsyncPGMServer` under
+    Poisson offered load, at each load in ``loads``, for two drivers:
+
+    * ``serve_single`` — one engine replica, plain single-device dispatch;
+      the FIRST load window includes a mid-stream hot model swap, and the
+      bench blocks on every ticket — completion of all of them is the
+      zero-drop check recorded as ``hot_swap_zero_drop``.
+    * ``serve_mesh`` — the same buckets data-sharded across all visible
+      devices via the ``dvmp`` ``shard_map`` path (run under
+      ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for a real
+      mesh on CPU).
+
+    Request-level p50/p99 come from ticket submit->done wall times;
+    bucket-level p50/p99 are aggregated from the ``serve_bucket``
+    ``latency_us`` telemetry (obs JSONL), per the ROADMAP serving item.
+    """
+    import datetime
+    import os
+    import tempfile
+
+    import jax
+
+    from repro import obs
+    from repro.core.compat import make_mesh
+    from repro.data.synthetic import gmm_stream
+    from repro.pgm_models import GaussianMixture
+    from repro.serve.queue import AsyncPGMServer
+
+    stream, _, _ = gmm_stream(n, k, f, seed=0)
+    model = GaussianMixture(stream.attributes, n_states=k)
+    model.update_model(stream)
+    xs = np.asarray(stream.collect().xc)
+    ndev = len(jax.devices())
+    mesh = make_mesh((ndev,), ("data",))
+
+    results = []
+    hit_rates = []
+    zero_drop = False
+    for driver in ("serve_single", "serve_mesh"):
+        for li, load in enumerate(loads):
+            tmp = tempfile.NamedTemporaryFile(
+                suffix=".jsonl", delete=False).name
+            server = AsyncPGMServer(
+                model, mode="vmp", max_batch=max_batch,
+                max_delay_ms=max_delay_ms, default_deadline_ms=deadline_ms,
+                mesh=mesh if driver == "serve_mesh" else None)
+            prev = None
+            try:
+                # warm the plan cache BEFORE enabling telemetry, so compile
+                # latencies stay out of the measured bucket percentiles —
+                # one plan per pow2 batch capacity the load will coalesce to
+                cap = 1
+                while cap <= 2 * max_batch:
+                    warm = [server.submit(
+                        "Z", {f"X{i}": float(xs[j % len(xs), i])
+                              for i in range(f)})
+                        for j in range(cap)]
+                    for t in warm:
+                        t.result(timeout=120)
+                    cap *= 2
+                prev = obs.configure(level="basic", path=tmp)
+
+                swap_fn = None
+                swap_thread = []
+                if driver == "serve_single" and li == 0:
+                    import threading
+
+                    refit = GaussianMixture(stream.attributes, n_states=k,
+                                            seed=1)
+                    refit.update_model(stream)
+
+                    def swap_fn():
+                        # swap from a side thread: arrivals keep flowing
+                        # while the new version warms in the background
+                        th = threading.Thread(
+                            target=server.swap_model, args=(refit,))
+                        th.start()
+                        swap_thread.append(th)
+
+                row = _serve_offered_load(server, xs, load, duration,
+                                          deadline_ms, seed=li,
+                                          swap_fn=swap_fn)
+                for th in swap_thread:
+                    th.join()
+                if swap_fn is not None:
+                    # every ticket resolved across the swap -> zero dropped
+                    zero_drop = (server.stats()["pending"] == 0)
+            finally:
+                server.stop()
+                if prev is not None:
+                    obs.configure(**prev)
+            st = server.stats()
+            hit_rates.append(st["plans"]["hit_rate"])
+            bucket_us = [e["latency_us"] for e in
+                         (json.loads(l) for l in open(tmp))
+                         if e["event"] == "serve_bucket"]
+            os.unlink(tmp)
+            row.update({
+                "driver": driver,
+                "n_devices": ndev if driver == "serve_mesh" else 1,
+                "bucket_p50_us": float(np.percentile(bucket_us, 50)),
+                "bucket_p99_us": float(np.percentile(bucket_us, 99)),
+                "n_buckets": len(bucket_us),
+                "plan_cache_hit_rate": st["plans"]["hit_rate"],
+                "flushes": st["flushes"],
+            })
+            results.append(row)
+
+    payload = {
+        "bench": "serve",
+        "schema_version": 1,
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "config": {"duration_s": duration, "loads_qps": list(loads),
+                   "deadline_ms": deadline_ms, "max_batch": max_batch,
+                   "max_delay_ms": max_delay_ms, "n": n, "components": k,
+                   "features": f, "mode": "vmp", "n_devices": ndev,
+                   **_bench_env_config()},
+        "results": results,
+        "plan_cache_hit_rate": float(np.mean(hit_rates)),
+        "hot_swap_zero_drop": zero_drop,
+    }
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    r0 = results[0]
+    print(f"wrote {out}: serve_single {r0['achieved_qps']:.0f} q/s at "
+          f"{r0['offered_qps']:.0f} offered (p50 {r0['p50_ms']:.1f}ms, "
+          f"p99 {r0['p99_ms']:.1f}ms), mesh x{ndev}, plan hit-rate "
+          f"{payload['plan_cache_hit_rate']:.2f}, "
+          f"hot_swap_zero_drop={zero_drop}")
+    return payload
+
+
+def validate_bench_serve(payload: dict) -> None:
+    """Schema gate for BENCH_serve.json — used by scripts/ci.sh."""
+    for key, typ in BENCH_SERVE_SCHEMA.items():
+        if key not in payload:
+            raise ValueError(f"BENCH_serve.json missing key {key!r}")
+        if typ is float and isinstance(payload[key], int):
+            continue
+        if not isinstance(payload[key], typ):
+            raise ValueError(f"{key!r} must be {typ.__name__}, "
+                             f"got {type(payload[key]).__name__}")
+    for key in ("jax_version", "pallas_policy"):
+        if key not in payload["config"]:
+            raise ValueError(f"config missing {key!r}")
+    drivers = {r["driver"] for r in payload["results"]}
+    if drivers != {"serve_single", "serve_mesh"}:
+        raise ValueError(f"unexpected drivers {drivers}")
+    for need in drivers:
+        loads = {r["offered_qps"] for r in payload["results"]
+                 if r["driver"] == need}
+        if len(loads) < 2:
+            raise ValueError(f"driver {need!r} must cover >= 2 offered "
+                             f"loads, got {sorted(loads)}")
+    for r in payload["results"]:
+        for field in ("offered_qps", "achieved_qps", "n_queries", "p50_ms",
+                      "p99_ms", "bucket_p50_us", "bucket_p99_us",
+                      "deadline_misses", "n_devices",
+                      "plan_cache_hit_rate"):
+            if field not in r:
+                raise ValueError(f"result {r['driver']} missing {field!r}")
+        if not r["achieved_qps"] > 0:
+            raise ValueError("achieved_qps must be positive")
+        if r["p99_ms"] < r["p50_ms"]:
+            raise ValueError("p99 below p50 — latency aggregation broken")
+    if not 0.0 <= payload["plan_cache_hit_rate"] <= 1.0:
+        raise ValueError("plan_cache_hit_rate out of [0, 1]")
+    if payload["hot_swap_zero_drop"] is not True:
+        raise ValueError("hot swap dropped requests (or never ran)")
+
+
 def bench_drift():
     """(iv) drift detection latency (batches until flagged)."""
     import jax
@@ -1161,6 +1389,10 @@ def main(argv=None) -> None:
                     help="with --json: run the fused temporal VB-EM drivers "
                          "(HMM scan vs host loop, fHMM backends) and write "
                          "BENCH_temporal.json instead")
+    ap.add_argument("--serve", action="store_true",
+                    help="with --json: drive the async serving tier under "
+                         "Poisson offered load (single-device vs mesh "
+                         "replicas) and write BENCH_serve.json instead")
     ap.add_argument("--out", default=None)
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--batch", type=int, default=2_000)
@@ -1185,15 +1417,22 @@ def main(argv=None) -> None:
                     help="sequences per batch for the --temporal drivers")
     ap.add_argument("--temporal-t", type=int, default=64,
                     help="steps per sequence for the --temporal drivers")
+    ap.add_argument("--serve-duration", type=float, default=3.0,
+                    help="offered-load window per --serve config, seconds")
+    ap.add_argument("--serve-loads", type=float, nargs="+",
+                    default=[200.0, 800.0],
+                    help="offered loads (queries/s) for the --serve drivers")
+    ap.add_argument("--deadline-ms", type=float, default=50.0,
+                    help="per-request deadline for the --serve drivers")
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of the benchmark "
                          "run into DIR (open with TensorBoard/Perfetto)")
     args = ap.parse_args(argv)
 
-    if ((args.dvmp or args.latent or args.structure or args.temporal)
-            and not args.json):
-        ap.error("--dvmp/--latent/--structure/--temporal require --json "
-                 "(they write BENCH_*.json)")
+    if ((args.dvmp or args.latent or args.structure or args.temporal
+         or args.serve) and not args.json):
+        ap.error("--dvmp/--latent/--structure/--temporal/--serve require "
+                 "--json (they write BENCH_*.json)")
 
     from repro.obs.profile import profile
 
@@ -1221,6 +1460,13 @@ def main(argv=None) -> None:
                 b=args.temporal_b, t=args.temporal_t, sweeps=args.sweeps,
                 out=args.out or "BENCH_temporal.json")
             validate_bench_temporal(payload)
+            return
+        if args.json and args.serve:
+            payload = bench_serve_json(
+                duration=args.serve_duration, loads=tuple(args.serve_loads),
+                deadline_ms=args.deadline_ms,
+                out=args.out or "BENCH_serve.json")
+            validate_bench_serve(payload)
             return
         if args.json:
             payload = bench_streaming_json(

@@ -24,6 +24,10 @@
 #      validation PLUS the fused-vs-host-loop posterior parity, the fHMM
 #      pallas-vs-einsum suff-stats parity and the no-retrace program-cache
 #      flag baked into the validator,
+#   4e. the serving harness (--json --serve) on short offered-load windows
+#      over a forced 4-device host: schema validation PLUS the single-device
+#      and mesh-replica drivers, two load points each, and the
+#      hot-swap-zero-drop gate baked into the validator,
 #   5. end-to-end junction-tree queries through the public API: a discrete
 #      2-variable query AND a strong-junction-tree query on a CLG network
 #      with an unobserved continuous INTERNAL node, so both exact-inference
@@ -42,7 +46,11 @@
 #      replays a sequence stream through seq_stream_fit and serves
 #      filter/predict queries via PGMQueryEngine mode="temporal", then
 #      validate_obs_events asserts temporal_fit, stream_batch and
-#      temporal_plan events all made it to the JSONL.
+#      temporal_plan events all made it to the JSONL,
+#   7c. the serving obs leg: a fresh process drives AsyncPGMServer through
+#      timeout-triggered micro-batch flushes and a mid-stream hot model
+#      swap, then validate_obs_events asserts serve_deadline, serve_swap
+#      and the per-bucket serve_bucket telemetry all validate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -74,9 +82,11 @@ DVMP_OUT="$(mktemp -t bench_dvmp_smoke.XXXXXX.json)"
 LATENT_OUT="$(mktemp -t bench_latent_smoke.XXXXXX.json)"
 STRUCT_OUT="$(mktemp -t bench_structure_smoke.XXXXXX.json)"
 TEMPORAL_OUT="$(mktemp -t bench_temporal_smoke.XXXXXX.json)"
+SERVE_OUT="$(mktemp -t bench_serve_smoke.XXXXXX.json)"
 OBS_OUT="$(mktemp -t obs_events_smoke.XXXXXX.jsonl)"
 OBS_TEMPORAL_OUT="$(mktemp -t obs_temporal_smoke.XXXXXX.jsonl)"
-trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT" "$TEMPORAL_OUT" "$OBS_OUT" "$OBS_TEMPORAL_OUT"' EXIT
+OBS_SERVE_OUT="$(mktemp -t obs_serve_smoke.XXXXXX.jsonl)"
+trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT" "$TEMPORAL_OUT" "$SERVE_OUT" "$OBS_OUT" "$OBS_TEMPORAL_OUT" "$OBS_SERVE_OUT"' EXIT
 python benchmarks/run.py --json --n 1000 --batch 250 --sweeps 2 \
     --window 2 --out "$BENCH_OUT"
 python - "$BENCH_OUT" <<'EOF'
@@ -152,6 +162,24 @@ print("ci smoke: BENCH_temporal schema OK (fused "
       f"{payload['speedup_seq_per_s']:.2f}x, posterior diff "
       f"{payload['fused_posterior_max_abs_diff']:.2e}, "
       f"retrace_free={payload['retrace_free']})")
+EOF
+
+XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+python benchmarks/run.py --json --serve --serve-duration 1.0 \
+    --serve-loads 100 200 --out "$SERVE_OUT"
+python - "$SERVE_OUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from run import validate_bench_serve
+
+with open(sys.argv[1]) as fh:
+    payload = json.load(fh)
+validate_bench_serve(payload)
+single = [r for r in payload["results"] if r["driver"] == "serve_single"][0]
+print("ci smoke: BENCH_serve schema OK "
+      f"({single['achieved_qps']:.0f} q/s, p99 {single['p99_ms']:.1f}ms, "
+      f"hit rate {payload['plan_cache_hit_rate']:.2f}, "
+      f"zero_drop={payload['hot_swap_zero_drop']})")
 EOF
 
 python - <<'EOF'
@@ -317,6 +345,43 @@ need = ("temporal_fit", "stream_batch", "drift", "temporal_plan",
 missing = [ev for ev in need if not counts.get(ev)]
 assert not missing, f"temporal obs leg missing: {missing} (got {counts})"
 print(f"ci smoke: temporal obs JSONL schema OK ("
+      + ", ".join(f"{k}={counts[k]}" for k in sorted(counts)) + ")")
+EOF
+
+# serving obs leg: async micro-batching (timeout-triggered flushes) plus a
+# mid-stream hot model swap in a fresh process; the swap and every flush
+# decision must land in the JSONL and validate against the event schema.
+REPRO_OBS=basic REPRO_OBS_PATH="$OBS_SERVE_OUT" python - <<'EOF'
+import numpy as np
+from repro.data import synthetic as syn
+from repro.serve.queue import AsyncPGMServer
+
+bn = syn.random_discrete_bn(5, card=2, max_parents=2, seed=0)
+bn2 = syn.random_discrete_bn(5, card=2, max_parents=2, seed=1)
+names = [v.name for v in bn.order]
+server = AsyncPGMServer(bn, mode="exact", max_batch=64, max_delay_ms=20,
+                        default_deadline_ms=60_000)
+tickets = [server.submit(names[-1], {names[0]: float(k % 2)})
+           for k in range(3)]
+[t.result(timeout=120) for t in tickets]          # serve_deadline (timeout)
+info = server.swap_model(bn2)                     # serve_swap
+assert info["new_version"] == 1 and info["warmed_plans"] >= 1, info
+tickets = [server.submit(names[-1], {names[0]: float(k % 2)})
+           for k in range(3)]
+out = [t.result(timeout=120) for t in tickets]    # served by the new network
+server.stop()
+assert server.stats()["pending"] == 0, server.stats()
+assert all(np.isfinite(np.asarray(r)).all() for r in out)
+EOF
+python - "$OBS_SERVE_OUT" <<'EOF'
+import sys
+from repro.obs import validate_obs_events
+
+counts = validate_obs_events(sys.argv[1])
+need = ("serve_deadline", "serve_swap", "serve_bucket", "serve_flush")
+missing = [ev for ev in need if not counts.get(ev)]
+assert not missing, f"serve obs leg missing: {missing} (got {counts})"
+print(f"ci smoke: serve obs JSONL schema OK ("
       + ", ".join(f"{k}={counts[k]}" for k in sorted(counts)) + ")")
 EOF
 

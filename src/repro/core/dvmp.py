@@ -154,6 +154,51 @@ def dvmp_fit(
     return prog(prior, init, xc, xd, mask)
 
 
+@functools.lru_cache(maxsize=64)
+def _posterior_z_program(cp: CompiledPlate, mesh: Mesh,
+                         data_axes: Tuple[str, ...], backend: str,
+                         chunk: Optional[int]):
+    dspec = P(data_axes)
+    rep = P()
+
+    @partial(
+        shard_map, mesh=mesh,
+        in_specs=(rep, dspec, dspec), out_specs=dspec,
+        check_vma=False,
+    )
+    def body(post_, xc_, xd_):
+        mask = jnp.ones(xc_.shape[0], xc_.dtype)
+        _, r = V.local_step(cp, post_, xc_, xd_, mask,
+                            backend=backend, chunk=chunk)
+        return r
+
+    return jax.jit(body)
+
+
+def dvmp_posterior_z(
+    cp: CompiledPlate,
+    post: PlateParams,
+    xc: jnp.ndarray,
+    xd: jnp.ndarray,
+    mesh: Mesh,
+    data_axes: Tuple[str, ...] = ("data",),
+    backend: str = "einsum",
+    chunk: Optional[int] = None,
+) -> jnp.ndarray:
+    """Replica-sharded q(Z | x) — the serving-tier query collective.
+
+    Independent queries need NO cross-device reduction (unlike the fit
+    path's suff-stat psum): the global posterior is replicated, the query
+    batch is split over ``data_axes``, each replica answers its shard with
+    ``local_step`` and the sharded result is reassembled.  Row results are
+    identical to single-device :func:`repro.core.vmp.posterior_z`.
+    ``xc.shape[0]`` must divide by the product of data-axis sizes (the
+    serving tier pads buckets to a power of two, which does).
+    """
+    prog = _posterior_z_program(cp, mesh, tuple(data_axes), backend, chunk)
+    return prog(post, xc, xd)
+
+
 def dvmp_one_sweep(
     cp: CompiledPlate,
     prior: PlateParams,

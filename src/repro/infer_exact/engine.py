@@ -35,6 +35,7 @@ Two compilation pipelines, chosen statically from the network:
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
@@ -47,6 +48,7 @@ from repro.infer_exact import factors as F
 from repro.infer_exact.graph import (JunctionTree, compile_junction_tree,
                                      compile_strong_junction_tree)
 from repro import obs
+from repro.serve.plan import PlanCache, PlanKey
 
 
 def _needs_strong(bn: BayesianNetwork) -> bool:
@@ -64,7 +66,9 @@ class JunctionTreeEngine:
 
     def __init__(self, bn: Optional[BayesianNetwork] = None, *,
                  use_pallas: Optional[bool] = None,
-                 bucketed: bool = True) -> None:
+                 bucketed: bool = True,
+                 plan_cache: Optional[PlanCache] = None,
+                 network_version: int = 0) -> None:
         self.use_pallas = F.USE_PALLAS if use_pallas is None else use_pallas
         # strong pipeline: batch per-clique solve/slogdet/weak-marginal calls
         # through shape buckets per tree level (False = one call per clique,
@@ -76,14 +80,49 @@ class JunctionTreeEngine:
         self._beliefs: Optional[Tuple] = None
         self._logz: Optional[jnp.ndarray] = None
         self._batched = False
-        self._compiled: Dict[Tuple, object] = {}
+        # AOT propagation programs live in a PlanCache keyed on
+        # (network_version, pipeline, schema, batch, dtypes).  A shared
+        # cache (the serving tier passes one) lets exact-JT plans coexist
+        # with vmp/temporal plans under one LRU + one hit-rate counter.
+        self.plans = plan_cache if plan_cache is not None else PlanCache()
+        self.network_version = network_version
         self.last_run: Optional[Dict[str, object]] = None
         if bn is not None:
-            self.set_model(bn)
+            self.set_model(bn, network_version=network_version)
+
+    @property
+    def _compiled(self) -> Dict[Tuple, object]:
+        """Deprecated pre-plan-API cache view: ``{(schema, batch, dtypes):
+        executable}`` for the CURRENT network version.  Use
+        ``self.plans`` (:class:`~repro.serve.plan.PlanCache`) instead;
+        this read-only shim is removed one release after the plan API."""
+        warnings.warn(
+            "JunctionTreeEngine._compiled is deprecated; use "
+            "JunctionTreeEngine.plans (repro.serve.plan.PlanCache)",
+            DeprecationWarning, stacklevel=2)
+        return {(k.schema, k.batch_shape[0], k.dtypes): p._fn
+                for k, p in ((k, self.plans.peek(k))
+                             for k in self.plans.keys())
+                if p is not None and k.network_version == self.network_version
+                and k.mode.startswith("jt-")}
 
     # -- compilation ---------------------------------------------------------
 
-    def set_model(self, bn: BayesianNetwork) -> None:
+    def set_model(self, bn: BayesianNetwork, *,
+                  network_version: Optional[int] = None) -> None:
+        """(Re)compile the junction tree for ``bn``.
+
+        ``network_version`` stamps the plan keys of every propagation
+        program compiled for this network; re-setting a model without an
+        explicit version bumps it, so stale plans (which bake the old
+        network's CPDs in as compiled constants) can never serve the new
+        one.  They age out of the LRU rather than being dropped eagerly —
+        the hot-swap drain calls ``plans.invalidate(old_version)``.
+        """
+        if network_version is not None:
+            self.network_version = network_version
+        elif self.bn is not None:
+            self.network_version += 1
         self.bn = bn
         self.strong = _needs_strong(bn)
         self.jt = (compile_strong_junction_tree(bn) if self.strong
@@ -132,7 +171,6 @@ class JunctionTreeEngine:
                     stack.append((w, u, sw))
         self._collect = tuple(reversed(pre))     # post-order: leaves first
         self._distribute = tuple(pre)            # root outward
-        self._compiled = {}
         self._beliefs = None
 
     # -- evidence / propagation ----------------------------------------------
@@ -197,30 +235,35 @@ class JunctionTreeEngine:
         vals = tuple(jnp.broadcast_to(v, (B,)) for v in vals)
         pipeline = "strong" if self.strong else "discrete"
         # AOT executables do not retrace on new shapes the way lazy jit
-        # does, so the cache key carries everything shape-affecting
-        key = (names, B, tuple(str(v.dtype) for v in vals))
-        fn = self._compiled.get(key)
-        cache_hit = fn is not None
+        # does, so the plan key carries everything shape-affecting (plus
+        # the network version: the compiled program bakes the CPDs in)
+        key = PlanKey(self.network_version, f"jt-{pipeline}", names, (B,),
+                      tuple(str(v.dtype) for v in vals))
+        cache_hit = self.plans.peek(key) is not None
         compile_us = 0.0
-        if fn is None:
+        if not cache_hit:
             prop = self._propagate_strong if self.strong else self._propagate
-            t0 = _time.perf_counter_ns()
-            with obs.span("jt.compile", schema=",".join(names), batch=B,
-                          pipeline=pipeline):
-                fn = jax.jit(partial(prop, names)).lower(vals).compile()
-            compile_us = (_time.perf_counter_ns() - t0) / 1e3
-            self._compiled[key] = fn
+
+            def build():
+                with obs.span("jt.compile", schema=",".join(names), batch=B,
+                              pipeline=pipeline):
+                    return jax.jit(partial(prop, names)).lower(vals).compile()
+
+            plan = self.plans.get(key, build)
+            compile_us = plan.compile_us
             if obs.enabled():
                 obs.emit("jt_plan", pipeline=pipeline,
                          n_cliques=len(self.jt.cliques),
                          levels=self._plan_levels(),
                          bucketed=self.bucketed, batch=B,
                          schema=",".join(names))
+        else:
+            plan = self.plans.get(key)
         self._run_names = names
         t0 = _time.perf_counter_ns()
         with obs.span("jt.execute", schema=",".join(names), batch=B,
                       pipeline=pipeline, cache_hit=cache_hit):
-            out = fn(vals)
+            out = plan.run(vals)
             if obs.enabled(obs.TRACE):
                 # only at trace level: force the async dispatch to finish so
                 # the span measures device time, not enqueue time

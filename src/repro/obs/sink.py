@@ -73,6 +73,12 @@ EVENT_SCHEMA: Dict[str, Tuple[str, ...]] = {
     "temporal_fit": ("model", "sweeps", "elbo", "delta"),
     # temporal filter/predict program compiled for a serve bucket
     "temporal_plan": ("pipeline", "batch", "T", "S", "horizon"),
+    # async micro-batch flush decision (size / timeout / deadline trigger)
+    "serve_deadline": ("mode", "schema", "batch", "trigger", "wait_us",
+                       "deadline_miss"),
+    # hot model swap: new network version published without dropping traffic
+    "serve_swap": ("old_version", "new_version", "warmed_plans", "drained",
+                   "dur_us"),
     # kernel-backend dispatch counter snapshot
     "kernel_dispatch": ("counts",),
     # registry estimator output (e.g. analytical HLO FLOP/byte model)

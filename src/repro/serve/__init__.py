@@ -1,2 +1,27 @@
-"""Serving substrate: batched LM decode engine plus the schema-batched
-exact-query path (``PGMQueryEngine`` over the infer_exact junction tree)."""
+"""Serving tier: the plan/run API (``repro.serve.plan``), the schema-batched
+query engines (``repro.serve.engine``) and the async deadline-aware
+micro-batching server (``repro.serve.queue``).
+
+The plan names are imported eagerly (they are dependency-free and
+``infer_exact`` needs them); the engine/server classes load lazily because
+``serve.engine`` pulls in the full ``repro.nn`` stack.
+"""
+
+from repro.serve.plan import CompiledPlan, PlanCache, PlanKey
+
+__all__ = ["CompiledPlan", "PlanCache", "PlanKey", "DecodeEngine",
+           "PGMQueryEngine", "AsyncPGMServer", "ServeTicket"]
+
+_LAZY = {"DecodeEngine": "repro.serve.engine",
+         "PGMQueryEngine": "repro.serve.engine",
+         "AsyncPGMServer": "repro.serve.queue",
+         "ServeTicket": "repro.serve.queue"}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

@@ -21,7 +21,8 @@ Two serving surfaces:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -31,6 +32,7 @@ from repro import obs
 from repro.configs.base import ModelConfig
 from repro.data.stream import Batch
 from repro.nn import transformer as T
+from repro.serve.plan import PlanCache, PlanKey
 
 
 @dataclasses.dataclass
@@ -144,7 +146,10 @@ class PGMQueryEngine:
     """
 
     def __init__(self, bn, *, mode: str = "exact", n_samples: int = 10_000,
-                 use_pallas: Optional[bool] = None, seed: int = 0) -> None:
+                 use_pallas: Optional[bool] = None, seed: int = 0,
+                 plan_cache: Optional[PlanCache] = None,
+                 network_version: int = 0, pad_pow2: bool = False,
+                 mesh=None, data_axes: Tuple[str, ...] = ("data",)) -> None:
         from repro.infer_exact import JunctionTreeEngine
 
         if mode not in ("exact", "importance", "vmp", "temporal"):
@@ -157,22 +162,85 @@ class PGMQueryEngine:
         if mode == "temporal" and not hasattr(bn, "filtered_posterior"):
             raise ValueError("mode='temporal' needs a fitted HMM-family "
                              "model (pgm_models.dynamic)")
+        if mesh is not None and mode != "vmp":
+            raise ValueError("mesh replica sharding is only wired for "
+                             "mode='vmp' (the dvmp path)")
         self.bn = bn
         self.mode = mode
         self.n_samples = n_samples
         self.seed = seed
-        self._jt = (JunctionTreeEngine(bn, use_pallas=use_pallas)
+        self._use_pallas = use_pallas
+        # pad exact-mode buckets to the next power of two (vmp/temporal
+        # always do) so arbitrary batch sizes reuse a handful of compiled
+        # plans.  Off by default: direct callers keep one-plan-per-size
+        # compile accounting; the async serving tier turns it on.
+        self.pad_pow2 = pad_pow2
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        # one PlanCache serves every mode; the serving tier passes a shared
+        # instance so exact-JT / vmp / temporal plans share an LRU + counters
+        self.plans = plan_cache if plan_cache is not None else PlanCache()
+        self.network_version = network_version
+        self._jt = (JunctionTreeEngine(bn, use_pallas=use_pallas,
+                                       plan_cache=self.plans,
+                                       network_version=network_version)
                     if mode == "exact" else None)
         self._queue: List[PGMQuery] = []
         self._next = 0
-        self._vmp_caps: set = set()   # compiled posterior_z batch capacities
-        self._temporal_keys: set = set()   # compiled (T, horizon, cap) buckets
 
-    def submit(self, target: str, evidence: Dict[str, float],
-               payload: Optional[np.ndarray] = None) -> PGMQuery:
+    # -- deprecated pre-plan-API cache views ---------------------------------
+
+    @property
+    def _vmp_caps(self) -> set:
+        """Deprecated: compiled posterior_z batch capacities now live in
+        ``self.plans`` as ``PlanKey(mode="vmp")`` entries."""
+        warnings.warn("PGMQueryEngine._vmp_caps is deprecated; use "
+                      "PGMQueryEngine.plans (repro.serve.plan.PlanCache)",
+                      DeprecationWarning, stacklevel=2)
+        return {k.batch_shape[0] for k in self.plans.keys()
+                if k.mode == "vmp"
+                and k.network_version == self.network_version}
+
+    @property
+    def _temporal_keys(self) -> set:
+        """Deprecated: compiled (T, horizon, cap) buckets now live in
+        ``self.plans`` as ``PlanKey(mode="temporal")`` entries."""
+        warnings.warn("PGMQueryEngine._temporal_keys is deprecated; use "
+                      "PGMQueryEngine.plans (repro.serve.plan.PlanCache)",
+                      DeprecationWarning, stacklevel=2)
+        return {(k.batch_shape[1], int(k.schema[1][1:]), k.batch_shape[0])
+                for k in self.plans.keys() if k.mode == "temporal"
+                and k.network_version == self.network_version}
+
+    # -- model lifecycle -----------------------------------------------------
+
+    def set_model(self, bn, *, network_version: Optional[int] = None) -> None:
+        """Swap the served network/model in place (the hot-swap primitive).
+
+        Bumps ``network_version`` (or sets it to the explicit one), so every
+        plan compiled for the old model — whose CPDs are baked into the
+        executable as compiled constants — stops hitting and ages out of
+        the LRU.  Queued queries are answered by the NEW model on the next
+        flush; the async tier drains old buckets first, then calls this.
+        """
+        self.bn = bn
+        self.network_version = (self.network_version + 1
+                                if network_version is None else network_version)
+        if self._jt is not None:
+            self._jt.set_model(bn, network_version=self.network_version)
+
+    # -- query intake --------------------------------------------------------
+
+    def _validate(self, target: str, evidence: Dict[str, float],
+                  payload: Optional[np.ndarray] = None
+                  ) -> Tuple[Dict[str, float], Optional[np.ndarray]]:
+        """Reject malformed queries and normalize (evidence, payload).
+
+        Raises at SUBMIT time: flush() empties the queue before dispatch,
+        so a late error would drop queued work.  The async serving tier
+        calls this from its own submit path for the same reason.
+        """
         if self.mode == "vmp":
-            # reject malformed queries HERE: flush() empties the queue
-            # before dispatch, so a late error would drop queued work
             if target != "Z":
                 raise ValueError(f"mode='vmp' serves the latent Z, "
                                  f"got target {target!r}")
@@ -181,6 +249,7 @@ class PGMQueryEngine:
             if missing:
                 raise ValueError(f"mode='vmp' needs fully observed features; "
                                  f"missing {sorted(missing)}")
+            return dict(evidence), None
         if self.mode == "temporal":
             if target not in ("filter", "predict"):
                 raise ValueError(f"mode='temporal' serves 'filter' or "
@@ -193,12 +262,21 @@ class PGMQueryEngine:
             if target == "filter":
                 h = 0
             # value-carrying schema: same-(T, horizon) queries batch together
-            q = PGMQuery(self._next, target,
-                         {"T": float(arr.shape[0]), "h": float(h)}, arr)
-            self._next += 1
-            self._queue.append(q)
-            return q
-        q = PGMQuery(self._next, target, dict(evidence))
+            return {"T": float(arr.shape[0]), "h": float(h)}, arr
+        return dict(evidence), None
+
+    def bucket_key(self, evidence: Dict[str, float]) -> tuple:
+        """The schema bucket for (normalized) evidence — queries sharing a
+        key ride one device call.  Temporal buckets are value-carrying
+        ((T, horizon), not just the evidence NAMES): sequence length
+        selects the program."""
+        return (tuple(f"{k}{int(v)}" for k, v in sorted(evidence.items()))
+                if self.mode == "temporal" else tuple(sorted(evidence)))
+
+    def submit(self, target: str, evidence: Dict[str, float],
+               payload: Optional[np.ndarray] = None) -> PGMQuery:
+        ev, arr = self._validate(target, evidence, payload)
+        q = PGMQuery(self._next, target, ev, arr)
         self._next += 1
         self._queue.append(q)
         return q
@@ -220,11 +298,7 @@ class PGMQueryEngine:
         self._queue = []
         groups: Dict[tuple, List[PGMQuery]] = {}
         for q in queue:
-            # temporal buckets are value-carrying ((T, horizon), not just
-            # the evidence NAMES): sequence length selects the program
-            key = (tuple(f"{k}{int(v)}" for k, v in sorted(q.evidence.items()))
-                   if self.mode == "temporal" else tuple(sorted(q.evidence)))
-            groups.setdefault(key, []).append(q)
+            groups.setdefault(self.bucket_key(q.evidence), []).append(q)
         queue_depth = len(queue)
         with obs.span("serve.flush", mode=self.mode, n_queries=queue_depth,
                       n_buckets=len(groups)):
@@ -251,10 +325,23 @@ class PGMQueryEngine:
             obs.emit("serve_flush", mode=self.mode, n_queries=queue_depth,
                      n_buckets=len(groups))
             obs.emit_kernel_counts(site="serve.flush")
+        # SUBMISSION order, not bucket order: callers pair results with
+        # requests positionally, and qid is the submission sequence number
+        done.sort(key=lambda q: q.qid)
         return done
 
     def _flush_exact(self, schema: tuple, qs: List[PGMQuery]) -> dict:
-        ev = {n: jnp.asarray([q.evidence[n] for q in qs]) for n in schema}
+        B = len(qs)
+        cap = (1 << max(B - 1, 0).bit_length()) if self.pad_pow2 else B
+        ev = {}
+        for n in schema:
+            col = jnp.asarray([q.evidence[n] for q in qs])
+            if cap != B:
+                # pad with copies of row 0: rows are independent through the
+                # tree, so real rows stay bit-identical to the unpadded run
+                col = jnp.concatenate(
+                    [col, jnp.broadcast_to(col[:1], (cap - B,))])
+            ev[n] = col
         self._jt.set_evidence(ev)
         self._jt.run_inference()
         logz = np.atleast_1d(np.asarray(self._jt.log_evidence()))
@@ -275,7 +362,10 @@ class PGMQueryEngine:
     def _flush_vmp(self, schema: tuple, qs: List[PGMQuery]) -> dict:
         """q(Z | x) for a schema group in ONE jitted posterior_z dispatch.
 
-        Queries were validated at submit time (full evidence, target Z)."""
+        Queries were validated at submit time (full evidence, target Z).
+        With a ``mesh``, the batch is data-sharded over the mesh replicas
+        via the dvmp ``shard_map`` path — N independent queries split
+        across devices, one collective-free program."""
         model = self.bn
         spec = model.spec
         dm = spec.discrete_map
@@ -284,16 +374,35 @@ class PGMQueryEngine:
         # pad to the next power of two so arbitrary group sizes reuse a
         # handful of compiled posterior_z programs instead of one per size
         cap = 1 << max(B - 1, 0).bit_length()
+        if self.mesh is not None:
+            # shard_map needs cap % n_devices == 0; pow2 caps divide any
+            # pow2 device count once cap >= n_devices
+            n_dev = 1
+            for a in self.data_axes:
+                n_dev *= self.mesh.shape[a]
+            cap = max(cap, n_dev)
         xc = np.zeros((cap, len(cont_ids)), np.float32)
         xd = np.zeros((cap, len(dm)), np.int32)
         for b, q in enumerate(qs):
             xc[b] = [q.evidence[f"X{i}"] for i in cont_ids]
             xd[b] = [q.evidence[f"X{i}"] for i in sorted(dm)]
-        cache_hit = cap in self._vmp_caps   # reused compiled posterior_z cap
-        self._vmp_caps.add(cap)
-        post = np.asarray(model.posterior_z(Batch(
-            jnp.asarray(xc), jnp.asarray(xd),
-            jnp.ones(cap, jnp.float32))))
+        key = PlanKey(self.network_version, "vmp", schema, (cap,))
+        cache_hit = self.plans.peek(key) is not None
+
+        def build():
+            if self.mesh is None:
+                # posterior read through self.bn at run time: model updates
+                # between flushes are never served from a stale closure
+                return lambda xc_, xd_: self.bn.posterior_z(
+                    Batch(xc_, xd_, jnp.ones(xc_.shape[0], jnp.float32)))
+            from repro.core import dvmp as _dvmp
+            m, axes = self.mesh, self.data_axes
+            return lambda xc_, xd_: _dvmp.dvmp_posterior_z(
+                self.bn.cp, self.bn.posterior, xc_, xd_, m, axes,
+                backend=self.bn.backend, chunk=self.bn.chunk)
+
+        plan = self.plans.get(key, build)
+        post = np.asarray(plan.run(jnp.asarray(xc), jnp.asarray(xd)))
         for b, q in enumerate(qs):
             q.result = post[b]
             q.done = True
@@ -319,12 +428,17 @@ class PGMQueryEngine:
         for b, q in enumerate(qs):
             xs[b] = q.payload
             mask[b] = 1.0
-        key = (T, h, cap)
-        cache_hit = key in self._temporal_keys
-        xc = jnp.asarray(xs)
-        beliefs, last = _dyn._temporal_serve(
-            model.posterior, model._design(xc), model._emission_target(xc),
-            jnp.asarray(mask), horizon=h)
+        key = PlanKey(self.network_version, "temporal", schema, (cap, T))
+        cache_hit = self.plans.peek(key) is not None
+
+        def build():
+            # model state read through self.bn at run time (swap-safe)
+            return lambda xc_, mask_: _dyn._temporal_serve(
+                self.bn.posterior, self.bn._design(xc_),
+                self.bn._emission_target(xc_), mask_, horizon=h)
+
+        plan = self.plans.get(key, build)
+        beliefs, last = plan.run(jnp.asarray(xs), jnp.asarray(mask))
         beliefs, last = np.asarray(beliefs), np.asarray(last)
         for b, q in enumerate(qs):
             q.result = beliefs[b] if q.target == "filter" else last[b]
@@ -332,7 +446,6 @@ class PGMQueryEngine:
         if not cache_hit and obs.enabled():
             obs.emit("temporal_plan", pipeline="factored_frontier",
                      batch=cap, T=T, S=int(model.S), horizon=h)
-        self._temporal_keys.add(key)
         return {"cache_hit": cache_hit, "compile_us": 0.0, "execute_us": 0.0}
 
     def _flush_importance(self, qs: List[PGMQuery]) -> dict:

@@ -1,0 +1,352 @@
+"""Async serving tier — deadline-aware micro-batching over PGMQueryEngine.
+
+The layer a millions-of-users deployment needs on top of the schema-bucketed
+batch engine (ROADMAP "production serving tier"):
+
+* **Request queue + micro-batching** — :meth:`AsyncPGMServer.submit` returns
+  immediately with a :class:`ServeTicket`; arriving queries coalesce into
+  bucket-shaped device batches (same grouping as
+  :meth:`PGMQueryEngine.bucket_key`) and flush on size-or-timeout, with
+  per-request deadlines driving flush order: the due bucket with the
+  earliest deadline always flushes first.
+
+* **Replica sharding** — ``replicas=N`` runs N worker threads over N engine
+  replicas (round-robin over buckets); all replicas share ONE
+  :class:`~repro.serve.plan.PlanCache`, so a plan compiled by any replica
+  serves all of them.  ``mesh=`` additionally data-shards each vmp bucket
+  across the mesh devices via the ``dvmp`` ``shard_map`` path.
+
+* **Hot model swap** — :meth:`swap_model` publishes a re-learnt network
+  under ``network_version + 1``: new-version engines are built and their
+  plans warmed in the background (serving continues), the engine list is
+  switched atomically, queued-but-unflushed buckets drain through the OLD
+  engines, and the old version's plans are invalidated.  No request is
+  dropped; results issued before the switch come from the old network,
+  after it from the new.
+
+Flush decisions emit ``serve_deadline`` events and swaps emit
+``serve_swap`` (schema-validated, ``repro.obs``); the per-bucket
+``serve_bucket`` telemetry comes from the underlying engine unchanged.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.serve.engine import PGMQueryEngine, PGMQuery
+from repro.serve.plan import PlanCache
+
+
+class ServeTicket:
+    """Future-like handle for one submitted query.
+
+    ``result(timeout)`` blocks until the micro-batch containing the query
+    flushes; ``query`` then holds the answered :class:`PGMQuery`.
+    """
+
+    __slots__ = ("rid", "deadline_s", "submitted_s", "done_s", "query",
+                 "error", "deadline_miss", "trigger", "_event")
+
+    def __init__(self, rid: int, deadline_s: float, submitted_s: float):
+        self.rid = rid
+        self.deadline_s = deadline_s        # monotonic-clock deadline
+        self.submitted_s = submitted_s
+        self.done_s: Optional[float] = None
+        self.query: Optional[PGMQuery] = None
+        self.error: Optional[BaseException] = None
+        self.deadline_miss = False
+        self.trigger: Optional[str] = None  # what flushed the batch
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Posterior table for the query (blocks until flushed)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not served "
+                               f"within {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.query.result
+
+
+class _Bucket:
+    __slots__ = ("key", "items", "first_s", "min_deadline_s")
+
+    def __init__(self, key: tuple, now: float):
+        self.key = key
+        # items hold the ORIGINAL (target, evidence, payload) so the engine
+        # re-normalizes at flush time (e.g. temporal horizon extraction)
+        self.items: List[Tuple[ServeTicket, str, Dict[str, float],
+                               Optional[np.ndarray]]] = []
+        self.first_s = now
+        self.min_deadline_s = float("inf")
+
+
+class AsyncPGMServer:
+    """Deadline-aware async micro-batching server over PGMQueryEngine.
+
+    Parameters
+    ----------
+    max_batch        size trigger: a bucket reaching this many queries
+                     flushes immediately (the whole bucket flushes — the
+                     pow2 padding downstream absorbs overshoot)
+    max_delay_ms     timeout trigger: no query waits longer than this for
+                     batch-mates, deadline permitting
+    default_deadline_ms
+                     per-request deadline when ``submit`` gives none; a
+                     bucket flushes ``deadline_margin_ms`` before its
+                     earliest deadline even if ``max_delay_ms`` has not
+                     elapsed
+    replicas         worker threads x engine replicas (shared plan cache)
+    mesh, data_axes  vmp mode only: data-shard each bucket across the mesh
+    """
+
+    def __init__(self, bn, *, mode: str = "exact", max_batch: int = 32,
+                 max_delay_ms: float = 5.0, default_deadline_ms: float = 50.0,
+                 deadline_margin_ms: float = 1.0, replicas: int = 1,
+                 use_pallas: Optional[bool] = None, mesh=None,
+                 data_axes: Tuple[str, ...] = ("data",),
+                 plan_cache: Optional[PlanCache] = None,
+                 n_samples: int = 10_000, seed: int = 0) -> None:
+        if replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        self.mode = mode
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_ms / 1e3
+        self.default_deadline_s = default_deadline_ms / 1e3
+        self.margin_s = deadline_margin_ms / 1e3
+        self._mk = dict(mode=mode, use_pallas=use_pallas, mesh=mesh,
+                        data_axes=data_axes, n_samples=n_samples, seed=seed)
+        self.plans = plan_cache if plan_cache is not None else PlanCache()
+        self.network_version = 0
+        self._engines = [self._make_engine(bn, 0) for _ in range(replicas)]
+        self._cv = threading.Condition()
+        self._buckets: Dict[tuple, _Bucket] = {}
+        # one arrival sample per seen bucket — the swap warm-up workload
+        self._samples: Dict[tuple, Tuple[str, Dict[str, float],
+                                         Optional[np.ndarray]]] = {}
+        self._next_rid = 0
+        self._stop = False
+        self.submitted = 0
+        self.completed = 0
+        self.deadline_misses = 0
+        self.flushes: Dict[str, int] = {}
+        self._workers = [
+            threading.Thread(target=self._worker_loop, args=(i,), daemon=True,
+                             name=f"serve-worker-{i}")
+            for i in range(replicas)]
+        for w in self._workers:
+            w.start()
+
+    def _make_engine(self, bn, version: int) -> PGMQueryEngine:
+        eng = PGMQueryEngine(bn, plan_cache=self.plans,
+                             network_version=version, pad_pow2=True,
+                             **self._mk)
+        # serializes this replica's submit+flush against the swap drain
+        eng._serve_lock = threading.Lock()
+        return eng
+
+    # -- intake ---------------------------------------------------------------
+
+    def submit(self, target: str, evidence: Dict[str, float],
+               payload: Optional[np.ndarray] = None,
+               deadline_ms: Optional[float] = None) -> ServeTicket:
+        """Enqueue one query; returns immediately with a ticket."""
+        eng = self._engines[0]
+        ev, _ = eng._validate(target, evidence, payload)  # raise HERE, async
+        key = eng.bucket_key(ev)
+        now = time.monotonic()
+        ddl = now + (self.default_deadline_s if deadline_ms is None
+                     else deadline_ms / 1e3)
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("server is stopped")
+            t = ServeTicket(self._next_rid, ddl, now)
+            self._next_rid += 1
+            b = self._buckets.get(key)
+            if b is None:
+                b = self._buckets[key] = _Bucket(key, now)
+            b.items.append((t, target, dict(evidence),
+                            None if payload is None else np.asarray(payload)))
+            b.min_deadline_s = min(b.min_deadline_s, ddl)
+            self._samples.setdefault(
+                key, (target, dict(evidence),
+                      None if payload is None else np.asarray(payload)))
+            self.submitted += 1
+            self._cv.notify_all()
+        return t
+
+    # -- flush scheduling -----------------------------------------------------
+
+    def _due_time(self, b: _Bucket) -> float:
+        return min(b.first_s + self.max_delay_s,
+                   b.min_deadline_s - self.margin_s)
+
+    def _pop_due_locked(self, now: float) -> Optional[Tuple[_Bucket, str]]:
+        """Earliest-deadline due bucket (or None).  Caller holds _cv."""
+        due = [b for b in self._buckets.values()
+               if self._stop or len(b.items) >= self.max_batch
+               or now >= self._due_time(b)]
+        if not due:
+            return None
+        b = min(due, key=lambda b: b.min_deadline_s)
+        del self._buckets[b.key]
+        if len(b.items) >= self.max_batch:
+            trigger = "size"
+        elif self._stop:
+            trigger = "drain"
+        elif b.min_deadline_s - self.margin_s <= b.first_s + self.max_delay_s:
+            trigger = "deadline"
+        else:
+            trigger = "timeout"
+        return b, trigger
+
+    def _worker_loop(self, widx: int) -> None:
+        while True:
+            with self._cv:
+                while True:
+                    if self._stop and not self._buckets:
+                        return
+                    now = time.monotonic()
+                    item = self._pop_due_locked(now)
+                    if item is not None:
+                        engines = self._engines
+                        break
+                    nxt = min((self._due_time(b)
+                               for b in self._buckets.values()),
+                              default=None)
+                    self._cv.wait(None if nxt is None
+                                  else max(1e-4, nxt - now))
+            bucket, trigger = item
+            self._flush_bucket(engines[widx % len(engines)], bucket, trigger)
+
+    def _flush_bucket(self, eng: PGMQueryEngine, bucket: _Bucket,
+                      trigger: str) -> None:
+        now = time.monotonic()
+        wait_us = (now - bucket.first_s) * 1e6
+        pairs: List[Tuple[ServeTicket, PGMQuery]] = []
+        err: Optional[BaseException] = None
+        try:
+            with eng._serve_lock:
+                for t, target, evidence, payload in bucket.items:
+                    pairs.append((t, eng.submit(target, evidence, payload)))
+                eng.flush()
+        except BaseException as e:          # fail the tickets, never hang them
+            err = e
+        done_s = time.monotonic()
+        miss = 0
+        for t, q in pairs:
+            t.query = q
+            t.trigger = trigger
+            t.error = err
+            t.done_s = done_s
+            if done_s > t.deadline_s:
+                t.deadline_miss = True
+                miss += 1
+            t._event.set()
+        if err is not None:                 # tickets created before the error
+            for t, *_rest in bucket.items[len(pairs):]:
+                t.error = err
+                t.trigger = trigger
+                t.done_s = done_s
+                t._event.set()
+        with self._cv:
+            self.completed += len(bucket.items)
+            self.deadline_misses += miss
+            self.flushes[trigger] = self.flushes.get(trigger, 0) + 1
+        if obs.enabled():
+            obs.emit("serve_deadline", mode=self.mode,
+                     schema=",".join(bucket.key), batch=len(bucket.items),
+                     trigger=trigger, wait_us=wait_us, deadline_miss=miss)
+
+    # -- hot model swap -------------------------------------------------------
+
+    def swap_model(self, bn, *, warm: bool = True) -> Dict[str, Any]:
+        """Publish ``bn`` as a new network version without dropping traffic.
+
+        1. Build new-version engine replicas and (``warm=True``) compile
+           their plans in the background by mirroring the OLD version's
+           plan working set: for each old plan, the recorded sample
+           request of its bucket is replayed at the plan's batch capacity
+           — serving continues on the old engines throughout.
+        2. Atomically switch the engine list: submissions from here on are
+           answered by the new network.
+        3. Drain queued-but-unflushed buckets through the OLD engines
+           (deadline order), then invalidate the old version's plans.
+
+        Returns a summary dict (also emitted as a ``serve_swap`` event).
+        """
+        t0 = time.perf_counter_ns()
+        with self._cv:
+            old_version = self.network_version
+            samples = dict(self._samples)
+            n_rep = len(self._engines)
+        new_version = old_version + 1
+        new_engines = [self._make_engine(bn, new_version)
+                       for _ in range(n_rep)]
+        warmed = 0
+        if warm:
+            eng = new_engines[0]   # shared plan cache: one replica warms all
+            old_keys = [k for k in self.plans.keys()
+                        if k.network_version == old_version]
+            # bucket key == PlanKey.schema in every mode, so each old plan
+            # maps back to its bucket's recorded sample request
+            for k in old_keys:
+                s = samples.get(k.schema)
+                if s is None:
+                    continue
+                target, evidence, payload = s
+                with eng._serve_lock:
+                    for _ in range(k.batch_shape[0]):
+                        eng.submit(target, evidence, payload)
+                    eng.flush()
+            warmed = sum(1 for k in self.plans.keys()
+                         if k.network_version == new_version)
+        with self._cv:
+            old_engines, self._engines = self._engines, new_engines
+            drained = list(self._buckets.values())
+            self._buckets.clear()
+            self.network_version = new_version
+        n_drained = sum(len(b.items) for b in drained)
+        for b in sorted(drained, key=lambda b: b.min_deadline_s):
+            self._flush_bucket(old_engines[0], b, "drain")
+        self.plans.invalidate(old_version)
+        info = {"old_version": old_version, "new_version": new_version,
+                "warmed_plans": warmed, "drained": n_drained,
+                "dur_us": (time.perf_counter_ns() - t0) / 1e3}
+        if obs.enabled():
+            obs.emit("serve_swap", **info)
+        return info
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def stop(self) -> None:
+        """Drain every queued bucket, then stop the workers."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for w in self._workers:
+            w.join()
+
+    def stats(self) -> Dict[str, Any]:
+        with self._cv:
+            return {"submitted": self.submitted, "completed": self.completed,
+                    "pending": self.submitted - self.completed,
+                    "deadline_misses": self.deadline_misses,
+                    "flushes": dict(self.flushes),
+                    "network_version": self.network_version,
+                    "replicas": len(self._engines),
+                    "plans": self.plans.stats()}
+
+    def __enter__(self) -> "AsyncPGMServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
