@@ -93,6 +93,21 @@ BENCH_SERVE_SCHEMA = {
 }
 
 
+# --json --resilience mode: the fault-tolerance layer under injected
+# faults — streaming throughput with a 1%-NaN-poisoned stream vs clean
+# (plus the quarantine bit-identity flag), serving qps/p99 through a
+# worker crash + transient compile failure vs clean (plus the zero-loss
+# flag), and checkpoint save/restore/recovery timings with the
+# bit-identical-resume flag.
+BENCH_RESILIENCE_SCHEMA = {
+    "bench": str, "schema_version": int, "created": str,
+    "config": dict, "streaming": dict, "serving": dict, "checkpoint": dict,
+    "quarantine_bit_identical": bool,
+    "serve_zero_loss": bool,
+    "resume_bit_identical": bool,
+}
+
+
 def _bench_env_config() -> dict:
     """Environment fields stamped into every BENCH_*.json config block so
     the perf trajectory is comparable across jax versions / kernel policies."""
@@ -1143,6 +1158,240 @@ def validate_bench_serve(payload: dict) -> None:
         raise ValueError("hot swap dropped requests (or never ran)")
 
 
+def _tree_bit_equal(a, b) -> bool:
+    import jax
+
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def bench_resilience_json(n: int = 50_000, batch: int = 2_000,
+                          sweeps: int = 5, k: int = 3, f: int = 8,
+                          poison_rate: float = 0.01,
+                          duration: float = 2.0, load: float = 300.0,
+                          out: str = "BENCH_resilience.json") -> dict:
+    """(JSON mode) the fault-tolerance layer under injected faults.
+
+    Three legs, each comparing a clean run against the same run with
+    seeded faults from :class:`repro.resilience.FaultInjector`:
+
+    * **streaming** — the fused ``stream_fit`` scan over a clean stream vs
+      the same stream with ``poison_rate`` of its batches NaN-poisoned.
+      Records inst/s for both (quarantine is a held-state select inside
+      the compiled scan, so the overhead should be noise) and asserts the
+      quarantine bit-identity: the poisoned run's final posterior equals a
+      run that never saw the poisoned batches.
+    * **serving** — ``AsyncPGMServer`` (2 replicas, vmp mode) under
+      Poisson offered load, clean vs a run with one worker crash and one
+      transient plan-compile failure injected mid-stream.  Records
+      achieved qps / p50 / p99 for both, the restart/retry counters, and
+      the zero-loss flag (every accepted ticket resolves; pending == 0).
+    * **checkpoint** — snapshot the full streaming state mid-stream, then
+      time crash recovery: restore from disk + replay the tail, with the
+      bit-identical-resume flag against the uninterrupted run.
+    """
+    import datetime
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import streaming, vmp
+    from repro.core.dag import PlateSpec
+    from repro.data.synthetic import gmm_stream
+    from repro.pgm_models import GaussianMixture
+    from repro.resilience import CheckpointManager, FaultInjector
+    from repro.resilience import checkpoint as rckpt
+    from repro.serve.plan import PlanCache
+    from repro.serve.queue import AsyncPGMServer
+
+    backend = vmp.default_backend()
+    spec = PlateSpec(n_features=f, latent_card=k)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    init = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+    stream, _, _ = gmm_stream(n, k, f, seed=0)
+    batches = list(stream.batches(batch))
+    nb = len(batches)
+    xcs = jnp.stack([b.xc for b in batches])
+    xds = jnp.stack([b.xd for b in batches])
+
+    # -- streaming under NaN poison -------------------------------------------
+    inj = FaultInjector(seed=0)
+    bad, idx = inj.poison_nan(np.asarray(xcs), rate=poison_rate)
+    bad = jnp.asarray(bad)
+
+    def run(x, d):
+        ss = streaming.stream_init(prior, init)
+        ss, _ = streaming.stream_fit(cp, prior, ss, x, d, sweeps=sweeps,
+                                     backend=backend)
+        jax.block_until_ready(ss.post.reg.m)
+        return ss
+
+    run(xcs, xds)                                     # warm the scan
+    t0 = time.perf_counter()
+    clean_state = run(xcs, xds)
+    clean_dt = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    poisoned_state = run(bad, xds)
+    poison_dt = time.perf_counter() - t0
+    keep = np.setdiff1d(np.arange(nb), idx)
+    never_state = run(xcs[keep], xds[keep])
+    bit_identical = _tree_bit_equal(poisoned_state.post, never_state.post)
+    streaming_leg = {
+        "n_batches": nb, "n_poisoned": int(len(idx)),
+        "quarantined": int(poisoned_state.n_quarantined),
+        "clean_inst_per_s": n / clean_dt,
+        "poisoned_inst_per_s": n / poison_dt,
+        "overhead_pct": (poison_dt / clean_dt - 1.0) * 100.0,
+    }
+
+    # -- serving through a crash + compile failure ----------------------------
+    model = GaussianMixture(stream.attributes, n_states=k)
+    model.update_model(stream)
+    xs = np.asarray(stream.collect().xc)
+
+    def serve_leg(faults: bool) -> dict:
+        cache = PlanCache(compile_retries=2, retry_backoff_s=0.01)
+        inj = FaultInjector(seed=1)
+        with AsyncPGMServer(model, mode="vmp", max_batch=32,
+                            max_delay_ms=5.0, default_deadline_ms=60_000,
+                            replicas=2, plan_cache=cache,
+                            supervise_interval_ms=5) as srv:
+            cap = 1                                   # warm pow2 plans
+            while cap <= 64:
+                if faults and cap == 64:
+                    # the last warm compile hits the injected failure and
+                    # must retry — deterministic, and it keeps the compile
+                    # fault out of the measured load window
+                    inj.fail_compiles(cache, n=1)
+                warm = [srv.submit("Z", {f"X{i}": float(xs[j % len(xs), i])
+                                         for i in range(f)})
+                        for j in range(cap)]
+                for t in warm:
+                    t.result(timeout=120)
+                cap *= 2
+            if faults:
+                inj.crash_worker(srv)                 # any worker, mid-load
+            row = _serve_offered_load(srv, xs, load, duration,
+                                      deadline_ms=60_000, seed=2)
+            st = srv.stats()
+        return {
+            "achieved_qps": row["achieved_qps"], "p50_ms": row["p50_ms"],
+            "p99_ms": row["p99_ms"], "n_queries": row["n_queries"],
+            "worker_restarts": st["worker_restarts"],
+            "compile_retries": st["plans"]["retries"], "shed": st["shed"],
+            "lost_tickets": st["pending"],
+        }
+
+    clean_serve = serve_leg(faults=False)
+    faulted_serve = serve_leg(faults=True)
+    zero_loss = (faulted_serve["lost_tickets"] == 0
+                 and faulted_serve["worker_restarts"] >= 1
+                 and faulted_serve["compile_retries"] >= 1)
+
+    # -- checkpoint save / restore / recovery ---------------------------------
+    half = nb // 2
+    with tempfile.TemporaryDirectory() as ckdir:
+        mgr = CheckpointManager(ckdir, every=0, keep=2)
+        head = run(xcs[:half], xds[:half])
+        t0 = time.perf_counter()
+        mgr.save(half, head)
+        save_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        restored, meta = rckpt.load(mgr.latest(),
+                                    streaming.stream_init(prior, init))
+        restore_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        resumed, _ = rckpt.resume_stream_fit(
+            cp, prior, streaming.stream_init(prior, init), xcs, xds,
+            manager=mgr, sweeps=sweeps, backend=backend)
+        recovery_s = time.perf_counter() - t0
+    resume_ok = _tree_bit_equal(resumed, clean_state)
+    checkpoint_leg = {
+        "save_ms": save_ms, "restore_ms": restore_ms,
+        "recovery_s": recovery_s, "resumed_batches": nb - half,
+        "checkpoint_t": int(meta["t"]),
+    }
+
+    payload = {
+        "bench": "resilience",
+        "schema_version": 1,
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "config": {"n": n, "batch": batch, "sweeps": sweeps, "features": f,
+                   "components": k, "poison_rate": poison_rate,
+                   "duration_s": duration, "load_qps": load,
+                   "backend": backend, **_bench_env_config()},
+        "streaming": streaming_leg,
+        "serving": {"clean": clean_serve, "faulted": faulted_serve},
+        "checkpoint": checkpoint_leg,
+        "quarantine_bit_identical": bit_identical,
+        "serve_zero_loss": zero_loss,
+        "resume_bit_identical": resume_ok,
+    }
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {out}: poisoned stream {streaming_leg['poisoned_inst_per_s']:.0f} "
+          f"inst/s vs clean {streaming_leg['clean_inst_per_s']:.0f} "
+          f"({streaming_leg['quarantined']} batches quarantined, "
+          f"bit_identical={bit_identical}); faulted serve "
+          f"{faulted_serve['achieved_qps']:.0f} q/s p99 "
+          f"{faulted_serve['p99_ms']:.1f}ms vs clean "
+          f"{clean_serve['achieved_qps']:.0f} q/s "
+          f"(restarts={faulted_serve['worker_restarts']}, zero_loss="
+          f"{zero_loss}); recovery {checkpoint_leg['recovery_s']:.2f}s "
+          f"resume_bit_identical={resume_ok}")
+    return payload
+
+
+def validate_bench_resilience(payload: dict) -> None:
+    """Schema + invariant gate for BENCH_resilience.json (scripts/ci.sh)."""
+    for key, typ in BENCH_RESILIENCE_SCHEMA.items():
+        if key not in payload:
+            raise ValueError(f"BENCH_resilience.json missing key {key!r}")
+        if typ is float and isinstance(payload[key], int):
+            continue
+        if not isinstance(payload[key], typ):
+            raise ValueError(f"{key!r} must be {typ.__name__}, "
+                             f"got {type(payload[key]).__name__}")
+    for key in ("jax_version", "pallas_policy"):
+        if key not in payload["config"]:
+            raise ValueError(f"config missing {key!r}")
+    s = payload["streaming"]
+    if not (s["clean_inst_per_s"] > 0 and s["poisoned_inst_per_s"] > 0):
+        raise ValueError("streaming throughput must be positive")
+    if s["n_poisoned"] < 1 or s["quarantined"] != s["n_poisoned"]:
+        raise ValueError(f"quarantine miscount: {s['quarantined']} flagged "
+                         f"vs {s['n_poisoned']} poisoned")
+    if payload["quarantine_bit_identical"] is not True:
+        raise ValueError("poisoned-run posterior diverged from the "
+                         "never-poisoned run")
+    for leg in ("clean", "faulted"):
+        r = payload["serving"][leg]
+        if not r["achieved_qps"] > 0:
+            raise ValueError(f"{leg} serving qps must be positive")
+        if r["p99_ms"] < r["p50_ms"]:
+            raise ValueError("p99 below p50 — latency aggregation broken")
+    fr = payload["serving"]["faulted"]
+    if fr["lost_tickets"] != 0:
+        raise ValueError(f"faulted serve lost {fr['lost_tickets']} tickets")
+    if fr["worker_restarts"] < 1 or fr["compile_retries"] < 1:
+        raise ValueError("faults did not fire (no restart / no retry) — "
+                         "the faulted leg measured nothing")
+    if payload["serve_zero_loss"] is not True:
+        raise ValueError("serve_zero_loss flag is false")
+    c = payload["checkpoint"]
+    if not (c["save_ms"] > 0 and c["restore_ms"] > 0
+            and c["recovery_s"] > 0):
+        raise ValueError("checkpoint timings must be positive")
+    if payload["resume_bit_identical"] is not True:
+        raise ValueError("mid-stream resume diverged from the "
+                         "uninterrupted run")
+
+
 def bench_drift():
     """(iv) drift detection latency (batches until flagged)."""
     import jax
@@ -1393,6 +1642,11 @@ def main(argv=None) -> None:
                     help="with --json: drive the async serving tier under "
                          "Poisson offered load (single-device vs mesh "
                          "replicas) and write BENCH_serve.json instead")
+    ap.add_argument("--resilience", action="store_true",
+                    help="with --json: run the fault-injection drivers "
+                         "(NaN-poisoned stream, worker crash + compile "
+                         "failure under load, checkpoint recovery) and "
+                         "write BENCH_resilience.json instead")
     ap.add_argument("--out", default=None)
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--batch", type=int, default=2_000)
@@ -1430,9 +1684,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     if ((args.dvmp or args.latent or args.structure or args.temporal
-         or args.serve) and not args.json):
-        ap.error("--dvmp/--latent/--structure/--temporal/--serve require "
-                 "--json (they write BENCH_*.json)")
+         or args.serve or args.resilience) and not args.json):
+        ap.error("--dvmp/--latent/--structure/--temporal/--serve/"
+                 "--resilience require --json (they write BENCH_*.json)")
 
     from repro.obs.profile import profile
 
@@ -1467,6 +1721,13 @@ def main(argv=None) -> None:
                 deadline_ms=args.deadline_ms,
                 out=args.out or "BENCH_serve.json")
             validate_bench_serve(payload)
+            return
+        if args.json and args.resilience:
+            payload = bench_resilience_json(
+                n=args.n, batch=args.batch, sweeps=args.sweeps,
+                duration=args.serve_duration,
+                out=args.out or "BENCH_resilience.json")
+            validate_bench_resilience(payload)
             return
         if args.json:
             payload = bench_streaming_json(

@@ -28,6 +28,10 @@
 #      over a forced 4-device host: schema validation PLUS the single-device
 #      and mesh-replica drivers, two load points each, and the
 #      hot-swap-zero-drop gate baked into the validator,
+#   4f. the resilience harness (--json --resilience) on tiny sizes: schema
+#      validation PLUS the quarantine bit-identity, serve-zero-loss (worker
+#      crash + compile failure under load) and bit-identical-resume gates
+#      baked into the validator,
 #   5. end-to-end junction-tree queries through the public API: a discrete
 #      2-variable query AND a strong-junction-tree query on a CLG network
 #      with an unobserved continuous INTERNAL node, so both exact-inference
@@ -50,7 +54,15 @@
 #   7c. the serving obs leg: a fresh process drives AsyncPGMServer through
 #      timeout-triggered micro-batch flushes and a mid-stream hot model
 #      swap, then validate_obs_events asserts serve_deadline, serve_swap
-#      and the per-bucket serve_bucket telemetry all validate.
+#      and the per-bucket serve_bucket telemetry all validate,
+#   7d. the chaos leg: a fresh process under REPRO_OBS=trace runs the whole
+#      fault-injection suite in one go — a NaN-poisoned fused stream replay
+#      (held-posterior bit-identity asserted inline), a mid-stream
+#      checkpoint + crash-recovery resume (bit-identity asserted inline),
+#      and an AsyncPGMServer run through load shedding, one worker crash
+#      and one transient plan-compile failure with zero lost tickets —
+#      then validate_obs_events asserts the quarantine, checkpoint,
+#      serve_shed, serve_retry and serve_worker events all validate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -83,10 +95,12 @@ LATENT_OUT="$(mktemp -t bench_latent_smoke.XXXXXX.json)"
 STRUCT_OUT="$(mktemp -t bench_structure_smoke.XXXXXX.json)"
 TEMPORAL_OUT="$(mktemp -t bench_temporal_smoke.XXXXXX.json)"
 SERVE_OUT="$(mktemp -t bench_serve_smoke.XXXXXX.json)"
+RESIL_OUT="$(mktemp -t bench_resilience_smoke.XXXXXX.json)"
 OBS_OUT="$(mktemp -t obs_events_smoke.XXXXXX.jsonl)"
 OBS_TEMPORAL_OUT="$(mktemp -t obs_temporal_smoke.XXXXXX.jsonl)"
 OBS_SERVE_OUT="$(mktemp -t obs_serve_smoke.XXXXXX.jsonl)"
-trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT" "$TEMPORAL_OUT" "$SERVE_OUT" "$OBS_OUT" "$OBS_TEMPORAL_OUT" "$OBS_SERVE_OUT"' EXIT
+OBS_CHAOS_OUT="$(mktemp -t obs_chaos_smoke.XXXXXX.jsonl)"
+trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT" "$TEMPORAL_OUT" "$SERVE_OUT" "$RESIL_OUT" "$OBS_OUT" "$OBS_TEMPORAL_OUT" "$OBS_SERVE_OUT" "$OBS_CHAOS_OUT"' EXIT
 python benchmarks/run.py --json --n 1000 --batch 250 --sweeps 2 \
     --window 2 --out "$BENCH_OUT"
 python - "$BENCH_OUT" <<'EOF'
@@ -180,6 +194,24 @@ print("ci smoke: BENCH_serve schema OK "
       f"({single['achieved_qps']:.0f} q/s, p99 {single['p99_ms']:.1f}ms, "
       f"hit rate {payload['plan_cache_hit_rate']:.2f}, "
       f"zero_drop={payload['hot_swap_zero_drop']})")
+EOF
+
+python benchmarks/run.py --json --resilience --n 4000 --batch 500 \
+    --sweeps 2 --serve-duration 1.0 --out "$RESIL_OUT"
+python - "$RESIL_OUT" <<'EOF'
+import json, sys
+sys.path.insert(0, "benchmarks")
+from run import validate_bench_resilience
+
+with open(sys.argv[1]) as fh:
+    payload = json.load(fh)
+validate_bench_resilience(payload)
+s, f = payload["streaming"], payload["serving"]["faulted"]
+print("ci smoke: BENCH_resilience schema OK "
+      f"({s['quarantined']}/{s['n_batches']} batches quarantined, faulted "
+      f"serve {f['achieved_qps']:.0f} q/s with {f['worker_restarts']} "
+      f"restart(s), zero_loss={payload['serve_zero_loss']}, "
+      f"resume_bit_identical={payload['resume_bit_identical']})")
 EOF
 
 python - <<'EOF'
@@ -382,6 +414,105 @@ need = ("serve_deadline", "serve_swap", "serve_bucket", "serve_flush")
 missing = [ev for ev in need if not counts.get(ev)]
 assert not missing, f"serve obs leg missing: {missing} (got {counts})"
 print(f"ci smoke: serve obs JSONL schema OK ("
+      + ", ".join(f"{k}={counts[k]}" for k in sorted(counts)) + ")")
+EOF
+
+# chaos leg: the fault-injection suite end to end in one fresh process —
+# NaN quarantine (bit-identical to a never-poisoned replay), checkpoint +
+# crash-recovery resume (bit-identical to the uninterrupted run), and a
+# served workload through shedding, a worker crash and a transient compile
+# failure with zero accepted tickets lost.
+REPRO_OBS=trace REPRO_OBS_PATH="$OBS_CHAOS_OUT" python - <<'EOF'
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import streaming, vmp
+from repro.core.dag import PlateSpec
+from repro.data import synthetic as syn
+from repro.resilience import (CheckpointManager, FaultInjector, ShedError,
+                              resume_stream_fit)
+from repro.serve.plan import PlanCache
+from repro.serve.queue import AsyncPGMServer
+
+
+def eq(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# NaN quarantine: poisoned replay == replay that never saw those batches
+stream, _, _ = syn.gmm_stream(2000, 2, 3, seed=0)
+cp = vmp.compile_plate(PlateSpec(n_features=3, latent_card=2))
+prior = vmp.default_prior(cp)
+init = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+batches = list(stream.batches(250))
+xcs = jnp.stack([b.xc for b in batches])
+xds = jnp.stack([b.xd for b in batches])
+inj = FaultInjector(seed=0)
+bad, idx = inj.poison_nan(np.asarray(xcs), rate=0.15)
+sp, _ = streaming.stream_fit(cp, prior, streaming.stream_init(prior, init),
+                             jnp.asarray(bad), xds)       # quarantine events
+keep = np.setdiff1d(np.arange(xcs.shape[0]), idx)
+sc, _ = streaming.stream_fit(cp, prior, streaming.stream_init(prior, init),
+                             xcs[keep], xds[keep])
+assert int(sp.n_quarantined) == len(idx), (sp.n_quarantined, idx)
+assert eq(sp.post, sc.post), "quarantined replay diverged"
+
+# checkpoint + crash-recovery resume, bit-identical to the straight run
+with tempfile.TemporaryDirectory() as ckdir:
+    mgr = CheckpointManager(ckdir, every=0)
+    head, _ = streaming.stream_fit(
+        cp, prior, streaming.stream_init(prior, init), xcs[:4], xds[:4])
+    mgr.save(4, head)                                     # checkpoint event
+    resumed, _ = resume_stream_fit(
+        cp, prior, streaming.stream_init(prior, init), xcs, xds, manager=mgr)
+full, _ = streaming.stream_fit(cp, prior,
+                               streaming.stream_init(prior, init), xcs, xds)
+assert eq(resumed, full), "mid-stream resume diverged"
+
+# serving chaos: bounded queue sheds, the drain crashes one worker (the
+# supervisor respawns it and requeues the bucket) and the plan compile
+# fails once transiently (retried) — every accepted ticket still resolves
+bn = syn.random_discrete_bn(5, card=2, max_parents=2, seed=0)
+names = [v.name for v in bn.order]
+cache = PlanCache(compile_retries=2, retry_backoff_s=0.01)
+inj.fail_compiles(cache, n=1)                             # serve_retry
+srv = AsyncPGMServer(bn, mode="exact", max_batch=16, max_delay_ms=10_000,
+                     default_deadline_ms=60_000, max_queue=2,
+                     plan_cache=cache, supervise_interval_ms=5)
+inj.crash_worker(srv)                                     # serve_worker
+kept = [srv.submit(names[-1], {names[0]: float(k % 2)}) for k in range(2)]
+shed = srv.submit(names[-1], {names[0]: 0.0})             # serve_shed
+try:
+    shed.result()
+    raise SystemExit("over-max_queue submit was not shed")
+except ShedError:
+    pass
+srv.stop()
+st = srv.stats()
+assert st["pending"] == 0, st                             # zero lost tickets
+assert st["worker_restarts"] >= 1 and st["shed"] == 1, st
+assert st["plans"]["retries"] >= 1, st
+for t in kept:
+    assert np.isfinite(np.asarray(t.result())).all()
+print("ci chaos: quarantine bit-identical, resume bit-identical, "
+      f"{st['worker_restarts']} worker restart(s), {st['shed']} shed, "
+      f"{st['plans']['retries']} compile retry(s), zero lost tickets")
+EOF
+python - "$OBS_CHAOS_OUT" <<'EOF'
+import sys
+from repro.obs import validate_obs_events
+
+counts = validate_obs_events(sys.argv[1])
+need = ("quarantine", "checkpoint", "serve_shed", "serve_retry",
+        "serve_worker")
+missing = [ev for ev in need if not counts.get(ev)]
+assert not missing, f"chaos obs leg missing: {missing} (got {counts})"
+print(f"ci smoke: chaos obs JSONL schema OK ("
       + ", ".join(f"{k}={counts[k]}" for k in sorted(counts)) + ")")
 EOF
 

@@ -101,6 +101,7 @@ class StreamState(NamedTuple):
     drift: DriftState
     n_seen: jnp.ndarray
     n_drifts: jnp.ndarray
+    n_quarantined: jnp.ndarray   # batches skipped by the non-finite gate
 
 
 def stream_init(prior: PlateParams, init: PlateParams) -> StreamState:
@@ -108,7 +109,22 @@ def stream_init(prior: PlateParams, init: PlateParams) -> StreamState:
     so the state owns its buffers — :func:`stream_fit` donates them."""
     copy = lambda tree: jax.tree_util.tree_map(jnp.array, tree)
     return StreamState(prior=copy(prior), post=copy(init), drift=drift_init(),
-                       n_seen=jnp.asarray(0.0), n_drifts=jnp.asarray(0))
+                       n_seen=jnp.asarray(0.0), n_drifts=jnp.asarray(0),
+                       n_quarantined=jnp.asarray(0))
+
+
+def tree_finite(tree) -> jnp.ndarray:
+    """Scalar bool: every inexact leaf of ``tree`` is fully finite.
+
+    Pure traced ops (an ``all``-reduce per leaf), so the streaming scans
+    run it in-body as the quarantine health flag at negligible cost next
+    to the VMP sweeps.  Integer/bool leaves are finite by construction and
+    skipped."""
+    ok = jnp.asarray(True)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact):
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(leaf)))
+    return ok
 
 
 def _temper(params: PlateParams, base: PlateParams, rho: float) -> PlateParams:
@@ -165,16 +181,38 @@ def _stream_step(
     # --- streaming VB: VMP sweeps against the chained prior ------------------
     post, e, fit_sweeps = fit_fn(prior, state.post)
 
+    # --- non-finite quarantine ----------------------------------------------
+    # A poisoned batch (NaN/Inf rows, or a fit that diverged) must not
+    # corrupt every subsequent batch through the chained posterior.  Same
+    # static-shape HOLD trick as the fused fits' convergence flag: the
+    # update is computed unconditionally above, then the carried state is
+    # where-selected wholesale — an unhealthy batch is SKIPPED (posterior,
+    # chained prior and Page-Hinkley state all held bit-exactly) and only
+    # counted.  The drift gate's score feeds the PH state, so it is held
+    # too: one NaN score would otherwise poison the detector forever.
+    healthy = jnp.logical_and(jnp.isfinite(score), jnp.isfinite(e))
+    healthy = jnp.logical_and(healthy, tree_finite(post))
+    drifted = jnp.logical_and(drifted, healthy)
+    sel = lambda new, old: jax.tree_util.tree_map(
+        lambda a, b: jnp.where(healthy, a, b), new, old)
+
     new_state = StreamState(
-        prior=post,  # Eq. 3: today's posterior is tomorrow's prior
-        post=post,
-        drift=dstate,
-        n_seen=state.n_seen + n_eff,
+        prior=sel(post, state.prior),  # Eq. 3: posterior -> tomorrow's prior
+        post=sel(post, state.post),
+        drift=sel(dstate, state.drift),
+        n_seen=state.n_seen + jnp.where(healthy, n_eff, 0.0),
         n_drifts=state.n_drifts + drifted.astype(jnp.int32),
+        n_quarantined=state.n_quarantined
+        + jnp.logical_not(healthy).astype(jnp.int32),
     )
+    zero = jnp.asarray(0.0)
     metrics = StreamBatchMetrics(
-        elbo=e, score=score, ph=ph, drifted=drifted, n_eff=n_eff,
+        elbo=jnp.where(healthy, e, zero),
+        score=jnp.where(healthy, score, zero),
+        ph=jnp.where(healthy, ph, zero),
+        drifted=drifted, n_eff=n_eff,
         rho=jnp.where(drifted, forget, 1.0), sweeps=fit_sweeps,
+        quarantined=jnp.logical_not(healthy),
     )
     return new_state, metrics.as_info()
 
@@ -287,13 +325,15 @@ def stream_fit(
     ``window=None`` keeps the whole stream in one scan (fastest, largest
     footprint).  The tail window may retrace once if ``T % w != 0``.
 
-    Returns the final state and per-batch info arrays
-    ``{"elbo", "score", "ph", "drifted", "n_eff", "rho", "sweeps"}`` each
-    of leading dim T (the :class:`StreamBatchMetrics` columns; ``drifted``
-    is the per-batch drift-event mask).  When obs is enabled
+    Returns the final state and per-batch info arrays ``{"elbo", "score",
+    "ph", "drifted", "n_eff", "rho", "sweeps", "quarantined"}`` each of
+    leading dim T (the :class:`StreamBatchMetrics` columns; ``drifted`` is
+    the per-batch drift-event mask, ``quarantined`` marks non-finite
+    batches skipped with the carried posterior held).  When obs is enabled
     (``REPRO_OBS``) the same columns are emitted host-side as
-    ``stream_batch``/``drift`` JSONL events AFTER the scan returns — the
-    fused device program is byte-identical at every obs level.
+    ``stream_batch``/``drift``/``quarantine`` JSONL events AFTER the scan
+    returns — the fused device program is byte-identical at every obs
+    level.
     """
     # state is donated, but its leaves routinely alias each other and the
     # other operands (stream_init reuses the prior's buffers for state.prior

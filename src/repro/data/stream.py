@@ -48,18 +48,26 @@ class DataStream:
         attributes: Sequence[Attribute],
         source: Callable[[], Iterator[Tuple[np.ndarray, np.ndarray]]],
         n_instances: Optional[int] = None,
+        validate: bool = False,
     ) -> None:
         self.attributes = list(attributes)
         self._source = source
         self.n_instances = n_instances
         self.cont_idx = [i for i, a in enumerate(self.attributes) if a.kind == REAL]
         self.disc_idx = [i for i, a in enumerate(self.attributes) if a.kind == FINITE]
+        # validate=True screens every chunk: schema violations (wrong column
+        # count) raise; non-finite xc rows and out-of-range xd rows are
+        # QUARANTINED (dropped + counted) before they reach a learner
+        self.validate = validate
+        self.quarantined = 0                       # rows dropped, total
+        self.chunk_quarantine: List[int] = []      # rows dropped per chunk
 
     # -- constructors ---------------------------------------------------------
 
     @staticmethod
     def from_arrays(attributes: Sequence[Attribute], xc: np.ndarray,
-                    xd: Optional[np.ndarray] = None) -> "DataStream":
+                    xd: Optional[np.ndarray] = None,
+                    validate: bool = False) -> "DataStream":
         xc = np.asarray(xc, np.float32)
         if xd is None:
             xd = np.zeros((xc.shape[0], 0), np.int32)
@@ -68,7 +76,8 @@ class DataStream:
         def src():
             yield xc, xd
 
-        return DataStream(attributes, src, n_instances=xc.shape[0])
+        return DataStream(attributes, src, n_instances=xc.shape[0],
+                          validate=validate)
 
     @staticmethod
     def concat(streams: Sequence["DataStream"]) -> "DataStream":
@@ -94,11 +103,50 @@ class DataStream:
 
     # -- iteration --------------------------------------------------------------
 
+    def _validate_chunk(self, ci: int, xc: np.ndarray, xd: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Schema-check one chunk; drop non-finite / out-of-range rows.
+
+        A wrong column count is a programming error and raises; bad DATA
+        (NaN/Inf in xc, out-of-range categories in xd) is quarantined
+        row-wise — the return is ``(clean_xc, clean_xd, n_dropped)``."""
+        xc = np.asarray(xc)
+        xd = np.asarray(xd)
+        F, Fd = len(self.cont_idx), len(self.disc_idx)
+        if xc.ndim != 2 or xc.shape[1] != F:
+            raise ValueError(f"chunk {ci}: xc shape {xc.shape} does not "
+                             f"match schema ({F} REAL attributes)")
+        if xd.ndim != 2 or xd.shape[1] != Fd:
+            raise ValueError(f"chunk {ci}: xd shape {xd.shape} does not "
+                             f"match schema ({Fd} FINITE_SET attributes)")
+        ok = np.isfinite(xc).all(axis=1) if F else np.ones(len(xc), bool)
+        for j, i in enumerate(self.disc_idx):
+            card = self.attributes[i].card
+            ok &= (xd[:, j] >= 0) & (xd[:, j] < card)
+        dropped = int((~ok).sum())
+        return xc[ok], xd[ok], dropped
+
+    def _iter(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Every consumer path (chunks/batches/collect) routes through
+        here so ``validate=`` screens them uniformly."""
+        if not self.validate:
+            yield from self._source()
+            return
+        from repro.obs import sink as obs
+        for ci, (xc, xd) in enumerate(self._source()):
+            xc, xd, dropped = self._validate_chunk(ci, xc, xd)
+            self.quarantined += dropped
+            self.chunk_quarantine.append(dropped)
+            if dropped and obs.enabled():
+                obs.emit("quarantine", t=ci, site="data", dropped=dropped)
+            yield xc, xd
+
     def chunks(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
         """The stream's native (xc, xd) chunks, as the source yields them —
         the batching ``Model.update_model`` routes through the streaming
-        drivers.  One pass over the source; no re-batching or padding."""
-        yield from self._source()
+        drivers.  One pass over the source; no re-batching or padding.
+        With ``validate=True`` each chunk is screened first."""
+        yield from self._iter()
 
     def batches(self, batch_size: int) -> Iterator[Batch]:
         """Fixed-shape batches; the ragged tail is zero-padded and masked."""
@@ -106,7 +154,7 @@ class DataStream:
         buf_d: List[np.ndarray] = []
         have = 0
         F, Fd = len(self.cont_idx), len(self.disc_idx)
-        for xc, xd in self._source():
+        for xc, xd in self._iter():
             buf_c.append(xc); buf_d.append(xd); have += xc.shape[0]
             while have >= batch_size:
                 cc = np.concatenate(buf_c) if len(buf_c) > 1 else buf_c[0]
@@ -136,7 +184,7 @@ class DataStream:
 
     def collect(self, limit: Optional[int] = None) -> Batch:
         cs, ds, n = [], [], 0
-        for xc, xd in self._source():
+        for xc, xd in self._iter():
             cs.append(xc); ds.append(xd); n += xc.shape[0]
             if limit and n >= limit:
                 break

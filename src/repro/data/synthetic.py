@@ -9,6 +9,31 @@ import numpy as np
 from repro.data.stream import Attribute, DataStream, DynamicDataStream, REAL, FINITE
 
 
+def poison_stream(stream: DataStream, rate: float, seed: int = 0
+                  ) -> DataStream:
+    """Wrap ``stream`` with seeded NaN corruption: each row of each chunk
+    independently goes fully-NaN with probability ``rate``.
+
+    The chaos-test / bench counterpart of ``DataStream(validate=True)``
+    and the streaming scans' non-finite quarantine — feed a poisoned
+    stream through either and the dropped/skipped counts must match the
+    injected corruption.  Deterministic per (stream, rate, seed)."""
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"rate must be in [0, 1], got {rate}")
+    rng = np.random.default_rng(seed)
+
+    def src():
+        for xc, xd in stream.chunks():
+            xc = np.array(xc, np.float32)
+            if xc.shape[1]:
+                rows = rng.random(xc.shape[0]) < rate
+                xc[rows] = np.nan
+            yield xc, np.asarray(xd)
+
+    return DataStream(stream.attributes, src,
+                      n_instances=stream.n_instances)
+
+
 def gmm_stream(n: int, k: int, f: int, seed: int = 0, sep: float = 4.0,
                noise: float = 0.7) -> Tuple[DataStream, np.ndarray, np.ndarray]:
     """K-component diagonal GMM; returns (stream, true_means, labels)."""

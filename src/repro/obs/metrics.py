@@ -27,6 +27,7 @@ class StreamBatchMetrics(NamedTuple):
     n_eff: Any     # effective instance count (mask sum)
     rho: Any       # prior tempering factor applied (1.0 = no temper)
     sweeps: Any    # VMP sweeps-to-convergence for the batch fit
+    quarantined: Any  # bool: non-finite batch skipped, carried posterior held
 
     def as_info(self) -> Dict[str, Any]:
         """The dict view that ``stream_fit``/``stream_update`` return

@@ -60,6 +60,10 @@ EVENT_SCHEMA: Dict[str, Tuple[str, ...]] = {
                      "sweeps"),
     # Page-Hinkley drift firing (subset of stream_batch rows where drifted)
     "drift": ("t", "ph", "score"),
+    # non-finite batch (or poisoned input rows) skipped with the carried
+    # posterior held — the streaming scans' health gate and the DataStream
+    # ``validate=`` row filter both emit these
+    "quarantine": ("t",),
     # host-side latency span (trace level only)
     "span": ("name", "dur_us", "span_id"),
     # PGMQueryEngine.flush summary
@@ -79,6 +83,14 @@ EVENT_SCHEMA: Dict[str, Tuple[str, ...]] = {
     # hot model swap: new network version published without dropping traffic
     "serve_swap": ("old_version", "new_version", "warmed_plans", "drained",
                    "dur_us"),
+    # load shedding: a submit over the bounded-queue capacity was rejected
+    "serve_shed": ("mode", "queue_depth", "max_queue"),
+    # transient plan-compile failure retried with backoff (serve/plan.py)
+    "serve_retry": ("attempt", "error"),
+    # worker-replica supervision: dead worker respawned, bucket requeued
+    "serve_worker": ("worker", "action", "requeued"),
+    # streaming-state snapshot written (resilience/checkpoint.py)
+    "checkpoint": ("t", "path", "reason"),
     # kernel-backend dispatch counter snapshot
     "kernel_dispatch": ("counts",),
     # registry estimator output (e.g. analytical HLO FLOP/byte model)
@@ -221,13 +233,16 @@ def emit_stream_events(info: Dict[str, Any]) -> None:
 
     cols = {k: np.atleast_1d(np.asarray(info[k]))
             for k in ("elbo", "score", "ph", "drifted", "n_eff", "rho",
-                      "sweeps") if k in info}
+                      "sweeps", "quarantined") if k in info}
     T = max((v.shape[0] for v in cols.values()), default=0)
     for t in range(T):
         row = {k: v[t].item() for k, v in cols.items()}
         emit("stream_batch", t=t, **row)
         if row.get("drifted"):
             emit("drift", t=t, ph=row.get("ph"), score=row.get("score"))
+        if row.get("quarantined"):
+            emit("quarantine", t=t, site="stream", score=row.get("score"),
+                 elbo=row.get("elbo"))
 
 
 # ---------------------------------------------------------------------------

@@ -512,34 +512,50 @@ def _temper_hmm(params: HMMPosterior, base: HMMPosterior,
          donate_argnums=(0,))
 def _seq_stream_scan(state, base_prior, ds, ys, masks, *, sweeps, tol,
                      drift_threshold, forget, backend):
-    from repro.core.streaming import drift_gate
+    from repro.core.streaming import drift_gate, tree_finite
 
     _bump_trace("seq_stream_fit")
 
     def step(carry, inp):
         d, y, mask = inp
-        prior, post, dstate, n_drifts = carry
+        prior0, post0, dstate0, n_drifts, n_quar = carry
         n_eff = mask.sum()
         # score the batch under the CURRENT posterior (per-frame loglik)
-        _, _, logZ = _hmm_estep(post, d, y, mask)
+        _, _, logZ = _hmm_estep(post0, d, y, mask)
         score = logZ.sum() / jnp.maximum(n_eff, 1.0)
         prior, dstate, ph, drifted = drift_gate(
-            dstate, score, prior, _temper_hmm(prior, base_prior, forget),
+            dstate0, score, prior0, _temper_hmm(prior0, base_prior, forget),
             drift_threshold=drift_threshold)
         post, last, fmetrics = _hmm_fit_core(
-            prior, post, d, y, mask, sweeps, tol, backend)
+            prior, post0, d, y, mask, sweeps, tol, backend)
+        # non-finite quarantine: a poisoned batch holds the carried
+        # posterior/prior AND the PH state (a NaN score would corrupt the
+        # detector) — same static-shape HOLD trick as the sweep scans.
+        healthy = jnp.logical_and(jnp.isfinite(score), jnp.isfinite(last))
+        healthy = jnp.logical_and(healthy, tree_finite(post))
+        drifted = jnp.logical_and(drifted, healthy)
+        sel = lambda new, old: jax.tree_util.tree_map(
+            lambda a, b: jnp.where(healthy, a, b), new, old)
+        zero = jnp.asarray(0.0)
         metrics = StreamBatchMetrics(
-            elbo=last, score=score, ph=ph, drifted=drifted, n_eff=n_eff,
+            elbo=jnp.where(healthy, last, zero),
+            score=jnp.where(healthy, score, zero),
+            ph=jnp.where(healthy, ph, zero),
+            drifted=drifted, n_eff=n_eff,
             rho=jnp.where(drifted, forget, 1.0),
             sweeps=fmetrics.active.sum(),
+            quarantined=jnp.logical_not(healthy),
         )
-        carry = (post, post, dstate,    # Eq. 3: posterior becomes the prior
-                 n_drifts + drifted.astype(jnp.int32))
+        carry = (sel(post, prior0),     # Eq. 3: posterior becomes the prior
+                 sel(post, post0), sel(dstate, dstate0),
+                 n_drifts + drifted.astype(jnp.int32),
+                 n_quar + jnp.logical_not(healthy).astype(jnp.int32))
         return carry, metrics.as_info()
 
-    (prior, post, dstate, n_drifts), info = jax.lax.scan(
-        step, state + (jnp.asarray(0, jnp.int32),), (ds, ys, masks))
-    return (prior, post, dstate, n_drifts), info
+    (prior, post, dstate, n_drifts, n_quar), info = jax.lax.scan(
+        step, state + (jnp.asarray(0, jnp.int32),
+                       jnp.asarray(0, jnp.int32)), (ds, ys, masks))
+    return (prior, post, dstate, n_drifts, n_quar), info
 
 
 def seq_stream_fit(model, batches, *, sweeps: int = 10, tol: float = 1e-5,
@@ -567,12 +583,13 @@ def seq_stream_fit(model, batches, *, sweeps: int = 10, tol: float = 1e-5,
     masks = jnp.stack([b.mask for b in batches])
     from repro.core.streaming import drift_init
     state = _strong((model._chained_prior, model.posterior, drift_init()))
-    (prior, post, _, n_drifts), info = _seq_stream_scan(
+    (prior, post, _, n_drifts, n_quar), info = _seq_stream_scan(
         state, _strong(model.prior), ds, ys, masks, sweeps=sweeps, tol=tol,
         drift_threshold=drift_threshold, forget=forget, backend=backend)
     model.posterior = post
     model._chained_prior = post
     model.n_drifts = int(n_drifts)
+    model.n_quarantined = int(n_quar)
     if obs_sink.enabled():
         obs_sink.emit_stream_events(info)
         obs_sink.emit_kernel_counts(site="seq_stream_fit")

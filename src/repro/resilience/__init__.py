@@ -1,0 +1,43 @@
+"""Fault tolerance for streaming & serving — the layer the paper outsources.
+
+AMIDST leans on Flink/Spark precisely because those runtimes supply fault
+tolerance the toolbox itself lacks; a self-hosted jax_pallas deployment has
+to carry its own.  Three concerns, one package:
+
+* **Non-finite quarantine** — the streaming scan bodies
+  (``core.streaming._stream_step``, ``pgm_models.dynamic._seq_stream_scan``)
+  gate every Bayesian update on a jit-safe health flag: a batch whose
+  E-step produces non-finite ELBO/posteriors is skipped with the carried
+  posterior held bit-exactly, counted, and surfaced as an obs
+  ``quarantine`` event — instead of poisoning every subsequent batch
+  through the chained prior (Eq. 3).
+
+* **Posterior checkpoint/restore** (:mod:`repro.resilience.checkpoint`) —
+  periodic snapshots of the full streaming state; resume-mid-stream is
+  bit-identical to the uninterrupted run.
+
+* **Fault injection** (:mod:`repro.resilience.faultinject`) — seeded,
+  deterministic injectors (NaN batches, worker crash, compile failure,
+  slow flush) that drive the chaos tests and the CI chaos leg.
+
+The serving tier's robustness knobs (bounded queue with shedding,
+per-request timeout, worker supervision, compile retry) live in
+``repro.serve`` but speak this package's typed error vocabulary
+(:mod:`repro.resilience.errors`).
+"""
+
+from repro.resilience.errors import (  # noqa: F401
+    DeadlineError,
+    ResilienceError,
+    ShedError,
+    TransientCompileError,
+    WorkerCrashError,
+)
+from repro.resilience.checkpoint import (  # noqa: F401
+    CheckpointManager,
+    checkpointed_stream_fit,
+    load,
+    resume_stream_fit,
+    save,
+)
+from repro.resilience.faultinject import FaultInjector  # noqa: F401

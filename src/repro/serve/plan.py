@@ -36,6 +36,8 @@ import time
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro import obs
+
 
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
@@ -93,15 +95,24 @@ class PlanCache:
     used programs instead of growing without bound.
     """
 
-    def __init__(self, max_plans: int = 128) -> None:
+    def __init__(self, max_plans: int = 128, *, compile_retries: int = 0,
+                 retry_backoff_s: float = 0.05) -> None:
         if max_plans < 1:
             raise ValueError("max_plans must be >= 1")
+        if compile_retries < 0:
+            raise ValueError("compile_retries must be >= 0")
         self.max_plans = max_plans
+        self.compile_retries = compile_retries
+        self.retry_backoff_s = retry_backoff_s
+        # fault injection / test seam: called with the PlanKey before each
+        # build attempt; raising simulates a transient compile failure
+        self.fault_hook: Optional[Callable[[PlanKey], None]] = None
         self._plans: "OrderedDict[PlanKey, CompiledPlan]" = OrderedDict()
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.retries = 0
 
     # -- core API ------------------------------------------------------------
 
@@ -133,9 +144,28 @@ class PlanCache:
                 return None
         # compile OUTSIDE the lock: tracing/lowering can take seconds and
         # concurrent readers must not block on it.  A racing second build
-        # of the same key loses and is discarded below.
-        t0 = time.perf_counter_ns()
-        fn = build()
+        # of the same key loses and is discarded below.  Transient build
+        # failures are retried with exponential backoff up to
+        # ``compile_retries`` times; an exhausted budget re-raises and
+        # leaves NO cache entry, so the next get() retries cleanly.
+        attempt = 0
+        while True:
+            t0 = time.perf_counter_ns()
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(key)
+                fn = build()
+                break
+            except Exception as e:
+                attempt += 1
+                if attempt > self.compile_retries:
+                    raise
+                with self._lock:
+                    self.retries += 1
+                if obs.enabled():
+                    obs.emit("serve_retry", attempt=attempt,
+                             error=type(e).__name__)
+                time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
         compile_us = (time.perf_counter_ns() - t0) / 1e3
         plan = CompiledPlan(key, fn, compile_us)
         with self._lock:
@@ -172,8 +202,8 @@ class PlanCache:
         with self._lock:
             total = self.hits + self.misses
             return {"hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions, "size": len(self._plans),
-                    "max_plans": self.max_plans,
+                    "evictions": self.evictions, "retries": self.retries,
+                    "size": len(self._plans), "max_plans": self.max_plans,
                     "hit_rate": (self.hits / total) if total else 0.0}
 
     def __len__(self) -> int:

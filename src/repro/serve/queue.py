@@ -24,9 +24,19 @@ batch engine (ROADMAP "production serving tier"):
   dropped; results issued before the switch come from the old network,
   after it from the new.
 
+* **Robustness** (``repro.resilience`` error vocabulary) — ``max_queue=``
+  bounds the submit queue with load shedding (rejected tickets carry a
+  :class:`~repro.resilience.errors.ShedError`), ``request_timeout_ms=``
+  arms a watchdog that fails stuck requests with a
+  :class:`~repro.resilience.errors.DeadlineError` instead of hanging the
+  caller, and a supervisor thread detects dead worker replicas, requeues
+  their in-flight bucket and respawns them — zero lost accepted tickets.
+
 Flush decisions emit ``serve_deadline`` events and swaps emit
-``serve_swap`` (schema-validated, ``repro.obs``); the per-bucket
-``serve_bucket`` telemetry comes from the underlying engine unchanged.
+``serve_swap`` (schema-validated, ``repro.obs``); sheds, respawns and
+retries emit ``serve_shed``/``serve_worker``/``serve_retry``; the
+per-bucket ``serve_bucket`` telemetry comes from the underlying engine
+unchanged.
 """
 
 from __future__ import annotations
@@ -38,6 +48,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro import obs
+from repro.resilience.errors import DeadlineError, ShedError
 from repro.serve.engine import PGMQueryEngine, PGMQuery
 from repro.serve.plan import PlanCache
 
@@ -50,7 +61,7 @@ class ServeTicket:
     """
 
     __slots__ = ("rid", "deadline_s", "submitted_s", "done_s", "query",
-                 "error", "deadline_miss", "trigger", "_event")
+                 "error", "deadline_miss", "trigger", "_event", "_lock")
 
     def __init__(self, rid: int, deadline_s: float, submitted_s: float):
         self.rid = rid
@@ -62,9 +73,28 @@ class ServeTicket:
         self.deadline_miss = False
         self.trigger: Optional[str] = None  # what flushed the batch
         self._event = threading.Event()
+        self._lock = threading.Lock()
 
     def done(self) -> bool:
         return self._event.is_set()
+
+    def _finish(self, *, query: Optional[PGMQuery] = None,
+                error: Optional[BaseException] = None,
+                trigger: Optional[str] = None, deadline_miss: bool = False,
+                done_s: Optional[float] = None) -> bool:
+        """First completion wins — the flush path and the timeout watchdog
+        can race to finish the same ticket; the loser is a no-op so a
+        result already observed by the caller is never mutated."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self.query = query
+            self.error = error
+            self.trigger = trigger
+            self.deadline_miss = deadline_miss
+            self.done_s = done_s
+            self._event.set()
+            return True
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         """Posterior table for the query (blocks until flushed)."""
@@ -74,6 +104,31 @@ class ServeTicket:
         if self.error is not None:
             raise self.error
         return self.query.result
+
+
+class SwapHandle:
+    """Returned by ``swap_model(block=False)``: readiness event + outcome.
+
+    ``wait()`` blocks until the background swap publishes (returning the
+    summary dict) or fails (re-raising the warm-compile error — in which
+    case the OLD engines are still serving, untouched)."""
+
+    __slots__ = ("ready", "info", "error")
+
+    def __init__(self) -> None:
+        self.ready = threading.Event()
+        self.info: Optional[Dict[str, Any]] = None
+        self.error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self.ready.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> Dict[str, Any]:
+        if not self.ready.wait(timeout):
+            raise TimeoutError(f"model swap not ready within {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.info
 
 
 class _Bucket:
@@ -106,6 +161,16 @@ class AsyncPGMServer:
                      elapsed
     replicas         worker threads x engine replicas (shared plan cache)
     mesh, data_axes  vmp mode only: data-shard each bucket across the mesh
+    max_queue        bound on pending (submitted - completed) requests:
+                     a submit over capacity is SHED — its ticket returns
+                     immediately carrying a ``ShedError`` (None = unbounded)
+    request_timeout_ms
+                     watchdog grace past the request deadline: a ticket
+                     still unanswered ``deadline + timeout`` after submit
+                     fails with ``DeadlineError`` instead of hanging its
+                     caller behind a stuck flush (None = no watchdog)
+    supervise        run the supervisor thread (worker liveness + request
+                     timeouts); on by default
     """
 
     def __init__(self, bn, *, mode: str = "exact", max_batch: int = 32,
@@ -114,14 +179,23 @@ class AsyncPGMServer:
                  use_pallas: Optional[bool] = None, mesh=None,
                  data_axes: Tuple[str, ...] = ("data",),
                  plan_cache: Optional[PlanCache] = None,
-                 n_samples: int = 10_000, seed: int = 0) -> None:
+                 n_samples: int = 10_000, seed: int = 0,
+                 max_queue: Optional[int] = None,
+                 request_timeout_ms: Optional[float] = None,
+                 supervise: bool = True,
+                 supervise_interval_ms: float = 10.0) -> None:
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
         self.mode = mode
         self.max_batch = max_batch
         self.max_delay_s = max_delay_ms / 1e3
         self.default_deadline_s = default_deadline_ms / 1e3
         self.margin_s = deadline_margin_ms / 1e3
+        self.max_queue = max_queue
+        self.request_timeout_s = (None if request_timeout_ms is None
+                                  else request_timeout_ms / 1e3)
         self._mk = dict(mode=mode, use_pallas=use_pallas, mesh=mesh,
                         data_axes=data_axes, n_samples=n_samples, seed=seed)
         self.plans = plan_cache if plan_cache is not None else PlanCache()
@@ -137,13 +211,31 @@ class AsyncPGMServer:
         self.submitted = 0
         self.completed = 0
         self.deadline_misses = 0
+        self.shed = 0
+        self.worker_restarts = 0
         self.flushes: Dict[str, int] = {}
+        # fault-injection seam: called (widx, bucket) after a worker pops a
+        # bucket and before it flushes; raising kills the worker mid-flight
+        self._flush_hook = None
+        # bucket each worker is currently flushing — the supervisor requeues
+        # it if the worker dies before clearing its slot
+        self._inflight: Dict[int, Optional[_Bucket]] = {
+            i: None for i in range(replicas)}
+        self._swap_lock = threading.Lock()
         self._workers = [
             threading.Thread(target=self._worker_loop, args=(i,), daemon=True,
                              name=f"serve-worker-{i}")
             for i in range(replicas)]
         for w in self._workers:
             w.start()
+        self._sup_stop = threading.Event()
+        self._sup_interval_s = supervise_interval_ms / 1e3
+        self._supervisor: Optional[threading.Thread] = None
+        if supervise:
+            self._supervisor = threading.Thread(
+                target=self._supervisor_loop, daemon=True,
+                name="serve-supervisor")
+            self._supervisor.start()
 
     def _make_engine(self, bn, version: int) -> PGMQueryEngine:
         eng = PGMQueryEngine(bn, plan_cache=self.plans,
@@ -158,30 +250,53 @@ class AsyncPGMServer:
     def submit(self, target: str, evidence: Dict[str, float],
                payload: Optional[np.ndarray] = None,
                deadline_ms: Optional[float] = None) -> ServeTicket:
-        """Enqueue one query; returns immediately with a ticket."""
+        """Enqueue one query; returns immediately with a ticket.
+
+        Over ``max_queue`` pending requests the submit is SHED: the
+        returned ticket is already finished with a ``ShedError`` (the
+        request was never accepted — retry after backoff is safe)."""
         eng = self._engines[0]
         ev, _ = eng._validate(target, evidence, payload)  # raise HERE, async
         key = eng.bucket_key(ev)
         now = time.monotonic()
         ddl = now + (self.default_deadline_s if deadline_ms is None
                      else deadline_ms / 1e3)
+        depth = None
         with self._cv:
             if self._stop:
                 raise RuntimeError("server is stopped")
             t = ServeTicket(self._next_rid, ddl, now)
             self._next_rid += 1
-            b = self._buckets.get(key)
-            if b is None:
-                b = self._buckets[key] = _Bucket(key, now)
-            b.items.append((t, target, dict(evidence),
-                            None if payload is None else np.asarray(payload)))
-            b.min_deadline_s = min(b.min_deadline_s, ddl)
-            self._samples.setdefault(
-                key, (target, dict(evidence),
-                      None if payload is None else np.asarray(payload)))
-            self.submitted += 1
-            self._cv.notify_all()
+            if (self.max_queue is not None
+                    and self.submitted - self.completed >= self.max_queue):
+                depth = self.submitted - self.completed
+                self.shed += 1
+                t._finish(error=ShedError(
+                    f"queue at capacity ({depth}/{self.max_queue} pending)"),
+                    trigger="shed", done_s=now)
+            else:
+                self._enqueue_locked(t, key, target, evidence, payload,
+                                     ddl, now)
+        if depth is not None and obs.enabled():
+            obs.emit("serve_shed", mode=self.mode, queue_depth=depth,
+                     max_queue=self.max_queue)
         return t
+
+    def _enqueue_locked(self, t: ServeTicket, key: tuple, target: str,
+                        evidence: Dict[str, float],
+                        payload: Optional[np.ndarray], ddl: float,
+                        now: float) -> None:
+        b = self._buckets.get(key)
+        if b is None:
+            b = self._buckets[key] = _Bucket(key, now)
+        b.items.append((t, target, dict(evidence),
+                        None if payload is None else np.asarray(payload)))
+        b.min_deadline_s = min(b.min_deadline_s, ddl)
+        self._samples.setdefault(
+            key, (target, dict(evidence),
+                  None if payload is None else np.asarray(payload)))
+        self.submitted += 1
+        self._cv.notify_all()
 
     # -- flush scheduling -----------------------------------------------------
 
@@ -218,6 +333,9 @@ class AsyncPGMServer:
                     item = self._pop_due_locked(now)
                     if item is not None:
                         engines = self._engines
+                        # registered BEFORE flush: if this thread dies the
+                        # supervisor requeues the bucket from here
+                        self._inflight[widx] = item[0]
                         break
                     nxt = min((self._due_time(b)
                                for b in self._buckets.values()),
@@ -225,7 +343,14 @@ class AsyncPGMServer:
                     self._cv.wait(None if nxt is None
                                   else max(1e-4, nxt - now))
             bucket, trigger = item
+            hook = self._flush_hook
+            if hook is not None:
+                # fault injection: a raise here kills the worker with the
+                # bucket still registered in-flight (supervised recovery)
+                hook(widx, bucket)
             self._flush_bucket(engines[widx % len(engines)], bucket, trigger)
+            with self._cv:
+                self._inflight[widx] = None
 
     def _flush_bucket(self, eng: PGMQueryEngine, bucket: _Bucket,
                       trigger: str) -> None:
@@ -242,23 +367,21 @@ class AsyncPGMServer:
             err = e
         done_s = time.monotonic()
         miss = 0
+        finished = 0
         for t, q in pairs:
-            t.query = q
-            t.trigger = trigger
-            t.error = err
-            t.done_s = done_s
-            if done_s > t.deadline_s:
-                t.deadline_miss = True
-                miss += 1
-            t._event.set()
+            late = done_s > t.deadline_s
+            if t._finish(query=q, error=err, trigger=trigger, done_s=done_s,
+                         deadline_miss=late):
+                finished += 1
+                miss += late
+            # else: the timeout watchdog already failed this ticket
         if err is not None:                 # tickets created before the error
             for t, *_rest in bucket.items[len(pairs):]:
-                t.error = err
-                t.trigger = trigger
-                t.done_s = done_s
-                t._event.set()
+                if t._finish(error=err, trigger=trigger, done_s=done_s,
+                             deadline_miss=done_s > t.deadline_s):
+                    finished += 1
         with self._cv:
-            self.completed += len(bucket.items)
+            self.completed += finished
             self.deadline_misses += miss
             self.flushes[trigger] = self.flushes.get(trigger, 0) + 1
         if obs.enabled():
@@ -266,58 +389,165 @@ class AsyncPGMServer:
                      schema=",".join(bucket.key), batch=len(bucket.items),
                      trigger=trigger, wait_us=wait_us, deadline_miss=miss)
 
+    # -- supervision ----------------------------------------------------------
+
+    def _check_workers_locked(self) -> List[Tuple[int, int, threading.Thread]]:
+        """Detect dead worker threads: requeue each one's in-flight bucket
+        (merging into any bucket that re-formed under the same key) and
+        stage a replacement thread.  Caller holds ``_cv``; the staged
+        threads must be started OUTSIDE the lock."""
+        staged = []
+        for widx, w in enumerate(self._workers):
+            if w.is_alive():
+                continue
+            b = self._inflight.get(widx)
+            if b is None and self._stop:
+                continue                    # normal shutdown exit
+            requeued = 0
+            if b is not None:
+                self._inflight[widx] = None
+                live = self._buckets.get(b.key)
+                if live is None:
+                    self._buckets[b.key] = b
+                else:
+                    live.items.extend(b.items)
+                    live.first_s = min(live.first_s, b.first_s)
+                    live.min_deadline_s = min(live.min_deadline_s,
+                                              b.min_deadline_s)
+                requeued = len(b.items)
+            nw = threading.Thread(target=self._worker_loop, args=(widx,),
+                                  daemon=True, name=f"serve-worker-{widx}")
+            self._workers[widx] = nw
+            self.worker_restarts += 1
+            staged.append((widx, requeued, nw))
+        if staged:
+            self._cv.notify_all()
+        return staged
+
+    def _expired_tickets_locked(self, now: float) -> List[ServeTicket]:
+        """Tickets past deadline + request timeout, queued or in-flight."""
+        if self.request_timeout_s is None:
+            return []
+        buckets = list(self._buckets.values())
+        buckets += [b for b in self._inflight.values() if b is not None]
+        return [t for b in buckets for t, *_ in b.items
+                if not t.done() and now > t.deadline_s + self.request_timeout_s]
+
+    def _supervise_once(self) -> None:
+        now = time.monotonic()
+        with self._cv:
+            staged = self._check_workers_locked()
+            expired = self._expired_tickets_locked(now)
+        for widx, requeued, nw in staged:
+            nw.start()
+            if obs.enabled():
+                obs.emit("serve_worker", worker=widx, action="respawn",
+                         requeued=requeued)
+        timed_out = 0
+        for t in expired:
+            if t._finish(error=DeadlineError(
+                    f"request {t.rid} timed out "
+                    f"({self.request_timeout_s * 1e3:.0f}ms past deadline)"),
+                    trigger="watchdog", done_s=now, deadline_miss=True):
+                timed_out += 1
+        if timed_out:
+            with self._cv:
+                self.completed += timed_out
+                self.deadline_misses += timed_out
+
+    def _supervisor_loop(self) -> None:
+        while not self._sup_stop.wait(self._sup_interval_s):
+            self._supervise_once()
+
     # -- hot model swap -------------------------------------------------------
 
-    def swap_model(self, bn, *, warm: bool = True) -> Dict[str, Any]:
+    def swap_model(self, bn, *, warm: bool = True, block: bool = True):
         """Publish ``bn`` as a new network version without dropping traffic.
 
         1. Build new-version engine replicas and (``warm=True``) compile
-           their plans in the background by mirroring the OLD version's
-           plan working set: for each old plan, the recorded sample
-           request of its bucket is replayed at the plan's batch capacity
-           — serving continues on the old engines throughout.
+           their plans by mirroring the OLD version's plan working set:
+           for each old plan, the recorded sample request of its bucket is
+           replayed at the plan's batch capacity — serving continues on
+           the old engines throughout.
         2. Atomically switch the engine list: submissions from here on are
            answered by the new network.
         3. Drain queued-but-unflushed buckets through the OLD engines
            (deadline order), then invalidate the old version's plans.
 
-        Returns a summary dict (also emitted as a ``serve_swap`` event).
+        ``block=True`` runs inline and returns the summary dict (also
+        emitted as a ``serve_swap`` event).  ``block=False`` runs the
+        whole sequence — including warm compilation — on a background
+        thread and returns a :class:`SwapHandle` immediately; serving is
+        never paused while the new version warms.
+
+        A warm-compilation failure ABORTS the swap before the switch: the
+        old engines keep serving untouched, the partially-warmed
+        new-version plans are invalidated, and the error is re-raised
+        (from this call when blocking, from ``handle.wait()`` otherwise).
         """
+        handle = SwapHandle()
+
+        def run() -> None:
+            try:
+                handle.info = self._do_swap(bn, warm)
+            except BaseException as e:
+                handle.error = e
+            finally:
+                handle.ready.set()
+
+        if block:
+            run()
+            if handle.error is not None:
+                raise handle.error
+            return handle.info
+        threading.Thread(target=run, daemon=True,
+                         name="serve-swap").start()
+        return handle
+
+    def _do_swap(self, bn, warm: bool) -> Dict[str, Any]:
         t0 = time.perf_counter_ns()
-        with self._cv:
-            old_version = self.network_version
-            samples = dict(self._samples)
-            n_rep = len(self._engines)
-        new_version = old_version + 1
-        new_engines = [self._make_engine(bn, new_version)
-                       for _ in range(n_rep)]
-        warmed = 0
-        if warm:
-            eng = new_engines[0]   # shared plan cache: one replica warms all
-            old_keys = [k for k in self.plans.keys()
-                        if k.network_version == old_version]
-            # bucket key == PlanKey.schema in every mode, so each old plan
-            # maps back to its bucket's recorded sample request
-            for k in old_keys:
-                s = samples.get(k.schema)
-                if s is None:
-                    continue
-                target, evidence, payload = s
-                with eng._serve_lock:
-                    for _ in range(k.batch_shape[0]):
-                        eng.submit(target, evidence, payload)
-                    eng.flush()
-            warmed = sum(1 for k in self.plans.keys()
-                         if k.network_version == new_version)
-        with self._cv:
-            old_engines, self._engines = self._engines, new_engines
-            drained = list(self._buckets.values())
-            self._buckets.clear()
-            self.network_version = new_version
-        n_drained = sum(len(b.items) for b in drained)
-        for b in sorted(drained, key=lambda b: b.min_deadline_s):
-            self._flush_bucket(old_engines[0], b, "drain")
-        self.plans.invalidate(old_version)
+        with self._swap_lock:               # concurrent swaps serialize
+            with self._cv:
+                old_version = self.network_version
+                samples = dict(self._samples)
+                n_rep = len(self._engines)
+            new_version = old_version + 1
+            try:
+                new_engines = [self._make_engine(bn, new_version)
+                               for _ in range(n_rep)]
+                warmed = 0
+                if warm:
+                    # shared plan cache: one replica warms all
+                    eng = new_engines[0]
+                    old_keys = [k for k in self.plans.keys()
+                                if k.network_version == old_version]
+                    # bucket key == PlanKey.schema in every mode, so each
+                    # old plan maps back to its bucket's sample request
+                    for k in old_keys:
+                        s = samples.get(k.schema)
+                        if s is None:
+                            continue
+                        target, evidence, payload = s
+                        with eng._serve_lock:
+                            for _ in range(k.batch_shape[0]):
+                                eng.submit(target, evidence, payload)
+                            eng.flush()
+                    warmed = sum(1 for k in self.plans.keys()
+                                 if k.network_version == new_version)
+            except BaseException:
+                # abort: nothing switched — old engines serve on; drop any
+                # half-warmed plans so the failed version leaves no residue
+                self.plans.invalidate(new_version)
+                raise
+            with self._cv:
+                old_engines, self._engines = self._engines, new_engines
+                drained = list(self._buckets.values())
+                self._buckets.clear()
+                self.network_version = new_version
+            n_drained = sum(len(b.items) for b in drained)
+            for b in sorted(drained, key=lambda b: b.min_deadline_s):
+                self._flush_bucket(old_engines[0], b, "drain")
+            self.plans.invalidate(old_version)
         info = {"old_version": old_version, "new_version": new_version,
                 "warmed_plans": warmed, "drained": n_drained,
                 "dur_us": (time.perf_counter_ns() - t0) / 1e3}
@@ -328,11 +558,19 @@ class AsyncPGMServer:
     # -- lifecycle ------------------------------------------------------------
 
     def stop(self) -> None:
-        """Drain every queued bucket, then stop the workers."""
+        """Drain every queued bucket, then stop workers and supervisor."""
         with self._cv:
             self._stop = True
             self._cv.notify_all()
-        for w in self._workers:
+        for w in list(self._workers):
+            w.join()
+        if self._supervisor is not None:
+            # final pass: a worker that died holding a bucket is respawned
+            # here, drains it (stop flushes everything), then exits
+            self._supervise_once()
+            self._sup_stop.set()
+            self._supervisor.join()
+        for w in list(self._workers):
             w.join()
 
     def stats(self) -> Dict[str, Any]:
@@ -340,6 +578,8 @@ class AsyncPGMServer:
             return {"submitted": self.submitted, "completed": self.completed,
                     "pending": self.submitted - self.completed,
                     "deadline_misses": self.deadline_misses,
+                    "shed": self.shed,
+                    "worker_restarts": self.worker_restarts,
                     "flushes": dict(self.flushes),
                     "network_version": self.network_version,
                     "replicas": len(self._engines),

@@ -1,0 +1,435 @@
+"""Fault tolerance: non-finite quarantine in the streaming scans, posterior
+checkpoint/restore (bit-identical resume), bounded-queue shedding, request
+timeouts, worker supervision, compile retry, swap abort — driven by the
+seeded injectors in ``repro.resilience.faultinject``."""
+
+import contextlib
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import streaming, vmp
+from repro.core.dag import PlateSpec
+from repro.data import synthetic as syn
+from repro.data.stream import Attribute, DataStream, REAL, FINITE
+from repro.obs import sink as obs
+from repro.resilience import (CheckpointManager, DeadlineError, FaultInjector,
+                              ShedError, TransientCompileError,
+                              checkpointed_stream_fit, resume_stream_fit)
+from repro.resilience import checkpoint as ckpt
+from repro.serve.plan import PlanCache, PlanKey
+from repro.serve.queue import AsyncPGMServer, SwapHandle
+
+
+@contextlib.contextmanager
+def _obs_to(tmp_path, level="basic"):
+    path = str(tmp_path / "events.jsonl")
+    prev = obs.configure(level=level, path=path, reset_counters=True)
+    try:
+        yield path
+    finally:
+        obs.configure(level=prev["level"], path=prev["path"],
+                      reset_counters=True)
+
+
+def _plate_setup(n_batches=8, batch=120, f=3, seed=0):
+    stream, _, _ = syn.gmm_stream(n_batches * batch, 2, f, seed=seed)
+    spec = PlateSpec(n_features=f, latent_card=2)
+    cp = vmp.compile_plate(spec)
+    prior = vmp.default_prior(cp)
+    init = vmp.symmetry_broken(prior, jax.random.PRNGKey(0))
+    batches = list(stream.batches(batch))
+    xcs = jnp.stack([b.xc for b in batches])
+    xds = jnp.stack([b.xd for b in batches])
+    return cp, prior, init, xcs, xds
+
+
+def _tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# non-finite quarantine (core/streaming scan body)
+# ---------------------------------------------------------------------------
+
+
+def test_quarantine_skips_poisoned_batches_bit_identical():
+    """A poisoned batch is SKIPPED: the final posterior equals, bit for
+    bit, a run that never saw those batches at all (held state + held
+    Page-Hinkley drift detector)."""
+    cp, prior, init, xcs, xds = _plate_setup()
+    inj = FaultInjector(seed=3)
+    bad, idx = inj.poison_nan(np.asarray(xcs), rate=0.25)
+    assert 0 < len(idx) < xcs.shape[0]
+
+    sp, info_p = streaming.stream_fit(cp, prior,
+                                      streaming.stream_init(prior, init),
+                                      jnp.asarray(bad), xds)
+    keep = np.setdiff1d(np.arange(xcs.shape[0]), idx)
+    sc, _ = streaming.stream_fit(cp, prior,
+                                 streaming.stream_init(prior, init),
+                                 xcs[keep], xds[keep])
+
+    q = np.asarray(info_p["quarantined"]).astype(bool)
+    assert list(np.nonzero(q)[0]) == list(idx)
+    assert int(sp.n_quarantined) == len(idx)
+    assert float(sp.n_seen) == float(sc.n_seen)
+    assert _tree_equal(sp.post, sc.post)
+    assert _tree_equal(sp.prior, sc.prior)
+    assert _tree_equal(sp.drift, sc.drift)
+    # sanitized telemetry: no NaN leaks into the info columns
+    for k in ("elbo", "score", "ph"):
+        assert np.isfinite(np.asarray(info_p[k])).all()
+
+
+def test_quarantine_update_loop_matches_scan():
+    """The eager per-batch driver shares the step body, so it quarantines
+    identically to the fused scan."""
+    cp, prior, init, xcs, xds = _plate_setup(n_batches=5)
+    bad, idx = FaultInjector(seed=1).poison_nan(np.asarray(xcs), rate=0.2)
+
+    ss = streaming.stream_init(prior, init)
+    flags = []
+    for t in range(bad.shape[0]):
+        ss, info = streaming.stream_update(cp, prior, ss,
+                                           jnp.asarray(bad[t]), xds[t])
+        flags.append(bool(info["quarantined"]))
+    sf, infos = streaming.stream_fit(cp, prior,
+                                     streaming.stream_init(prior, init),
+                                     jnp.asarray(bad), xds)
+    assert flags == [bool(x) for x in np.asarray(infos["quarantined"])]
+    assert int(ss.n_quarantined) == int(sf.n_quarantined) == len(idx)
+    assert _tree_equal(ss.post, sf.post)
+
+
+def test_quarantine_events_emitted(tmp_path):
+    cp, prior, init, xcs, xds = _plate_setup(n_batches=5)
+    bad, idx = FaultInjector(seed=2).poison_nan(np.asarray(xcs), rate=0.2)
+    with _obs_to(tmp_path) as path:
+        streaming.stream_fit(cp, prior, streaming.stream_init(prior, init),
+                             jnp.asarray(bad), xds)
+        counts = obs.validate_obs_events(path)
+    assert counts.get("quarantine", 0) == len(idx)
+    assert counts.get("stream_batch", 0) == bad.shape[0]
+
+
+def test_seq_stream_fit_quarantines_poisoned_sequence_batch():
+    """Temporal analog: a NaN sequence batch holds the chained HMM
+    posterior exactly — the final model matches a run without it."""
+    from repro.pgm_models import HiddenMarkovModel, seq_stream_fit
+
+    batches, attrs, _ = syn.hmm_stream(n_batches=5, s=12, t=10, states=2,
+                                       f=2, shift=0.0, seed=4)
+    poisoned = batches[:]
+    poisoned[2] = syn.DynamicDataStream(
+        attrs, np.full_like(poisoned[2].xc, np.nan))
+
+    mp = HiddenMarkovModel(attrs, n_states=2, seed=0)
+    info = seq_stream_fit(mp, poisoned, sweeps=4, tol=0.0)
+    mc = HiddenMarkovModel(attrs, n_states=2, seed=0)
+    seq_stream_fit(mc, batches[:2] + batches[3:], sweeps=4, tol=0.0)
+
+    q = np.asarray(info["quarantined"]).astype(bool)
+    assert list(np.nonzero(q)[0]) == [2]
+    assert mp.n_quarantined == 1
+    assert _tree_equal(mp.posterior, mc.posterior)
+
+
+# ---------------------------------------------------------------------------
+# posterior checkpoint/restore
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_with_meta(tmp_path):
+    cp, prior, init, xcs, xds = _plate_setup(n_batches=3)
+    state, _ = streaming.stream_fit(cp, prior,
+                                    streaming.stream_init(prior, init),
+                                    xcs, xds)
+    path = str(tmp_path / "s.npz")
+    ckpt.save(path, state, {"t": 3, "network_version": 7})
+    like = streaming.stream_init(prior, init)
+    restored, meta = ckpt.load(path, like)
+    assert meta["t"] == 3 and meta["network_version"] == 7
+    assert _tree_equal(state, restored)
+
+
+def test_checkpoint_manager_retention_and_policy(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=2, keep=2, on_drift=True)
+    state = {"w": np.arange(4.0)}
+    assert mgr.maybe_save(0, state) is not None       # first always fires
+    assert mgr.maybe_save(1, state) is None           # within the period
+    assert mgr.maybe_save(2, state) is not None
+    assert mgr.maybe_save(3, state, drifted=True) is not None   # on-drift
+    paths = mgr.paths()
+    assert len(paths) == 2                            # pruned to keep=2
+    assert mgr.latest() == paths[-1] == mgr.path_for(3)
+    _, meta = ckpt.load(mgr.latest(), state)
+    assert meta["reason"] == "drift"
+
+
+def test_resume_mid_stream_bit_identical(tmp_path):
+    """Crash recovery: checkpoint at batch k, resume from disk over the
+    tail — the final state must equal the uninterrupted run EXACTLY."""
+    cp, prior, init, xcs, xds = _plate_setup()
+    k = 3
+    mgr = CheckpointManager(str(tmp_path), every=0, keep=3)
+
+    head, _ = streaming.stream_fit(cp, prior,
+                                   streaming.stream_init(prior, init),
+                                   xcs[:k], xds[:k])
+    mgr.save(k, head)
+    # "crash" — a fresh process restores from disk and continues
+    resumed, info_tail = resume_stream_fit(
+        cp, prior, streaming.stream_init(prior, init), xcs, xds, manager=mgr)
+    full, info_full = streaming.stream_fit(
+        cp, prior, streaming.stream_init(prior, init), xcs, xds)
+
+    assert info_tail["elbo"].shape[0] == xcs.shape[0] - k
+    assert _tree_equal(resumed, full)
+    np.testing.assert_array_equal(np.asarray(info_tail["elbo"]),
+                                  np.asarray(info_full["elbo"][k:]))
+
+
+def test_checkpointed_stream_fit_segments_and_events(tmp_path):
+    cp, prior, init, xcs, xds = _plate_setup(n_batches=6)
+    mgr = CheckpointManager(str(tmp_path / "ck"), every=2, keep=10)
+    with _obs_to(tmp_path) as path:
+        state, info = checkpointed_stream_fit(
+            cp, prior, streaming.stream_init(prior, init), xcs, xds,
+            manager=mgr)
+        counts = obs.validate_obs_events(path)
+    assert info["elbo"].shape[0] == 6
+    assert len(mgr.paths()) == 3                      # t = 2, 4, 6
+    assert counts.get("checkpoint", 0) == 3
+    full, _ = streaming.stream_fit(cp, prior,
+                                   streaming.stream_init(prior, init),
+                                   xcs, xds)
+    assert _tree_equal(state, full)                   # segmenting is exact
+
+
+# ---------------------------------------------------------------------------
+# serving robustness
+# ---------------------------------------------------------------------------
+
+
+def _discrete_bn(seed=0):
+    return syn.random_discrete_bn(5, card=2, max_parents=2, seed=seed)
+
+
+def _q(bn, i=0):
+    names = [v.name for v in bn.order]
+    return names[-1], {names[0]: float(i % 2)}
+
+
+def test_submit_sheds_over_max_queue():
+    bn = _discrete_bn()
+    with AsyncPGMServer(bn, mode="exact", max_batch=64, max_delay_ms=10_000,
+                        default_deadline_ms=60_000, max_queue=2) as srv:
+        kept = [srv.submit(*_q(bn)) for _ in range(2)]
+        shed = [srv.submit(*_q(bn)) for _ in range(3)]
+        for t in shed:
+            assert t.done() and t.trigger == "shed"
+            with pytest.raises(ShedError):
+                t.result()
+        st = srv.stats()
+        assert st["shed"] == 3 and st["submitted"] == 2
+    for t in kept:                                    # drained on stop
+        assert t.error is None and t.result() is not None
+    assert srv.stats()["pending"] == 0
+
+
+def test_request_timeout_fails_stuck_flush_with_deadline_error():
+    bn = _discrete_bn()
+    inj = FaultInjector()
+    with AsyncPGMServer(bn, mode="exact", max_batch=1, max_delay_ms=1,
+                        default_deadline_ms=40, request_timeout_ms=40,
+                        supervise_interval_ms=5) as srv:
+        srv.submit(*_q(bn), deadline_ms=60_000).result(timeout=120)  # warm
+        inj.slow_flush(srv, delay_s=1.5, n=1)
+        t = srv.submit(*_q(bn))
+        with pytest.raises(DeadlineError):
+            t.result(timeout=120)
+        assert t.deadline_miss and t.trigger == "watchdog"
+        # the server recovers once the stall clears
+        ok = srv.submit(*_q(bn, 1), deadline_ms=60_000)
+        assert ok.result(timeout=120) is not None
+    assert srv.stats()["pending"] == 0
+
+
+def test_worker_crash_requeues_bucket_and_respawns_zero_loss(tmp_path):
+    bn = _discrete_bn()
+    inj = FaultInjector()
+    with _obs_to(tmp_path) as path:
+        with AsyncPGMServer(bn, mode="exact", max_batch=4,
+                            max_delay_ms=10_000, default_deadline_ms=60_000,
+                            supervise_interval_ms=5) as srv:
+            inj.crash_worker(srv, widx=0)
+            tickets = [srv.submit(*_q(bn)) for _ in range(4)]  # size trigger
+            results = [t.result(timeout=120) for t in tickets]
+            st = srv.stats()
+            assert st["worker_restarts"] >= 1
+            assert st["pending"] == 0                 # zero lost tickets
+        counts = obs.validate_obs_events(path)
+    assert counts.get("serve_worker", 0) >= 1
+    assert all(t.error is None for t in tickets)
+    assert all(np.isfinite(r).all() for r in results)
+
+
+def test_plan_cache_compile_retry_after_transient_failure(tmp_path):
+    cache = PlanCache(compile_retries=2, retry_backoff_s=0.01)
+    FaultInjector().fail_compiles(cache, n=2)
+    key = PlanKey(0, "jt-discrete", ("D0",), (4,), ("float32",))
+    with _obs_to(tmp_path) as path:
+        plan = cache.get(key, lambda: (lambda x: x + 1))
+        counts = obs.validate_obs_events(path)
+    assert plan.run(1) == 2
+    assert cache.retries == 2
+    assert counts.get("serve_retry", 0) == 2
+
+
+def test_plan_cache_build_raise_leaves_no_poisoned_entry():
+    """Satellite: an exhausted build failure inserts nothing — the next
+    get() with a working build compiles cleanly."""
+    cache = PlanCache()                               # no retry budget
+    key = PlanKey(0, "jt-discrete", ("D0",), (4,), ("float32",))
+
+    def bad():
+        raise TransientCompileError("boom")
+
+    with pytest.raises(TransientCompileError):
+        cache.get(key, bad)
+    assert key not in cache and len(cache) == 0
+    plan = cache.get(key, lambda: (lambda x: x * 2))
+    assert plan.run(3) == 6
+    assert cache.stats()["misses"] == 2
+
+
+def test_swap_model_nonblocking_returns_handle():
+    bn, bn2 = _discrete_bn(0), _discrete_bn(9)
+    with AsyncPGMServer(bn, mode="exact", max_batch=8, max_delay_ms=5,
+                        default_deadline_ms=60_000) as srv:
+        srv.submit(*_q(bn)).result(timeout=120)       # warm a v0 plan
+        handle = srv.swap_model(bn2, block=False)
+        assert isinstance(handle, SwapHandle)
+        info = handle.wait(timeout=120)
+        assert handle.done() and info["new_version"] == 1
+        assert srv.stats()["network_version"] == 1
+        # serving continues on the new version
+        t = srv.submit(*_q(bn))
+        assert t.result(timeout=120) is not None
+    assert all(k.network_version == 1 for k in srv.plans.keys())
+
+
+def test_swap_abort_on_warm_compile_failure_keeps_old_engines(tmp_path):
+    """Satellite: a compile failure mid-warm aborts the swap — the old
+    engines serve on untouched and no new-version plans linger."""
+    bn, bn2 = _discrete_bn(0), _discrete_bn(9)
+    cache = PlanCache()                               # no retry budget
+    with AsyncPGMServer(bn, mode="exact", max_batch=8, max_delay_ms=5,
+                        default_deadline_ms=60_000, plan_cache=cache) as srv:
+        before = srv.submit(*_q(bn)).result(timeout=120)
+        FaultInjector().fail_compiles(cache, n=10)
+        with pytest.raises(TransientCompileError):
+            srv.swap_model(bn2)
+        FaultInjector.disarm(cache=cache)
+        assert srv.stats()["network_version"] == 0
+        assert all(k.network_version == 0 for k in cache.keys())
+        after = srv.submit(*_q(bn)).result(timeout=120)
+        assert np.array_equal(before, after)          # old model still serves
+
+
+def test_chaos_combined_nan_crash_compile_failure_zero_loss():
+    """The acceptance chaos run: 1%-NaN-poisoned training stream, one
+    worker crash and one transient compile failure in a single serving
+    run — the learner survives and the server loses zero accepted
+    tickets."""
+    from repro.pgm_models import GaussianMixture
+
+    clean, _, _ = syn.gmm_stream(2000, 3, 4, seed=5)
+    poisoned = syn.poison_stream(clean, rate=0.01, seed=6)
+    guarded = DataStream(poisoned.attributes, poisoned.chunks,
+                         n_instances=poisoned.n_instances, validate=True)
+    m = GaussianMixture(guarded.attributes, n_states=3)
+    m.update_model(guarded)
+    assert guarded.quarantined > 0                    # corruption was real
+    xs = np.asarray(clean.collect().xc)
+
+    cache = PlanCache(compile_retries=2, retry_backoff_s=0.01)
+    inj = FaultInjector(seed=7)
+    with AsyncPGMServer(m, mode="vmp", max_batch=4, max_delay_ms=20,
+                        default_deadline_ms=60_000, replicas=2,
+                        plan_cache=cache, supervise_interval_ms=5) as srv:
+        # warm one bucket, then inject: crash + transient compile failure
+        srv.submit("Z", {f"X{i}": float(xs[0, i]) for i in range(4)}
+                   ).result(timeout=120)
+        crash = inj.crash_worker(srv)                 # any worker
+        inj.fail_compiles(cache, n=1)                 # within retry budget
+        tickets = []
+        for j in range(1, 25):
+            ev = {f"X{i}": float(xs[j, i]) for i in range(4)}
+            tickets.append(srv.submit("Z", ev))
+        results = [t.result(timeout=120) for t in tickets]
+        assert crash["fired"]       # the awaited results crossed the crash
+        st = srv.stats()
+        assert st["worker_restarts"] >= 1
+        assert st["plans"]["retries"] >= 1
+        assert st["pending"] == 0                     # zero lost tickets
+    assert all(t.error is None for t in tickets)
+    assert all(np.isfinite(r).all() for r in results)
+
+
+# ---------------------------------------------------------------------------
+# data-layer validation / poisoning satellites
+# ---------------------------------------------------------------------------
+
+
+def test_datastream_validate_quarantines_bad_rows():
+    attrs = [Attribute("X0", REAL), Attribute("X1", REAL),
+             Attribute("D0", FINITE, 2)]
+    xc = np.zeros((6, 2), np.float32)
+    xc[1, 0] = np.nan
+    xc[4, 1] = np.inf
+    xd = np.zeros((6, 1), np.int32)
+    xd[2, 0] = 5                                      # out of range (card 2)
+
+    def src():
+        yield xc[:3], xd[:3]
+        yield xc[3:], xd[3:]
+
+    ds = DataStream(attrs, src, n_instances=6, validate=True)
+    got = ds.collect()
+    assert got.xc.shape[0] == 3                       # rows 1, 2, 4 dropped
+    assert ds.quarantined == 3
+    assert ds.chunk_quarantine == [2, 1]
+    assert np.isfinite(np.asarray(got.xc)).all()
+
+    # schema violations are programming errors, not data faults
+    bad = DataStream(attrs, lambda: iter([(xc[:, :1], xd)]), validate=True)
+    with pytest.raises(ValueError, match="does not match schema"):
+        list(bad.chunks())
+
+
+def test_poison_stream_is_seeded_and_validate_recovers():
+    stream, _, _ = syn.gmm_stream(500, 2, 3, seed=0)
+    a = syn.poison_stream(stream, rate=0.1, seed=42).collect()
+    b = syn.poison_stream(stream, rate=0.1, seed=42).collect()
+    np.testing.assert_array_equal(np.asarray(a.xc), np.asarray(b.xc))
+    n_bad = int(np.isnan(np.asarray(a.xc)).any(axis=1).sum())
+    assert 0 < n_bad < 500
+
+    poisoned = syn.poison_stream(stream, rate=0.1, seed=42)
+    guarded = DataStream(poisoned.attributes, poisoned.chunks,
+                         n_instances=poisoned.n_instances, validate=True)
+    clean = guarded.collect()
+    assert guarded.quarantined == n_bad
+    assert clean.xc.shape[0] == 500 - n_bad
+    assert np.isfinite(np.asarray(clean.xc)).all()

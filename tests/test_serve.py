@@ -92,7 +92,7 @@ def test_plan_cache_hit_miss_counters_and_compile_timing():
     assert again is plan                        # hit: build never called
     st = cache.stats()
     assert st == {"hits": 1, "misses": 2, "evictions": 0, "size": 1,
-                  "max_plans": 8, "hit_rate": 1 / 3}
+                  "max_plans": 8, "hit_rate": 1 / 3, "retries": 0}
     # peek touches neither counters nor LRU order
     assert cache.peek(_key(0)) is plan
     assert cache.stats()["hits"] == 1
