@@ -1,38 +1,112 @@
-"""Roofline analysis (deliverable g) — derive the three terms per
-(arch x shape) from the dry-run artifacts.
+"""Roofline analysis — hardware peaks, achieved-vs-peak scoring, and the
+dry-run artifact report.
 
-    compute_s    = HLO_FLOPs_per_device / 197 TFLOP/s      (bf16 MXU peak)
-    memory_s     = HLO_bytes_per_device / 819 GB/s         (HBM)
-    collective_s = link_bytes_per_device / 50 GB/s         (ICI per link)
+    compute_s    = HLO_FLOPs_per_device / peak FLOP/s      (bf16 MXU peak)
+    memory_s     = HLO_bytes_per_device / HBM BW
+    collective_s = link_bytes_per_device / link BW         (ICI per link)
 
 FLOPs/bytes come from the trip-count-aware HLO analyzer (hlo_analysis.py)
 over the post-SPMD module (xla's cost_analysis undercounts scan bodies).
 Link-byte model: all-reduce costs 2x its payload (reduce-scatter +
 all-gather halves of a ring), the others 1x.
 
+The hardware peaks are parameters, not constants: :class:`HardwarePeaks`
+defaults to a TPU v5e-class chip (197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s per ICI link) and can be overridden per run via the
+``REPRO_PEAK_FLOPS`` / ``REPRO_PEAK_HBM_BW`` / ``REPRO_PEAK_LINK_BW`` /
+``REPRO_PEAK_CHIPS`` environment knobs or the CLI flags below — the same
+analysis answers "how far off the roof are we" on any accelerator.
+
+:func:`achieved_vs_peak` is the live half (ROADMAP Pallas item):
+``benchmarks/run.py`` registers it as the ``achieved_vs_peak`` obs
+estimator, so the PGM kernel bench blocks (``--latent``, ``--structure``)
+stamp measured-throughput-vs-roof fractions (and the compute/memory
+bound classification) next to each row, from the analytical FLOP/byte
+counts of the very program they timed.
+
 MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference) with N = active params;
 the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/attention/padding overhead.
 
 Usage: PYTHONPATH=src python -m benchmarks.roofline \
-           [--dryrun results/dryrun] [--hlo results/hlo] [--mesh 16x16]
+           [--dryrun results/dryrun] [--hlo results/hlo] [--mesh 16x16] \
+           [--peak-flops 1.97e14] [--hbm-bw 8.19e11] [--link-bw 5e10] \
+           [--chips 256]
 Writes results/roofline.csv and results/roofline.md.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import glob
 import json
 import os
 import sys
-
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
-CHIPS = 256  # single-pod table
+from typing import Optional
 
 
-def model_flops_per_device(rec: dict) -> float:
+@dataclasses.dataclass(frozen=True)
+class HardwarePeaks:
+    """Peak rates of the accelerator the roofline is drawn against."""
+
+    flops: float = 197e12       # bf16 MXU peak, FLOP/s per chip
+    hbm_bw: float = 819e9       # HBM bandwidth, B/s per chip
+    link_bw: float = 50e9       # ICI per-link bandwidth, B/s
+    chips: int = 256            # pod size for per-device splits
+
+    @classmethod
+    def from_env(cls, **overrides: float) -> "HardwarePeaks":
+        """Defaults <- REPRO_PEAK_* env vars <- explicit overrides."""
+        vals = {}
+        for field, env in (("flops", "REPRO_PEAK_FLOPS"),
+                           ("hbm_bw", "REPRO_PEAK_HBM_BW"),
+                           ("link_bw", "REPRO_PEAK_LINK_BW"),
+                           ("chips", "REPRO_PEAK_CHIPS")):
+            if env in os.environ:
+                cast = int if field == "chips" else float
+                vals[field] = cast(float(os.environ[env]))
+        vals.update({k: v for k, v in overrides.items() if v is not None})
+        return cls(**vals)
+
+
+DEFAULT_PEAKS = HardwarePeaks()
+
+# Back-compat aliases for the former module constants.
+PEAK_FLOPS = DEFAULT_PEAKS.flops
+HBM_BW = DEFAULT_PEAKS.hbm_bw
+LINK_BW = DEFAULT_PEAKS.link_bw
+CHIPS = DEFAULT_PEAKS.chips
+
+
+def achieved_vs_peak(*, seconds: float, flops: Optional[float] = None,
+                     hbm_bytes: Optional[float] = None,
+                     peaks: Optional[HardwarePeaks] = None) -> dict:
+    """Score a measured region against the hardware roof.
+
+    ``flops`` / ``hbm_bytes`` are the work done in ``seconds`` (per
+    device); returns achieved FLOP/s and B/s, their fractions of peak,
+    and which roof the region sits under (``bound``: the resource whose
+    peak-fraction is higher is the one limiting further speedup).
+    Registered as the ``achieved_vs_peak`` obs estimator by
+    ``benchmarks/run.py``.
+    """
+    p = peaks if peaks is not None else HardwarePeaks.from_env()
+    out: dict = {"seconds": seconds,
+                 "peak_flops": p.flops, "peak_hbm_bw": p.hbm_bw}
+    frac_f = frac_b = None
+    if flops is not None and seconds > 0:
+        out["achieved_flops_per_s"] = flops / seconds
+        frac_f = out["frac_peak_flops"] = flops / seconds / p.flops
+    if hbm_bytes is not None and seconds > 0:
+        out["achieved_bytes_per_s"] = hbm_bytes / seconds
+        frac_b = out["frac_peak_hbm_bw"] = hbm_bytes / seconds / p.hbm_bw
+    if frac_f is not None and frac_b is not None:
+        out["bound"] = "compute" if frac_f >= frac_b else "memory"
+    return out
+
+
+def model_flops_per_device(rec: dict,
+                           peaks: HardwarePeaks = DEFAULT_PEAKS) -> float:
     """6*N_active*D (train) / 2*N_active*D (inference), per chip."""
     from repro.configs.base import INPUT_SHAPES
 
@@ -46,10 +120,11 @@ def model_flops_per_device(rec: dict) -> float:
         total = 2.0 * n * tokens
     else:  # decode: ONE token per stream
         total = 2.0 * n * shape.global_batch
-    return total / CHIPS
+    return total / peaks.chips
 
 
-def analyze_record(rec: dict, hlo_dir: str) -> dict:
+def analyze_record(rec: dict, hlo_dir: str,
+                   peaks: HardwarePeaks = DEFAULT_PEAKS) -> dict:
     from benchmarks.hlo_analysis import analyze
 
     tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
@@ -59,17 +134,17 @@ def analyze_record(rec: dict, hlo_dir: str) -> dict:
     link_bytes = (2 * h["coll_all-reduce"] + h["coll_all-gather"]
                   + h["coll_reduce-scatter"] + h["coll_all-to-all"]
                   + h["coll_collective-permute"])
-    compute_s = h["flops"] / PEAK_FLOPS
+    compute_s = h["flops"] / peaks.flops
     # bytes: [min, max] — min assumes TPU-grade fusion (only matmul/conv/
     # collective/slice traffic hits HBM), max is the unfused CPU-HLO bound.
-    memory_s_min = h["hbm_bytes_min"] / HBM_BW
-    memory_s = h["hbm_bytes"] / HBM_BW
-    coll_s = link_bytes / LINK_BW
+    memory_s_min = h["hbm_bytes_min"] / peaks.hbm_bw
+    memory_s = h["hbm_bytes"] / peaks.hbm_bw
+    coll_s = link_bytes / peaks.link_bw
     # dominance judged on the fused (TPU-realistic) memory bound
     terms = {"compute": compute_s, "memory": memory_s_min,
              "collective": coll_s}
     dominant = max(terms, key=terms.get)
-    mf = model_flops_per_device(rec)
+    mf = model_flops_per_device(rec, peaks)
     rec = dict(rec)
     rec.update({
         "hlo_flops": h["flops"], "hlo_bytes": h["hbm_bytes"],
@@ -111,7 +186,18 @@ def main(argv=None) -> int:
     ap.add_argument("--hlo", default="results/hlo")
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--out", default="results/roofline")
+    ap.add_argument("--peak-flops", type=float, default=None,
+                    help="peak FLOP/s per chip (default: v5e-class 197e12; "
+                         "env REPRO_PEAK_FLOPS)")
+    ap.add_argument("--hbm-bw", type=float, default=None,
+                    help="HBM B/s per chip (default 819e9; REPRO_PEAK_HBM_BW)")
+    ap.add_argument("--link-bw", type=float, default=None,
+                    help="ICI link B/s (default 50e9; REPRO_PEAK_LINK_BW)")
+    ap.add_argument("--chips", type=int, default=None,
+                    help="pod size (default 256; REPRO_PEAK_CHIPS)")
     args = ap.parse_args(argv)
+    peaks = HardwarePeaks.from_env(flops=args.peak_flops, hbm_bw=args.hbm_bw,
+                                   link_bw=args.link_bw, chips=args.chips)
 
     recs = []
     for path in sorted(glob.glob(os.path.join(args.dryrun, "*.json"))):
@@ -123,7 +209,7 @@ def main(argv=None) -> int:
             recs.append(rec)
             continue
         try:
-            recs.append(analyze_record(rec, args.hlo))
+            recs.append(analyze_record(rec, args.hlo, peaks))
         except FileNotFoundError:
             rec["note"] = "no HLO dump"
             recs.append(rec)

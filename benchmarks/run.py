@@ -181,28 +181,56 @@ def bench_streaming():
 
 
 def register_estimators() -> None:
-    """Register the analytical HLO cost model (``hlo_analysis.analyze``,
-    dormant since seed) in the obs registry as ``"hlo_cost"`` — the first
-    concrete piece of the ROADMAP roofline gate.  Estimates flow back into
-    BENCH_* results via :func:`_program_analysis` and, when obs is enabled,
-    into ``bench_estimate`` JSONL events."""
+    """Register the bench-side obs estimators:
+
+    * ``"hlo_cost"`` — the analytical HLO cost model
+      (``hlo_analysis.analyze``, dormant since seed); estimates flow back
+      into BENCH_* results via :func:`_program_analysis`.
+    * ``"achieved_vs_peak"`` — ``roofline.achieved_vs_peak``: measured
+      seconds + analytical FLOPs/bytes -> fraction-of-roof and
+      compute/memory bound classification (the live half of the ROADMAP
+      roofline gate; peaks tunable via ``REPRO_PEAK_*``).
+
+    When obs is enabled every estimate is also a ``bench_estimate``
+    JSONL event."""
     from repro import obs
 
-    if obs.registered("hlo_cost"):
-        return
-    try:
-        import hlo_analysis                      # script mode (sys.path[0])
-    except ImportError:
-        from benchmarks import hlo_analysis      # repo-root import
+    if not obs.registered("hlo_cost"):
+        try:
+            import hlo_analysis                  # script mode (sys.path[0])
+        except ImportError:
+            from benchmarks import hlo_analysis  # repo-root import
 
-    def hlo_cost(hlo_text: str) -> dict:
-        a = hlo_analysis.analyze(hlo_text)
-        return {"flops": a.get("flops"),
-                "hbm_bytes": a.get("hbm_bytes"),
-                "hbm_bytes_min": a.get("hbm_bytes_min"),
-                "collective_bytes": a.get("collective_bytes")}
+        def hlo_cost(hlo_text: str) -> dict:
+            a = hlo_analysis.analyze(hlo_text)
+            return {"flops": a.get("flops"),
+                    "hbm_bytes": a.get("hbm_bytes"),
+                    "hbm_bytes_min": a.get("hbm_bytes_min"),
+                    "collective_bytes": a.get("collective_bytes")}
 
-    obs.register("hlo_cost", hlo_cost)
+        obs.register("hlo_cost", hlo_cost)
+
+    if not obs.registered("achieved_vs_peak"):
+        try:
+            import roofline                      # script mode (sys.path[0])
+        except ImportError:
+            from benchmarks import roofline      # repo-root import
+        obs.register("achieved_vs_peak", roofline.achieved_vs_peak)
+
+
+def _achieved_vs_peak_row(analytical, us_per_call: float):
+    """achieved-vs-peak stamp for one bench row: analytical FLOP/byte
+    counts + the measured per-call time -> fraction-of-roof dict (None
+    when the cost model produced nothing to score)."""
+    from repro import obs
+
+    if not analytical or not analytical.get("flops"):
+        return None
+    if not obs.registered("achieved_vs_peak"):
+        return None
+    return obs.estimate("achieved_vs_peak", seconds=us_per_call / 1e6,
+                        flops=analytical["flops"],
+                        hbm_bytes=analytical.get("hbm_bytes_min"))
 
 
 def _program_analysis(lowered):
@@ -538,6 +566,7 @@ def bench_latent_json(n: int = 8_192, f: int = 4, k: int = 3,
                                 PlateSpec, Variables)
     from repro.infer_exact import JunctionTreeEngine
 
+    register_estimators()
     results = []
 
     # -- part 1: latent-plate E-step backends --------------------------------
@@ -555,10 +584,15 @@ def bench_latent_json(n: int = 8_192, f: int = 4, k: int = 3,
             step = jax.jit(lambda x, d, m, be=backend: vmp.local_step(
                 cp, post, x, d, m, backend=be))
             us = _t(step, xc, xd, mask, reps=reps)
-            results.append({
+            _, analytical = _program_analysis(step.lower(xc, xd, mask))
+            row = {
                 "driver": f"local_step_L{L}", "backend": backend, "L": L,
                 "n": n, "us_per_call": us, "inst_per_s": n / us * 1e6,
-            })
+            }
+            avp = _achieved_vs_peak_row(analytical, us)
+            if avp is not None:
+                row["achieved_vs_peak"] = avp
+            results.append(row)
             stats[backend] = step(xc, xd, mask)[0]
         de = np.asarray(ef.reg_dense(stats["einsum"].reg).sxx)
         dp = np.asarray(ef.reg_dense(stats["pallas"].reg).sxx)
@@ -699,6 +733,16 @@ def bench_structure_json(n: int = 20_000, n_vars: int = 8,
         for k in range(max_parents + 1):
             fams.extend((ch, pa) for pa in
                         itertools.combinations(rest, k))
+    register_estimators()
+    # disc_family_scores mixes host numpy with device calls, so there is
+    # no single lowered program to analyze; the closed-form count-kernel
+    # model below covers the dominant contraction: one-hot accumulation
+    # into each family's joint contingency table (2*n*J FMA per family
+    # with J joint states) over an n x n_vars int32 read.
+    joint_states = [int(np.prod([cards[ch]] + [cards[p] for p in pa]))
+                    for ch, pa in fams]
+    fam_flops = float(2 * n * sum(joint_states))
+    fam_bytes = float(4 * n * n_vars + 4 * sum(joint_states))
     scores = {}
     for backend in ("einsum", "pallas"):
         def score(be=backend):
@@ -707,11 +751,16 @@ def bench_structure_json(n: int = 20_000, n_vars: int = 8,
             return scores[be]
 
         t = _t(score, reps=reps)
-        results.append({
+        row = {
             "driver": "family_scores", "backend": backend,
             "n": n, "n_families": len(fams), "us_per_call": t,
             "families_per_s": len(fams) / t * 1e6,
-        })
+        }
+        avp = _achieved_vs_peak_row(
+            {"flops": fam_flops, "hbm_bytes_min": fam_bytes}, t)
+        if avp is not None:
+            row["achieved_vs_peak"] = avp
+        results.append(row)
     score_diff = float(np.abs(scores["einsum"] - scores["pallas"]).max())
 
     # -- part 2: Chow-Liu tree recovery --------------------------------------

@@ -1,0 +1,206 @@
+#!/usr/bin/env python
+"""Tolerance-banded perf-regression gate over the committed BENCH_*.json
+baselines — the enforcement half of the "measured perf trajectory"
+standing item.
+
+CI runs a fresh bench smoke (small sizes, shared runner, interpret-mode
+Pallas) and compares it against the committed baseline with this script;
+an out-of-band drift fails the leg.  Because the smoke sizes differ from
+the committed run, every check is **scale-robust**: dimensionless ratios
+measured within one run (fused-vs-loop speedup, achieved/offered load,
+faulted-vs-clean throughput), rows matched on identical offered load, and
+boolean invariants — never raw inst/s across different problem sizes.
+
+Tolerance bands (deliberately loose — the gate exists to catch
+order-of-magnitude regressions and broken invariants, not 10% noise on a
+shared CI box):
+
+  streaming
+    - driver_posterior_max_abs_diff <= 1e-6     (fused == loop, exact)
+    - speedup_inst_per_s >= max(1.0, 0.15 x baseline speedup)
+      (the fused scan must stay a *speedup*; at 0.15x the committed
+       ratio something structural broke, e.g. the scan fell back to
+       per-batch dispatch)
+
+  serve   (rows matched by driver + offered_qps; serve_single only —
+           mesh timing is too noisy at smoke sizes)
+    - p50_ms <= max(20 ms, 4 x baseline p50)
+    - p99_ms <= max(30 ms, 4 x baseline p99)
+    - achieved_qps / offered_qps >= max(0.5, baseline ratio - 0.3)
+    - plan_cache_hit_rate >= baseline - 0.2    (payload-level)
+    - hot_swap_zero_drop stays true
+
+  resilience
+    - quarantine_bit_identical / serve_zero_loss / resume_bit_identical
+      stay true
+    - streaming overhead_pct <= 50   (quarantine gate stays ~free)
+    - faulted achieved_qps >= 0.5 x clean achieved_qps (within-run)
+    - zero lost tickets, clean and faulted
+
+Reading a failure: each line prints  CHECK  fresh-value  vs  band
+(derived from the baseline value in parentheses).  A FAIL on a parity /
+boolean check means a correctness regression — fix the code.  A FAIL on
+a latency/throughput band means either a real perf regression (profile
+the path the check names) or a genuinely slower runner — if the latter,
+re-run; the bands already absorb ~4x machine variance, so a persistent
+failure is a regression, not noise.
+
+Usage:
+  python scripts/bench_compare.py --bench streaming \
+      --fresh /tmp/bench.json --baseline BENCH_streaming.json
+
+Exits 0 when every check passes, 1 otherwise.  Pure stdlib — no repro /
+jax imports — so it runs in any leg instantly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, NamedTuple, Optional
+
+
+class Check(NamedTuple):
+    name: str
+    ok: bool
+    fresh: Any
+    band: str           # human-readable bound, baseline in parentheses
+
+    def line(self) -> str:
+        mark = "PASS" if self.ok else "FAIL"
+        return f"  [{mark}] {self.name}: {self.fresh} vs {self.band}"
+
+
+def _fmt(v: Any) -> str:
+    return f"{v:.4g}" if isinstance(v, float) else str(v)
+
+
+def compare_streaming(fresh: Dict, base: Dict) -> List[Check]:
+    checks = []
+    diff = fresh["driver_posterior_max_abs_diff"]
+    checks.append(Check("fused-vs-loop posterior parity", diff <= 1e-6,
+                        _fmt(diff), "<= 1e-06"))
+    floor = max(1.0, 0.15 * base["speedup_inst_per_s"])
+    sp = fresh["speedup_inst_per_s"]
+    checks.append(Check(
+        "stream_fit_scan speedup over stream_update_loop", sp >= floor,
+        _fmt(sp),
+        f">= {floor:.2f} (0.15 x baseline {base['speedup_inst_per_s']:.2f}, "
+        f"floor 1.0)"))
+    return checks
+
+
+def _serve_rows(payload: Dict, driver: str) -> Dict[float, Dict]:
+    return {r["offered_qps"]: r for r in payload["results"]
+            if r.get("driver") == driver}
+
+
+def compare_serve(fresh: Dict, base: Dict) -> List[Check]:
+    checks = []
+    fr = _serve_rows(fresh, "serve_single")
+    br = _serve_rows(base, "serve_single")
+    common = sorted(set(fr) & set(br))
+    if not common:
+        # no identical offered load: compare each fresh row against the
+        # nearest baseline load (bands are wide enough to absorb it)
+        pairs = [(q, min(br, key=lambda b: abs(b - q))) for q in sorted(fr)]
+    else:
+        pairs = [(q, q) for q in common]
+    for fq, bq in pairs:
+        f, b = fr[fq], br[bq]
+        tag = (f"@{fq:g}qps" if fq == bq
+               else f"@{fq:g}qps (nearest baseline {bq:g})")
+        p50_cap = max(20.0, 4.0 * b["p50_ms"])
+        checks.append(Check(
+            f"serve_single p50_ms {tag}", f["p50_ms"] <= p50_cap,
+            _fmt(f["p50_ms"]),
+            f"<= {p50_cap:.1f} (max(20, 4 x baseline {b['p50_ms']:.2f}))"))
+        p99_cap = max(30.0, 4.0 * b["p99_ms"])
+        checks.append(Check(
+            f"serve_single p99_ms {tag}", f["p99_ms"] <= p99_cap,
+            _fmt(f["p99_ms"]),
+            f"<= {p99_cap:.1f} (max(30, 4 x baseline {b['p99_ms']:.2f}))"))
+        f_ratio = f["achieved_qps"] / f["offered_qps"]
+        b_ratio = b["achieved_qps"] / b["offered_qps"]
+        ratio_floor = max(0.5, b_ratio - 0.3)
+        checks.append(Check(
+            f"serve_single achieved/offered {tag}", f_ratio >= ratio_floor,
+            _fmt(f_ratio),
+            f">= {ratio_floor:.2f} (baseline ratio {b_ratio:.2f} - 0.3, "
+            f"floor 0.5)"))
+    hit_floor = base["plan_cache_hit_rate"] - 0.2
+    hr = fresh["plan_cache_hit_rate"]
+    checks.append(Check(
+        "plan_cache_hit_rate", hr >= hit_floor, _fmt(hr),
+        f">= {hit_floor:.2f} (baseline {base['plan_cache_hit_rate']:.2f} "
+        f"- 0.2)"))
+    checks.append(Check("hot_swap_zero_drop", bool(fresh["hot_swap_zero_drop"]),
+                        fresh["hot_swap_zero_drop"], "== True"))
+    return checks
+
+
+def compare_resilience(fresh: Dict, base: Dict) -> List[Check]:
+    checks = []
+    for key in ("quarantine_bit_identical", "serve_zero_loss",
+                "resume_bit_identical"):
+        checks.append(Check(key, bool(fresh[key]), fresh[key], "== True"))
+    ov = fresh["streaming"]["overhead_pct"]
+    checks.append(Check("quarantine-gate streaming overhead_pct", ov <= 50.0,
+                        _fmt(ov), "<= 50"))
+    clean = fresh["serving"]["clean"]["achieved_qps"]
+    faulted = fresh["serving"]["faulted"]["achieved_qps"]
+    floor = 0.5 * clean
+    checks.append(Check(
+        "faulted achieved_qps vs clean (within-run)", faulted >= floor,
+        _fmt(faulted), f">= {floor:.1f} (0.5 x clean {clean:.1f})"))
+    for leg in ("clean", "faulted"):
+        lost = fresh["serving"][leg]["lost_tickets"]
+        checks.append(Check(f"{leg} lost_tickets", lost == 0, lost, "== 0"))
+    return checks
+
+
+COMPARATORS = {"streaming": compare_streaming, "serve": compare_serve,
+               "resilience": compare_resilience}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="tolerance-banded bench regression gate (see module "
+                    "docstring for the bands)")
+    ap.add_argument("--bench", required=True, choices=sorted(COMPARATORS))
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced bench JSON (the smoke run)")
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json baseline")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    for payload, path in ((fresh, args.fresh), (base, args.baseline)):
+        if payload.get("bench") != args.bench:
+            print(f"bench_compare: {path} is a "
+                  f"{payload.get('bench')!r} payload, expected "
+                  f"{args.bench!r}", file=sys.stderr)
+            return 2
+
+    checks = COMPARATORS[args.bench](fresh, base)
+    failed = [c for c in checks if not c.ok]
+    print(f"bench_compare[{args.bench}]: {args.fresh} vs {args.baseline}")
+    for c in checks:
+        print(c.line())
+    if failed:
+        print(f"bench_compare[{args.bench}]: {len(failed)}/{len(checks)} "
+              f"checks FAILED — out-of-band drift vs the committed "
+              f"baseline (see script docstring: parity/boolean failures "
+              f"are correctness bugs; band failures are perf regressions "
+              f"unless the runner is pathologically slow)")
+        return 1
+    print(f"bench_compare[{args.bench}]: all {len(checks)} checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

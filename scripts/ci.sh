@@ -11,6 +11,12 @@
 #   3. the streaming perf harness in --json mode on tiny sizes with schema
 #      validation, so perf-trajectory breakage (BENCH_streaming.json) fails
 #      tier-1 instead of silently rotting,
+#   3b. the perf-regression gate: scripts/bench_compare.py diffs the fresh
+#      streaming / serve / resilience smoke payloads against the committed
+#      BENCH_*.json baselines using scale-robust tolerance bands
+#      (dimensionless within-run ratios, load-matched rows, boolean
+#      invariants — the bands are documented in the script docstring), so
+#      an out-of-band perf drift fails tier-1 with a named check,
 #   4. the d-VMP mesh-path harness (--json --dvmp) on a forced 4-device
 #      host mesh with schema + shard-invariance validation,
 #   4b. the latent-path harness (--json --latent) on tiny sizes: schema
@@ -53,8 +59,17 @@
 #      temporal_plan events all made it to the JSONL,
 #   7c. the serving obs leg: a fresh process drives AsyncPGMServer through
 #      timeout-triggered micro-batch flushes and a mid-stream hot model
-#      swap, then validate_obs_events asserts serve_deadline, serve_swap
-#      and the per-bucket serve_bucket telemetry all validate,
+#      swap, then validate_obs_events asserts serve_deadline, serve_swap,
+#      the per-bucket serve_bucket telemetry and the aggregation-tier
+#      slo / serve_health events all validate,
+#   7c2. the replica-health demo leg: a fresh 2-replica AsyncPGMServer with
+#      an injected slow_flush pinned to replica 0 — the health score must
+#      diverge (replica 0 degraded, replica 1 not), dispatch must bias away
+#      from the sick replica (strictly fewer buckets flushed by replica 0),
+#      no ticket may be lost, and the run's Prometheus snapshot
+#      (serve_request_ms histogram + replica_score gauges) and Chrome-trace
+#      export must both render; the JSONL is then schema-validated for
+#      serve_health + slo,
 #   7d. the chaos leg: a fresh process under REPRO_OBS=trace runs the whole
 #      fault-injection suite in one go — a NaN-poisoned fused stream replay
 #      (held-posterior bit-identity asserted inline), a mid-stream
@@ -99,8 +114,9 @@ RESIL_OUT="$(mktemp -t bench_resilience_smoke.XXXXXX.json)"
 OBS_OUT="$(mktemp -t obs_events_smoke.XXXXXX.jsonl)"
 OBS_TEMPORAL_OUT="$(mktemp -t obs_temporal_smoke.XXXXXX.jsonl)"
 OBS_SERVE_OUT="$(mktemp -t obs_serve_smoke.XXXXXX.jsonl)"
+OBS_HEALTH_OUT="$(mktemp -t obs_health_smoke.XXXXXX.jsonl)"
 OBS_CHAOS_OUT="$(mktemp -t obs_chaos_smoke.XXXXXX.jsonl)"
-trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT" "$TEMPORAL_OUT" "$SERVE_OUT" "$RESIL_OUT" "$OBS_OUT" "$OBS_TEMPORAL_OUT" "$OBS_SERVE_OUT" "$OBS_CHAOS_OUT"' EXIT
+trap 'rm -f "$BENCH_OUT" "$DVMP_OUT" "$LATENT_OUT" "$STRUCT_OUT" "$TEMPORAL_OUT" "$SERVE_OUT" "$RESIL_OUT" "$OBS_OUT" "$OBS_TEMPORAL_OUT" "$OBS_SERVE_OUT" "$OBS_HEALTH_OUT" "$OBS_HEALTH_OUT.trace.json" "$OBS_CHAOS_OUT"' EXIT
 python benchmarks/run.py --json --n 1000 --batch 250 --sweeps 2 \
     --window 2 --out "$BENCH_OUT"
 python - "$BENCH_OUT" <<'EOF'
@@ -114,6 +130,8 @@ validate_bench_streaming(payload)
 print("ci smoke: BENCH_streaming schema OK "
       f"(speedup {payload['speedup_inst_per_s']:.2f}x)")
 EOF
+python scripts/bench_compare.py --bench streaming \
+    --fresh "$BENCH_OUT" --baseline BENCH_streaming.json
 
 XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
 python benchmarks/run.py --json --dvmp --n 2000 --sweeps 3 --out "$DVMP_OUT"
@@ -195,6 +213,8 @@ print("ci smoke: BENCH_serve schema OK "
       f"hit rate {payload['plan_cache_hit_rate']:.2f}, "
       f"zero_drop={payload['hot_swap_zero_drop']})")
 EOF
+python scripts/bench_compare.py --bench serve \
+    --fresh "$SERVE_OUT" --baseline BENCH_serve.json
 
 python benchmarks/run.py --json --resilience --n 4000 --batch 500 \
     --sweeps 2 --serve-duration 1.0 --out "$RESIL_OUT"
@@ -213,6 +233,8 @@ print("ci smoke: BENCH_resilience schema OK "
       f"restart(s), zero_loss={payload['serve_zero_loss']}, "
       f"resume_bit_identical={payload['resume_bit_identical']})")
 EOF
+python scripts/bench_compare.py --bench resilience \
+    --fresh "$RESIL_OUT" --baseline BENCH_resilience.json
 
 python - <<'EOF'
 import jax.numpy as jnp
@@ -410,10 +432,86 @@ import sys
 from repro.obs import validate_obs_events
 
 counts = validate_obs_events(sys.argv[1])
-need = ("serve_deadline", "serve_swap", "serve_bucket", "serve_flush")
+need = ("serve_deadline", "serve_swap", "serve_bucket", "serve_flush",
+        "slo", "serve_health")
 missing = [ev for ev in need if not counts.get(ev)]
 assert not missing, f"serve obs leg missing: {missing} (got {counts})"
 print(f"ci smoke: serve obs JSONL schema OK ("
+      + ", ".join(f"{k}={counts[k]}" for k in sorted(counts)) + ")")
+EOF
+
+# replica-health demo leg: one replica of a 2-replica server gets an
+# injected slow_flush; the health score must diverge, dispatch must shift
+# to the healthy replica, no ticket may be lost, and the run's Prometheus
+# snapshot + Chrome-trace export must both render.
+REPRO_OBS=trace REPRO_OBS_PATH="$OBS_HEALTH_OUT" python - <<'EOF'
+import json
+import os
+import time
+
+from repro.data import synthetic as syn
+from repro.obs import default_prometheus_text, write_chrome_trace
+from repro.resilience import FaultInjector
+from repro.serve.queue import AsyncPGMServer
+
+bn = syn.random_discrete_bn(5, card=2, max_parents=2, seed=0)
+names = [v.name for v in bn.order]
+
+
+def q(i=0):
+    return names[-1], {names[0]: float(i % 2)}
+
+
+srv = AsyncPGMServer(bn, mode="exact", max_batch=8, max_delay_ms=5,
+                     default_deadline_ms=60_000, replicas=2,
+                     supervise_interval_ms=5)
+srv.submit(*q()).result(timeout=120)                  # warm the plan
+FaultInjector(seed=0).slow_flush(srv, delay_s=0.08, n=1000, widx=0)
+tickets = []
+deadline = time.monotonic() + 30.0
+i = 0
+while time.monotonic() < deadline:                    # degrade replica 0
+    tickets.append(srv.submit(*q(i)))
+    i += 1
+    time.sleep(0.006)
+    if srv.health.snapshots()[0]["degraded"]:
+        break
+assert srv.health.snapshots()[0]["degraded"], \
+    "slow replica never marked degraded"
+for j in range(30):                                   # biased dispatch phase
+    tickets.append(srv.submit(*q(j)))
+    time.sleep(0.006)
+h = srv.health.snapshots()   # before stop(): the drain disables deferral
+srv.stop()
+st = srv.stats()
+assert st["pending"] == 0, st                         # zero lost tickets
+assert all(t.done() and t.error is None for t in tickets)
+assert h[0]["degraded"] and not h[1]["degraded"], h
+assert h[0]["score"] < 0.5 * h[1]["score"], h
+assert h[0]["flushes"] < h[1]["flushes"], h           # dispatch shifted away
+
+prom = default_prometheus_text()
+assert "serve_request_ms_bucket" in prom and "replica_score" in prom
+jsonl = os.environ["REPRO_OBS_PATH"]
+write_chrome_trace(jsonl, jsonl + ".trace.json")
+with open(jsonl + ".trace.json") as fh:
+    events = json.load(fh)["traceEvents"]
+assert any(e["ph"] == "X" for e in events), "trace has no complete spans"
+print(f"ci health demo: replica 0 score {h[0]['score']:.3f} "
+      f"({h[0]['flushes']} flushes) vs replica 1 score {h[1]['score']:.3f} "
+      f"({h[1]['flushes']} flushes), {len(tickets)} tickets all served, "
+      f"prometheus {len(prom.splitlines())} lines, "
+      f"chrome trace {len(events)} events")
+EOF
+python - "$OBS_HEALTH_OUT" <<'EOF'
+import sys
+from repro.obs import validate_obs_events
+
+counts = validate_obs_events(sys.argv[1])
+need = ("serve_health", "slo", "span")
+missing = [ev for ev in need if not counts.get(ev)]
+assert not missing, f"health demo leg missing: {missing} (got {counts})"
+print(f"ci smoke: health obs JSONL schema OK ("
       + ", ".join(f"{k}={counts[k]}" for k in sorted(counts)) + ")")
 EOF
 

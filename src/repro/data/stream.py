@@ -139,6 +139,9 @@ class DataStream:
             self.chunk_quarantine.append(dropped)
             if dropped and obs.enabled():
                 obs.emit("quarantine", t=ci, site="data", dropped=dropped)
+                from repro.obs import agg
+                agg.REGISTRY.counter("quarantine_total", site="data"
+                                     ).inc(dropped)
             yield xc, xd
 
     def chunks(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:

@@ -21,12 +21,17 @@ Quick start::
 See ``obs/sink.py`` for the event schema and README "Observability".
 """
 
+from repro.obs.agg import (REGISTRY, MetricsRegistry, merge_snapshots,
+                           quantile_from_snapshot)
 from repro.obs.sink import (BASIC, EVENT_SCHEMA, OFF, TRACE, configure,
                             count_kernel, emit, emit_kernel_counts,
                             emit_stream_events, enabled, estimate,
                             kernel_counts, level, log, register, registered,
                             validate_obs_events)
 from repro.obs.trace import current_span, span
+from repro.obs.export import (chrome_trace, default_prometheus_text,
+                              prometheus_text, write_chrome_trace)
+from repro.obs.health import HealthTracker
 from repro.obs.metrics import (DvmpMetrics, LocalStepMetrics,
                                StreamBatchMetrics, TemporalFitMetrics)
 
@@ -38,6 +43,11 @@ __all__ = [
     "emit_stream_events",
     "register", "registered", "estimate",
     "validate_obs_events",
+    "REGISTRY", "MetricsRegistry", "merge_snapshots",
+    "quantile_from_snapshot",
+    "prometheus_text", "default_prometheus_text",
+    "chrome_trace", "write_chrome_trace",
+    "HealthTracker",
     "StreamBatchMetrics", "TemporalFitMetrics", "LocalStepMetrics",
     "DvmpMetrics",
 ]

@@ -44,6 +44,8 @@ import time
 import uuid
 from typing import Any, Dict, Iterable, List, Optional, Tuple, Union
 
+from repro.obs import agg as _agg
+
 OFF, BASIC, TRACE = 0, 1, 2
 _LEVEL_NAMES = {"off": OFF, "basic": BASIC, "trace": TRACE}
 
@@ -95,6 +97,12 @@ EVENT_SCHEMA: Dict[str, Tuple[str, ...]] = {
     "kernel_dispatch": ("counts",),
     # registry estimator output (e.g. analytical HLO FLOP/byte model)
     "bench_estimate": ("name", "estimate"),
+    # per-replica health score snapshot (serve/queue.py supervisor)
+    "serve_health": ("worker", "score", "ewma_ms", "flushes", "errors"),
+    # rolling SLO snapshot per (mode, schema) — exact-rank quantiles from
+    # the obs/agg.py serve_request_ms histogram, emitted once per flush
+    "slo": ("mode", "schema", "count", "p50_ms", "p95_ms", "p99_ms",
+            "miss_rate"),
 }
 
 _BASE_FIELDS = ("ts", "seq", "run", "event")
@@ -146,6 +154,8 @@ def configure(level: Optional[str] = None, path: Optional[str] = None,
             _STATE.path = path
         if reset_counters:
             _STATE.kernel_counts.clear()
+    if reset_counters:
+        _agg.REGISTRY.reset()
     return prev
 
 
@@ -204,6 +214,7 @@ def count_kernel(name: str) -> None:
         return
     with _STATE.lock:
         _STATE.kernel_counts[name] = _STATE.kernel_counts.get(name, 0) + 1
+    _agg.REGISTRY.counter("kernel_dispatch_total", kernel=name).inc()
 
 
 def kernel_counts() -> Dict[str, int]:
@@ -235,14 +246,23 @@ def emit_stream_events(info: Dict[str, Any]) -> None:
             for k in ("elbo", "score", "ph", "drifted", "n_eff", "rho",
                       "sweeps", "quarantined") if k in info}
     T = max((v.shape[0] for v in cols.values()), default=0)
+    n_drift = n_quar = 0
     for t in range(T):
         row = {k: v[t].item() for k, v in cols.items()}
         emit("stream_batch", t=t, **row)
         if row.get("drifted"):
+            n_drift += 1
             emit("drift", t=t, ph=row.get("ph"), score=row.get("score"))
         if row.get("quarantined"):
+            n_quar += 1
             emit("quarantine", t=t, site="stream", score=row.get("score"),
                  elbo=row.get("elbo"))
+    if T:
+        _agg.REGISTRY.counter("stream_batches_total").inc(T)
+    if n_drift:
+        _agg.REGISTRY.counter("drift_total", site="stream").inc(n_drift)
+    if n_quar:
+        _agg.REGISTRY.counter("quarantine_total", site="stream").inc(n_quar)
 
 
 # ---------------------------------------------------------------------------

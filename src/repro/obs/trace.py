@@ -59,11 +59,17 @@ def _timed(name: str, attrs: Dict[str, Any]) -> Iterator[Span]:
     sp._t0 = time.perf_counter_ns()
     try:
         yield sp
+    except BaseException as e:
+        # A raising body must not look like a clean span: stamp the
+        # exception type on the event and let it propagate.
+        sp.attrs.setdefault("error", type(e).__name__)
+        raise
     finally:
         sp.dur_us = (time.perf_counter_ns() - sp._t0) / 1e3
         st.pop()
         sink.emit("span", name=sp.name, dur_us=sp.dur_us,
-                  span_id=sp.span_id, parent_id=sp.parent_id, **sp.attrs)
+                  span_id=sp.span_id, parent_id=sp.parent_id,
+                  tid=threading.get_ident(), **sp.attrs)
 
 
 class _NullSpan:

@@ -109,6 +109,8 @@ class CheckpointManager:
         self._prune()
         if obs.enabled():
             obs.emit("checkpoint", t=int(t), path=path, reason=reason)
+            from repro.obs import agg
+            agg.REGISTRY.counter("checkpoint_total", reason=reason).inc()
         return path
 
     def maybe_save(self, t: int, state: PyTree, *,

@@ -89,20 +89,24 @@ class FaultInjector:
         self.log.append(("worker_crash", widx))
         return box
 
-    def slow_flush(self, server, delay_s: float, n: int = 1
-                   ) -> Dict[str, Any]:
+    def slow_flush(self, server, delay_s: float, n: int = 1,
+                   widx: Optional[int] = None) -> Dict[str, Any]:
         """Arm ``n`` stalled flushes of ``delay_s`` each (the stuck-flush
         scenario the request-timeout watchdog converts into a
-        :class:`~repro.resilience.errors.DeadlineError`)."""
-        box = {"left": n}
+        :class:`~repro.resilience.errors.DeadlineError`).  ``widx`` pins
+        the stalls to one replica — the degraded-replica scenario the
+        health scorer must detect and route around; None (default) stalls
+        whichever worker pops next."""
+        box = {"left": n, "fired": 0}
 
-        def fn(widx: int, bucket) -> None:
-            if box["left"] > 0:
+        def fn(w: int, bucket) -> None:
+            if box["left"] > 0 and (widx is None or w == widx):
                 box["left"] -= 1
+                box["fired"] += 1
                 time.sleep(delay_s)
 
         self._chain_flush_hook(server, fn)
-        self.log.append(("slow_flush", (delay_s, n)))
+        self.log.append(("slow_flush", (delay_s, n, widx)))
         return box
 
     def fail_compiles(self, cache, n: int = 1) -> Dict[str, Any]:

@@ -32,11 +32,25 @@ batch engine (ROADMAP "production serving tier"):
   caller, and a supervisor thread detects dead worker replicas, requeues
   their in-flight bucket and respawns them — zero lost accepted tickets.
 
+* **Replica health scoring** (``repro.obs.health``) — every flush feeds a
+  per-worker :class:`~repro.obs.health.HealthTracker` (latency EWMA +
+  error/timeout/crash demerits).  A worker whose score drops below
+  ``health_threshold`` × the best replica's score defers claiming due
+  buckets for ``health_penalty_ms``, so traffic drains toward healthy
+  replicas *before* the sick one dies — without ever stranding a ticket
+  (the grace expires, and deferral is off during drain/stop).  Scoring
+  reads host wall-clocks only; it never changes device programs, so
+  results stay bit-identical at every obs level.
+
 Flush decisions emit ``serve_deadline`` events and swaps emit
 ``serve_swap`` (schema-validated, ``repro.obs``); sheds, respawns and
 retries emit ``serve_shed``/``serve_worker``/``serve_retry``; the
 per-bucket ``serve_bucket`` telemetry comes from the underlying engine
-unchanged.
+unchanged.  When obs is enabled, each flush additionally records
+per-request end-to-end latency into the ``serve_request_ms{mode,schema}``
+histogram of the default metrics registry (``repro.obs.agg``) and emits a
+rolling ``slo`` event (exact-rank p50/p95/p99 + deadline-miss rate); the
+supervisor periodically emits ``serve_health`` score snapshots.
 """
 
 from __future__ import annotations
@@ -48,6 +62,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro import obs
+from repro.obs import agg as _agg
+from repro.obs.health import HealthTracker
 from repro.resilience.errors import DeadlineError, ShedError
 from repro.serve.engine import PGMQueryEngine, PGMQuery
 from repro.serve.plan import PlanCache
@@ -171,6 +187,16 @@ class AsyncPGMServer:
                      caller behind a stuck flush (None = no watchdog)
     supervise        run the supervisor thread (worker liveness + request
                      timeouts); on by default
+    health           track per-replica health scores and bias dispatch
+                     away from degraded workers (on by default; a lone
+                     replica never defers)
+    health_alpha, health_threshold
+                     EWMA smoothing / degraded cut-off for the
+                     :class:`~repro.obs.health.HealthTracker`
+    health_penalty_ms
+                     how long a degraded worker holds back from claiming
+                     a due bucket before serving it anyway (default:
+                     2 x ``max_delay_ms``) — the bias window, not a drop
     """
 
     def __init__(self, bn, *, mode: str = "exact", max_batch: int = 32,
@@ -183,7 +209,10 @@ class AsyncPGMServer:
                  max_queue: Optional[int] = None,
                  request_timeout_ms: Optional[float] = None,
                  supervise: bool = True,
-                 supervise_interval_ms: float = 10.0) -> None:
+                 supervise_interval_ms: float = 10.0,
+                 health: bool = True, health_alpha: float = 0.3,
+                 health_threshold: float = 0.5,
+                 health_penalty_ms: Optional[float] = None) -> None:
         if replicas < 1:
             raise ValueError("replicas must be >= 1")
         if max_queue is not None and max_queue < 1:
@@ -214,6 +243,13 @@ class AsyncPGMServer:
         self.shed = 0
         self.worker_restarts = 0
         self.flushes: Dict[str, int] = {}
+        self.health = (HealthTracker(replicas, alpha=health_alpha,
+                                     threshold=health_threshold)
+                       if health else None)
+        self._penalty_s = ((2.0 * max_delay_ms if health_penalty_ms is None
+                            else health_penalty_ms) / 1e3)
+        self._health_emit_s = 0.25
+        self._health_last_emit = 0.0
         # fault-injection seam: called (widx, bucket) after a worker pops a
         # bucket and before it flushes; raising kills the worker mid-flight
         self._flush_hook = None
@@ -280,6 +316,7 @@ class AsyncPGMServer:
         if depth is not None and obs.enabled():
             obs.emit("serve_shed", mode=self.mode, queue_depth=depth,
                      max_queue=self.max_queue)
+            _agg.REGISTRY.counter("serve_shed_total", mode=self.mode).inc()
         return t
 
     def _enqueue_locked(self, t: ServeTicket, key: tuple, target: str,
@@ -304,11 +341,19 @@ class AsyncPGMServer:
         return min(b.first_s + self.max_delay_s,
                    b.min_deadline_s - self.margin_s)
 
-    def _pop_due_locked(self, now: float) -> Optional[Tuple[_Bucket, str]]:
-        """Earliest-deadline due bucket (or None).  Caller holds _cv."""
+    def _pop_due_locked(self, now: float, defer: bool = False
+                        ) -> Optional[Tuple[_Bucket, str]]:
+        """Earliest-deadline due bucket (or None).  Caller holds _cv.
+
+        ``defer=True`` (a degraded worker asking) only yields buckets that
+        have been due for longer than the health penalty window — healthy
+        workers get first claim, but nothing is ever stranded: past the
+        grace the degraded worker serves the bucket itself."""
+        grace = self._penalty_s if defer else 0.0
         due = [b for b in self._buckets.values()
-               if self._stop or len(b.items) >= self.max_batch
-               or now >= self._due_time(b)]
+               if self._stop
+               or (not defer and len(b.items) >= self.max_batch)
+               or now >= self._due_time(b) + grace]
         if not due:
             return None
         b = min(due, key=lambda b: b.min_deadline_s)
@@ -330,30 +375,42 @@ class AsyncPGMServer:
                     if self._stop and not self._buckets:
                         return
                     now = time.monotonic()
-                    item = self._pop_due_locked(now)
+                    defer = (self.health is not None and not self._stop
+                             and self.health.should_defer(widx))
+                    item = self._pop_due_locked(now, defer=defer)
                     if item is not None:
                         engines = self._engines
                         # registered BEFORE flush: if this thread dies the
                         # supervisor requeues the bucket from here
                         self._inflight[widx] = item[0]
                         break
+                    grace = self._penalty_s if defer else 0.0
                     nxt = min((self._due_time(b)
                                for b in self._buckets.values()),
                               default=None)
                     self._cv.wait(None if nxt is None
-                                  else max(1e-4, nxt - now))
+                                  else max(1e-4, nxt + grace - now))
             bucket, trigger = item
+            t0 = time.monotonic()
             hook = self._flush_hook
             if hook is not None:
                 # fault injection: a raise here kills the worker with the
                 # bucket still registered in-flight (supervised recovery)
                 hook(widx, bucket)
-            self._flush_bucket(engines[widx % len(engines)], bucket, trigger)
+            failed = self._flush_bucket(engines[widx % len(engines)], bucket,
+                                        trigger)
+            if self.health is not None:
+                # t0 predates the flush hook, so an injected stall shows up
+                # in this worker's latency EWMA exactly like a real one
+                self.health.record_flush(
+                    widx, (time.monotonic() - t0) * 1e3, error=failed)
             with self._cv:
                 self._inflight[widx] = None
 
     def _flush_bucket(self, eng: PGMQueryEngine, bucket: _Bucket,
-                      trigger: str) -> None:
+                      trigger: str) -> bool:
+        """Flush one bucket; returns True when the engine flush failed
+        (the tickets were failed, never hung — the flag feeds health)."""
         now = time.monotonic()
         wait_us = (now - bucket.first_s) * 1e6
         pairs: List[Tuple[ServeTicket, PGMQuery]] = []
@@ -368,12 +425,14 @@ class AsyncPGMServer:
         done_s = time.monotonic()
         miss = 0
         finished = 0
+        lats_ms: List[float] = []
         for t, q in pairs:
             late = done_s > t.deadline_s
             if t._finish(query=q, error=err, trigger=trigger, done_s=done_s,
                          deadline_miss=late):
                 finished += 1
                 miss += late
+                lats_ms.append((done_s - t.submitted_s) * 1e3)
             # else: the timeout watchdog already failed this ticket
         if err is not None:                 # tickets created before the error
             for t, *_rest in bucket.items[len(pairs):]:
@@ -385,9 +444,32 @@ class AsyncPGMServer:
             self.deadline_misses += miss
             self.flushes[trigger] = self.flushes.get(trigger, 0) + 1
         if obs.enabled():
-            obs.emit("serve_deadline", mode=self.mode,
-                     schema=",".join(bucket.key), batch=len(bucket.items),
-                     trigger=trigger, wait_us=wait_us, deadline_miss=miss)
+            schema = ",".join(bucket.key)
+            obs.emit("serve_deadline", mode=self.mode, schema=schema,
+                     batch=len(bucket.items), trigger=trigger,
+                     wait_us=wait_us, deadline_miss=miss)
+            if lats_ms:
+                self._record_slo(schema, lats_ms, miss)
+        return err is not None
+
+    def _record_slo(self, schema: str, lats_ms: List[float],
+                    miss: int) -> None:
+        """Fold one flush's end-to-end request latencies into the
+        ``serve_request_ms{mode,schema}`` histogram and emit a rolling
+        ``slo`` snapshot (exact-rank quantiles over everything recorded
+        so far for this mode/schema).  Only called when obs is enabled."""
+        hist = _agg.REGISTRY.histogram("serve_request_ms", mode=self.mode,
+                                       schema=schema)
+        for ms in lats_ms:
+            hist.record(ms)
+        misses = _agg.REGISTRY.counter("serve_deadline_miss_total",
+                                       mode=self.mode, schema=schema)
+        if miss:
+            misses.inc(miss)
+        p50, p95, p99 = hist.quantiles((0.5, 0.95, 0.99))
+        obs.emit("slo", mode=self.mode, schema=schema, count=hist.count,
+                 p50_ms=p50, p95_ms=p95, p99_ms=p99,
+                 miss_rate=misses.value / max(hist.count, 1))
 
     # -- supervision ----------------------------------------------------------
 
@@ -424,14 +506,23 @@ class AsyncPGMServer:
             self._cv.notify_all()
         return staged
 
-    def _expired_tickets_locked(self, now: float) -> List[ServeTicket]:
-        """Tickets past deadline + request timeout, queued or in-flight."""
+    def _expired_tickets_locked(self, now: float
+                                ) -> List[Tuple[ServeTicket, Optional[int]]]:
+        """Tickets past deadline + request timeout, queued or in-flight.
+        In-flight tickets carry the index of the worker holding them (the
+        timeout is that replica's demerit); queued ones carry None."""
         if self.request_timeout_s is None:
             return []
-        buckets = list(self._buckets.values())
-        buckets += [b for b in self._inflight.values() if b is not None]
-        return [t for b in buckets for t, *_ in b.items
-                if not t.done() and now > t.deadline_s + self.request_timeout_s]
+        cut = self.request_timeout_s
+        out: List[Tuple[ServeTicket, Optional[int]]] = []
+        for b in self._buckets.values():
+            out += [(t, None) for t, *_ in b.items
+                    if not t.done() and now > t.deadline_s + cut]
+        for widx, b in self._inflight.items():
+            if b is not None:
+                out += [(t, widx) for t, *_ in b.items
+                        if not t.done() and now > t.deadline_s + cut]
+        return out
 
     def _supervise_once(self) -> None:
         now = time.monotonic()
@@ -440,20 +531,39 @@ class AsyncPGMServer:
             expired = self._expired_tickets_locked(now)
         for widx, requeued, nw in staged:
             nw.start()
+            if self.health is not None:
+                self.health.record_penalty(widx, "crash")
             if obs.enabled():
                 obs.emit("serve_worker", worker=widx, action="respawn",
                          requeued=requeued)
         timed_out = 0
-        for t in expired:
+        for t, widx in expired:
             if t._finish(error=DeadlineError(
                     f"request {t.rid} timed out "
                     f"({self.request_timeout_s * 1e3:.0f}ms past deadline)"),
                     trigger="watchdog", done_s=now, deadline_miss=True):
                 timed_out += 1
+                if widx is not None and self.health is not None:
+                    self.health.record_timeout(widx)
         if timed_out:
             with self._cv:
                 self.completed += timed_out
                 self.deadline_misses += timed_out
+        self._emit_health()
+
+    def _emit_health(self, force: bool = False) -> None:
+        """Emit one ``serve_health`` event per replica (rate-limited to
+        one snapshot per ``_health_emit_s`` unless forced) and mirror the
+        scores into the registry's ``replica_score`` gauges."""
+        if self.health is None or not obs.enabled():
+            return
+        now = time.monotonic()
+        if not force and now - self._health_last_emit < self._health_emit_s:
+            return
+        self._health_last_emit = now
+        for w, snap in enumerate(self.health.snapshots()):
+            obs.emit("serve_health", worker=w, **snap)
+            _agg.REGISTRY.gauge("replica_score", worker=w).set(snap["score"])
 
     def _supervisor_loop(self) -> None:
         while not self._sup_stop.wait(self._sup_interval_s):
@@ -572,8 +682,12 @@ class AsyncPGMServer:
             self._supervisor.join()
         for w in list(self._workers):
             w.join()
+        # final score snapshot so short runs always see serve_health events
+        self._emit_health(force=True)
 
     def stats(self) -> Dict[str, Any]:
+        health = (self.health.snapshots()
+                  if self.health is not None else None)
         with self._cv:
             return {"submitted": self.submitted, "completed": self.completed,
                     "pending": self.submitted - self.completed,
@@ -583,6 +697,7 @@ class AsyncPGMServer:
                     "flushes": dict(self.flushes),
                     "network_version": self.network_version,
                     "replicas": len(self._engines),
+                    "health": health,
                     "plans": self.plans.stats()}
 
     def __enter__(self) -> "AsyncPGMServer":
